@@ -1,0 +1,84 @@
+"""Inject the generated roofline table + perf-variant table into
+EXPERIMENTS.md (replaces the <!-- ROOFLINE_TABLE --> / <!-- PERF_LOG -->
+markers' following content is hand-written; this only fills the table)."""
+from __future__ import annotations
+
+import json
+import re
+
+from benchmarks.roofline_report import load, markdown_table
+
+
+def perf_variant_table(rows) -> str:
+    """Baseline-vs-variant comparison for every non-baseline record."""
+    base = {(r["arch"], r["shape"], r["mesh"]): r for r in rows
+            if r.get("variant") == "baseline" and "roofline" in r}
+    out = [
+        "| cell | variant | T_comp | T_mem^an | T_coll | frac_an (base -> var) | useful |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        v = r.get("variant", "baseline")
+        if v == "baseline" or "roofline" not in r:
+            continue
+        b = base.get((r["arch"], r["shape"], r["mesh"]))
+        ro = r["roofline"]
+        fb = b["roofline"]["fraction_of_roofline_analytic"] if b else float("nan")
+        out.append(
+            "| {a}/{s}/{m} | {v} | {c:.3f}s | {ma:.4f}s | {co:.3f}s | {fb:.3f} -> {fa:.3f} | {u:.2f} |".format(
+                a=r["arch"], s=r["shape"], m=r["mesh"], v=v,
+                c=ro["t_comp_s"], ma=ro["t_mem_analytic_s"], co=ro["t_coll_s"],
+                fb=fb, fa=ro["fraction_of_roofline_analytic"],
+                u=ro["useful_flops_ratio"],
+            )
+        )
+    return "\n".join(out)
+
+
+def ising_table() -> str:
+    out = [
+        "| mesh | swap mode | coll payload/dev | coll wire/dev | by-op |",
+        "|---|---|---|---|---|",
+    ]
+    import glob
+
+    for path in sorted(glob.glob("results/dryrun/ising_paper--*.json")):
+        r = json.load(open(path))
+        out.append(
+            "| {m} | {v} | {p:.0f} B | {w:.0f} B | {b} |".format(
+                m=r["mesh"], v=r["variant"], p=r["coll_payload_bytes"],
+                w=r["coll_wire_bytes"],
+                b="; ".join(f"{k}={vv:.0f}B" for k, vv in r["coll_by_op"].items()),
+            )
+        )
+    return "\n".join(out)
+
+
+def main():
+    rows = load()
+    table = markdown_table([r for r in rows if r.get("variant") == "baseline"], "single")
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    text = re.sub(
+        r"<!-- ROOFLINE_TABLE -->.*?(?=\n\nReading of the baseline table)",
+        "<!-- ROOFLINE_TABLE -->\n" + table,
+        text,
+        flags=re.S,
+    )
+    text = re.sub(
+        r"<!-- PERF_TABLES -->.*?<!-- /PERF_TABLES -->",
+        "<!-- PERF_TABLES -->\n### Variant measurements (all cells)\n\n"
+        + perf_variant_table(rows)
+        + "\n\n### Ising PT swap traffic (per interval, 1536 replicas × 300²)\n\n"
+        + ising_table()
+        + "\n<!-- /PERF_TABLES -->",
+        text,
+        flags=re.S,
+    )
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Render the §Roofline table from results/dryrun/*.json (and emit summary
+CSV rows for benchmarks.run)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+COLS = (
+    "t_comp_s", "t_mem_s", "t_mem_analytic_s", "t_coll_s",
+    "dominant", "dominant_analytic", "fraction_of_roofline",
+    "fraction_of_roofline_analytic", "useful_flops_ratio", "mfu_bound",
+)
+
+
+def load(res_dir: str = "results/dryrun", variant: str | None = None):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(res_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if variant is not None and r.get("variant") != variant:
+            continue
+        rows.append(r)
+    return rows
+
+
+def markdown_table(rows, mesh="single") -> str:
+    out = [
+        "| arch | shape | variant | T_comp | T_mem^hlo | T_mem^an | T_coll | dom(hlo/an) | frac | frac_an | useful | MFU_bound |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if "skipped" in r:
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r.get('variant','')} | — | — | — | — | skipped: {r['skipped']} | | | |"
+            )
+            continue
+        if "roofline" not in r:  # other schemas (e.g. ising PT records)
+            continue
+        ro = r["roofline"]
+        out.append(
+            "| {arch} | {shape} | {var} | {c:.3f}s | {m:.3f}s | {ma:.3f}s | {co:.3f}s | {d}/{da} | {f:.3f} | {fa:.3f} | {u:.2f} | {mfu:.3f} |".format(
+                arch=r["arch"], shape=r["shape"], var=r.get("variant", ""),
+                c=ro["t_comp_s"], m=ro["t_mem_s"], ma=ro["t_mem_analytic_s"],
+                co=ro["t_coll_s"], d=ro["dominant"][:4], da=ro["dominant_analytic"][:4],
+                f=ro["fraction_of_roofline"], fa=ro["fraction_of_roofline_analytic"],
+                u=ro["useful_flops_ratio"], mfu=ro["mfu_bound"],
+            )
+        )
+    return "\n".join(out)
+
+
+def run(res_dir: str = "results/dryrun"):
+    rows = load(res_dir)
+    if not rows:
+        emit("roofline_report", 0.0, "no dryrun results found")
+        return
+    for mesh in ("single", "multi"):
+        md = markdown_table(rows, mesh)
+        path = os.path.join("results", f"roofline_{mesh}.md")
+        os.makedirs("results", exist_ok=True)
+        with open(path, "w") as f:
+            f.write(md + "\n")
+    done = [r for r in rows if "roofline" in r and r["mesh"] == "single"]
+    skipped = [r for r in rows if "skipped" in r and r["mesh"] == "single"]
+    if done:
+        worst = min(done, key=lambda r: r["roofline"]["fraction_of_roofline_analytic"])
+        emit(
+            "roofline_summary", 0.0,
+            f"cells={len(done)};skipped={len(skipped)};"
+            f"worst={worst['arch']}/{worst['shape']}"
+            f"@{worst['roofline']['fraction_of_roofline_analytic']:.3f}",
+        )
+        for r in done:
+            ro = r["roofline"]
+            emit(
+                f"roofline_{r['arch']}_{r['shape']}_{r.get('variant','baseline')}",
+                ro["bound_time_s"],
+                f"dom={ro['dominant_analytic']};frac={ro['fraction_of_roofline_analytic']:.3f};useful={ro['useful_flops_ratio']:.2f}",
+            )

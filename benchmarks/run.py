@@ -1,0 +1,54 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §8):
+
+  fig3a/fig3b   convergence.py      magnetization & iterations-vs-size
+  fig4/fig5     speedup.py          replica-parallel speed-up
+  fig6          tile_sweep.py       block-size -> Pallas tile sweep
+  fig7          swap_overhead.py    swap-interval cost + acceptance
+  ptlm          ptlm_bench.py       paper technique on the LM pool
+  roofline      roofline_report.py  §Roofline tables from the dry-run JSONs
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only fig7,...]
+"""
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma-separated subset")
+    args = ap.parse_args()
+
+    from benchmarks import convergence, ptlm_bench, roofline_report, speedup
+    from benchmarks import swap_overhead, tile_sweep
+
+    suites = {
+        "fig3": convergence.run,
+        "fig45": speedup.run,
+        "fig6": tile_sweep.run,
+        "fig7": swap_overhead.run,
+        "ptlm": ptlm_bench.run,
+        "roofline": roofline_report.run,
+    }
+    only = [s for s in args.only.split(",") if s]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:
+            traceback.print_exc()
+            failed.append(name)
+            print(f"{name}_FAILED,0,{type(e).__name__}")
+        print(f"# suite {name} finished in {time.time()-t0:.1f}s", flush=True)
+    if failed:
+        sys.exit(f"benchmark suites failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

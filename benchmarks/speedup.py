@@ -1,0 +1,45 @@
+"""Paper Figs. 4/5 analogue: replica-level parallelization speed-up.
+
+The paper measures OpenMP/CUDA thread scaling.  On this CPU host the
+equivalent comparison is *sequential per-replica execution* (the paper's
+1-thread baseline: one replica stepped at a time) vs the framework's
+*vectorized replica batch* (all replicas advance in one fused program — the
+paper's all-threads case; on TPU this is also what shards across the mesh).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.core import ising, ladder, pt
+
+
+def run(sweeps: int = 50, length: int = 32):
+    system = ising.IsingSystem(length=length)
+
+    for r in (16, 64, 256):
+        temps = tuple(float(t) for t in ladder.paper_ladder(r))
+        cfg = pt.PTConfig(n_replicas=r, temps=temps, swap_interval=0)
+        state = pt.init(system, cfg, jax.random.key(0))
+
+        # vectorized: all replicas in one program (swaps off, as in the paper)
+        vec = jax.jit(lambda st: pt.run(system, cfg, st, sweeps)[0].energy)
+        t_vec = time_call(vec, state)
+
+        # sequential: replicas advanced one-by-one (paper's serial baseline)
+        cfg1 = pt.PTConfig(n_replicas=1, temps=(1.0,), swap_interval=0)
+        st1 = pt.init(system, cfg1, jax.random.key(0))
+        one = jax.jit(lambda st: pt.run(system, cfg1, st, sweeps)[0].energy)
+
+        def seq(st):
+            out = None
+            for _ in range(r):
+                out = one(st)
+            return out
+
+        t_seq = time_call(seq, st1)
+        emit(
+            f"fig45_speedup_R{r}", t_vec,
+            f"seq_us={t_seq*1e6:.0f};speedup={t_seq / t_vec:.1f}x;sweeps={sweeps}",
+        )

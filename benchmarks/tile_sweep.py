@@ -1,0 +1,41 @@
+"""Paper Fig. 6 analogue: CUDA block-size -> Pallas BlockSpec tile sweep.
+
+The paper tunes replicas-per-CUDA-block; the TPU analogue is replicas per
+VMEM-resident kernel tile (`r_blk`).  On this CPU container kernel wall time
+is interpreter time (not indicative), so the primary deliverable is the
+*structural* table: VMEM working set per tile vs the 16 MB budget, plus lane
+alignment of the lattice dim.  The XLA (oracle) path is also timed as the
+executable reference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.kernels import ops, ref
+from repro.kernels.ising_sweep import vmem_working_set_bytes
+
+VMEM_BYTES = 16 * 2**20
+
+
+def run(length: int = 300, r: int = 64):
+    key = jax.random.key(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    spins = jnp.where(jax.random.uniform(k1, (r, length, length)) < 0.5, 1, -1).astype(jnp.int8)
+    u = jax.random.uniform(k2, (r, 2, length, length))
+    betas = jax.random.uniform(k3, (r,), minval=0.25, maxval=1.0)
+
+    xla = jax.jit(lambda s, u, b: ref.ising_sweep(s, u, b, j=1.0, b=0.0))
+    t_ref = time_call(xla, spins, u, betas)
+    emit("fig6_xla_oracle", t_ref, f"L={length};R={r}")
+
+    for r_blk in (1, 2, 4, 8, 16, 32):
+        ws = vmem_working_set_bytes(r_blk, length)
+        fits = "fits" if ws <= VMEM_BYTES else "EXCEEDS"
+        aligned = "aligned" if length % 128 == 0 else f"pad_to_{-(-length // 128) * 128}"
+        # structural row; interpret-mode timing would not be meaningful.
+        emit(
+            f"fig6_rblk{r_blk}", ws / 819e9,  # VMEM fill time at HBM bw (s)
+            f"vmem_bytes={ws};{fits};lanes={aligned};grid={r // min(r_blk, r)}",
+        )

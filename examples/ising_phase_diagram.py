@@ -1,0 +1,37 @@
+"""Reproduce the paper's Fig. 3a: |magnetization| vs temperature across the
+2-D Ising phase transition, via PT sampling (CSV output).
+
+    PYTHONPATH=src python examples/ising_phase_diagram.py > phase.csv
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import diagnostics, ising, ladder, pt
+
+T_C = 2.0 / np.log(1.0 + np.sqrt(2.0))  # Onsager: ~2.269
+
+
+def main():
+    R, L, sweeps = 24, 24, 4000
+    system = ising.IsingSystem(length=L)
+    temps = tuple(float(t) for t in ladder.linear_ladder(R, 1.0, 4.0))
+    cfg = pt.PTConfig(n_replicas=R, temps=temps, swap_interval=10)
+    obs = {"am": lambda s: jnp.abs(ising.magnetization(s)),
+           "e": lambda s: system.energy(s) / (L * L)}
+    st = pt.init(system, cfg, jax.random.key(7))
+    _, trace = pt.run(system, cfg, st, sweeps, observables=obs)
+    m = diagnostics.grand_mean_by_rung(trace, "am")
+    e = diagnostics.grand_mean_by_rung(trace, "e")
+    print("temperature,abs_magnetization_pct,energy_per_spin")
+    for T, mm, ee in zip(temps, m, e):
+        print(f"{T:.3f},{100*mm:.1f},{ee:.4f}")
+    print(f"# exact T_c = {T_C:.4f}; observed transition between the rungs "
+          f"where |m| crosses 50%", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Parallel Tempering over LM sequences — the paper's technique as a
+first-class feature of the LM stack (DESIGN.md §5).
+
+Replicas hold token sequences; energy = sequence NLL; hot rungs explore token
+space, cold rungs sharpen toward high-likelihood sequences, and PT swaps move
+good continuations down the ladder.
+
+    PYTHONPATH=src python examples/pt_lm_sampling.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import ladder, pt
+from repro.core.ptlm import LMSystem
+from repro.models import model as model_lib
+
+
+def main():
+    R, seq_len, steps = 8, 24, 150
+    cfg = get_config("qwen3_32b", reduced=True)
+    params = model_lib.init_params(cfg, jax.random.key(0))
+    system = LMSystem(cfg=cfg, seq_len=seq_len).bind(params)
+
+    temps = tuple(float(t) for t in ladder.geometric_ladder(R, 1.0, 10.0))
+    ptc = pt.PTConfig(n_replicas=R, temps=temps, swap_interval=5, swap_mode="temp")
+    state = pt.init(system, ptc, jax.random.key(1))
+    e_init = np.asarray(state.energy)[np.argsort(np.asarray(state.rung))]
+
+    state, trace = pt.run(system, ptc, state, steps)
+    e = np.asarray(trace["energy"])
+    acc = np.asarray(trace["swap_prob"])
+
+    print(f"PT-LM: {R} replicas x {steps} MH steps over {seq_len}-token sequences")
+    print(f"cold-rung NLL: {e_init[0]:8.2f} -> {e[-1, 0]:8.2f}")
+    print(f"hot-rung  NLL: {e_init[-1]:8.2f} -> {e[-1, -1]:8.2f}")
+    print(f"mean swap prob: {acc[acc > 0].mean():.3f}")
+    assert e[-1, 0] < e_init[0], "cold chain should find higher-likelihood sequences"
+    print("cold chain improved: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Fault-tolerant checkpointing: atomic writes, retention, async save,
+corruption fallback.
+
+Layout:  <dir>/step_<N>/arrays.npz + meta.json   (+ .tmp staging dirs)
+
+* **atomic**: written to `step_N.tmp/` then `os.replace`d — a crash mid-save
+  never corrupts the latest checkpoint;
+* **fault tolerant restore**: `restore_latest` walks checkpoints newest-first
+  and falls back past unreadable/incomplete ones;
+* **async**: `save(..., blocking=False)` hands the (host-synced) arrays to a
+  writer thread so the train loop overlaps I/O with compute — the next save
+  joins the previous writer first (bounded queue of 1);
+* **multi-host layout**: each process writes `arrays_p<proc>.npz`; restore
+  reads the local process' file (single-process here, but the layout is the
+  production one).
+
+PT states, train states and data-cursor metadata all go through the same
+pytree path-flattening, so any registered dataclass (PTState, TrainState)
+round-trips.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = jax.tree_util.keystr(path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(tree_like, arrays: dict[str, np.ndarray]):
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    out = []
+    for path, like in leaves_p:
+        key = jax.tree_util.keystr(path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(like.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != expected {like.shape}")
+        out.append(jax.numpy.asarray(arr, dtype=like.dtype))
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(tree_like), out)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, process_index: int = 0):
+        self.dir = directory
+        self.keep = keep
+        self.proc = process_index
+        os.makedirs(directory, exist_ok=True)
+        self._writer: threading.Thread | None = None
+
+    # -- paths ---------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:010d}")
+
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    # -- save ------------------------------------------------------------------
+    def save(self, step: int, tree: Any, meta: dict | None = None, blocking: bool = True):
+        """Checkpoint `tree` at `step`.  Device->host transfer happens here
+        (synchronously — the arrays are then immutable); file I/O can be
+        deferred to the writer thread."""
+        arrays = _flatten(jax.tree_util.tree_map(lambda x: x, tree))
+        meta = dict(meta or {}, step=step, time=time.time())
+        self.wait()  # bound async queue at depth 1
+
+        def write():
+            tmp = self._step_dir(step) + ".tmp"
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, f"arrays_p{self.proc}.npz"), **arrays)
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            final = self._step_dir(step)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._writer = threading.Thread(target=write, daemon=True)
+            self._writer.start()
+
+    def wait(self):
+        if self._writer is not None:
+            self._writer.join()
+            self._writer = None
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # -- restore -----------------------------------------------------------------
+    def restore(self, step: int, tree_like: Any):
+        d = self._step_dir(step)
+        with np.load(os.path.join(d, f"arrays_p{self.proc}.npz")) as z:
+            arrays = {k: z[k] for k in z.files}
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        return _unflatten(tree_like, arrays), meta
+
+    def restore_latest(self, tree_like: Any):
+        """Newest-first restore with corruption fallback (fault tolerance)."""
+        self.wait()
+        errors = []
+        for step in reversed(self.steps()):
+            try:
+                return self.restore(step, tree_like)
+            except Exception as e:  # corrupted/incomplete -> try older
+                errors.append((step, repr(e)))
+        if errors:
+            raise RuntimeError(f"no restorable checkpoint; tried {errors}")
+        return None

@@ -1,0 +1,45 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(name)`` returns the exact published configuration;
+``get_config(name, reduced=True)`` returns the same-family reduced config
+used by CPU smoke tests (the full configs are exercised only via the
+dry-run's ShapeDtypeStructs — no allocation).
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "qwen3_32b",
+    "gemma_2b",
+    "minitron_4b",
+    "stablelm_3b",
+    "qwen3_moe_235b",
+    "mixtral_8x22b",
+    "recurrentgemma_9b",
+    "rwkv6_7b",
+    "whisper_medium",
+    "llama32_vision_11b",
+]
+
+# accept dashed external ids too (CLI convenience)
+ALIASES = {
+    "qwen3-32b": "qwen3_32b",
+    "gemma-2b": "gemma_2b",
+    "minitron-4b": "minitron_4b",
+    "stablelm-3b": "stablelm_3b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "rwkv6-7b": "rwkv6_7b",
+    "whisper-medium": "whisper_medium",
+    "llama-3.2-vision-11b": "llama32_vision_11b",
+}
+
+
+def get_config(name: str, reduced: bool = False):
+    mod_name = ALIASES.get(name, name)
+    if mod_name not in ARCH_IDS:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.reduced() if reduced else mod.config()

@@ -1,0 +1,101 @@
+"""Distributed replica placement, swap communication and elastic rebalance.
+
+The paper distributes replicas over OpenMP/CUDA threads (|R|/H replicas per
+thread).  On a TPU mesh the replica axis is sharded over mesh axes; each
+device owns ``R / n_devices`` replicas and advances them between swap
+iterations with zero communication.  At a swap iteration:
+
+* ``temp`` swap mode: the decision needs only the (R,) energy/rung vectors —
+  an all-gather of a few KB — and *no state movement*.  This is the
+  O(R·L²) → O(R) swap-traffic reduction measured in EXPERIMENTS.md §Perf.
+* ``state`` swap mode (faithful): accepted pairs exchange (L,L) lattices;
+  pairs that straddle a shard boundary become GSPMD-generated
+  collective-permutes/all-to-alls.
+
+Elastic scaling: replicas are independent between swaps, so PT is
+*embarrassingly elastic* — `rebalance` reshapes the replica population onto a
+new mesh, growing by cloning (with fresh PRNG noise injected by subsequent
+sweeps) or shrinking by dropping interior rungs while preserving the ladder
+endpoints.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.pt import PTState
+
+__all__ = ["replica_sharding", "shard_state", "rebalance_ladder", "rebalance_state"]
+
+
+def replica_sharding(mesh: Mesh, axes=None) -> NamedSharding:
+    """NamedSharding placing the leading replica axis over the given mesh axes.
+
+    Replicas are embarrassingly parallel between swap iterations, so the
+    default shards them over EVERY mesh axis (pod x data x model) — the
+    paper's "one replica per thread" at mesh scale."""
+    axes = mesh.axis_names if axes is None else axes
+    use = tuple(a for a in axes if a in mesh.axis_names)
+    return NamedSharding(mesh, P(use if use else None))
+
+
+def shard_state(state: PTState, shard: NamedSharding) -> PTState:
+    """Constrain all (R, ...) leaves of the PT state to the replica sharding."""
+
+    def constrain(x):
+        if hasattr(x, "ndim") and x.ndim >= 1:
+            return jax.lax.with_sharding_constraint(x, shard)
+        return x
+
+    return PTState(
+        states=jax.tree_util.tree_map(constrain, state.states),
+        energy=constrain(state.energy),
+        rung=constrain(state.rung),
+        key=state.key,
+        phase=state.phase,
+        t=state.t,
+    )
+
+
+def rebalance_ladder(temps: np.ndarray, new_r: int) -> np.ndarray:
+    """Resample a ladder to ``new_r`` rungs, preserving endpoints (geometric
+    interpolation in log-T)."""
+    temps = np.asarray(temps, dtype=np.float64)
+    x_old = np.linspace(0.0, 1.0, len(temps))
+    x_new = np.linspace(0.0, 1.0, new_r)
+    return np.exp(np.interp(x_new, x_old, np.log(temps))).astype(np.float32)
+
+
+def rebalance_state(state: PTState, new_r: int) -> PTState:
+    """Elastically grow/shrink the replica population to ``new_r``.
+
+    Growing tiles existing replicas (their chains decorrelate after a few
+    sweeps — each slot gets an independent PRNG stream via fold_in(slot)).
+    Shrinking keeps an endpoint-preserving subsample in rung order.
+    Rungs are re-assigned to the identity; callers pair this with
+    `rebalance_ladder` for the new temperature ladder.
+    """
+    r_old = state.energy.shape[0]
+    if new_r == r_old:
+        return state
+    if new_r > r_old:
+        sel = jnp.arange(new_r, dtype=jnp.int32) % r_old
+    else:
+        # Endpoint-preserving subsample in rung order.
+        pick = np.unique(np.round(np.linspace(0, r_old - 1, new_r)).astype(np.int64))
+        while len(pick) < new_r:  # guard duplicates on tiny ladders
+            extra = np.setdiff1d(np.arange(r_old), pick)[: new_r - len(pick)]
+            pick = np.sort(np.concatenate([pick, extra]))
+        inv = jnp.argsort(state.rung)
+        sel = inv[jnp.asarray(pick, dtype=jnp.int32)]
+    states = jax.tree_util.tree_map(lambda x: jnp.take(x, sel, axis=0), state.states)
+    return dataclasses.replace(
+        state,
+        states=states,
+        energy=jnp.take(state.energy, sel),
+        rung=jnp.arange(new_r, dtype=jnp.int32),
+    )

@@ -1,0 +1,90 @@
+"""Temperature ladders for Parallel Tempering.
+
+The paper assigns replica ``i`` the temperature ``T_i = 1 + i * 3 / |R|``,
+covering ``[1.0, 4.0)`` (section 3).  We implement that ladder faithfully plus
+the standard geometric ladder and a feedback-tuned ladder (Kofke-style
+acceptance equalization) as beyond-paper options.
+
+Conventions: ``k_B = 1``; ``beta = 1 / T``.  Ladders are returned **cold to
+hot** (rung 0 = lowest temperature), matching the paper's indexing.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "paper_ladder",
+    "linear_ladder",
+    "geometric_ladder",
+    "betas_from_temps",
+    "tune_ladder",
+]
+
+
+def paper_ladder(n_replicas: int, t_min: float = 1.0, t_span: float = 3.0) -> jnp.ndarray:
+    """The paper's ladder: ``T_i = t_min + i * t_span / n_replicas``.
+
+    Note the paper divides by ``|R|`` (not ``|R| - 1``), so ``T_max`` is
+    ``t_min + t_span * (R-1)/R`` — the hot end is exclusive.
+    """
+    i = jnp.arange(n_replicas, dtype=jnp.float32)
+    return t_min + i * (t_span / n_replicas)
+
+
+def linear_ladder(n_replicas: int, t_min: float, t_max: float) -> jnp.ndarray:
+    """Inclusive linear ladder on ``[t_min, t_max]``."""
+    return jnp.linspace(t_min, t_max, n_replicas, dtype=jnp.float32)
+
+
+def geometric_ladder(n_replicas: int, t_min: float, t_max: float) -> jnp.ndarray:
+    """Geometric ladder — constant ratio ``T_{i+1}/T_i``.
+
+    The classical choice for systems whose heat capacity is roughly constant
+    over the ladder; gives approximately uniform swap acceptance.
+    """
+    return jnp.asarray(
+        np.geomspace(t_min, t_max, n_replicas), dtype=jnp.float32
+    )
+
+
+def betas_from_temps(temps: jnp.ndarray) -> jnp.ndarray:
+    return (1.0 / temps).astype(jnp.float32)
+
+
+def tune_ladder(
+    temps: np.ndarray,
+    swap_acceptance: np.ndarray,
+    target: float = 0.23,
+    rate: float = 0.5,
+    t_min: float | None = None,
+    t_max: float | None = None,
+) -> np.ndarray:
+    """One feedback step of acceptance-equalizing ladder adaptation.
+
+    Adjusts the log-spacing between adjacent rungs: spacings whose measured
+    swap acceptance exceeds ``target`` are widened, under-accepting spacings
+    are narrowed.  Endpoints are pinned (to ``t_min``/``t_max`` or the current
+    ends).  This is a practical variant of Kofke's equal-acceptance rule used
+    by adaptive PT schemes [Miasojedow et al. 2013, paper ref 12].
+
+    Args:
+      temps: current ladder, shape (R,), cold→hot.
+      swap_acceptance: measured acceptance per adjacent pair, shape (R-1,).
+      target: desired uniform acceptance.
+      rate: feedback gain in log-spacing space.
+
+    Returns the new ladder (numpy, host-side — tuning runs between intervals).
+    """
+    temps = np.asarray(temps, dtype=np.float64)
+    acc = np.clip(np.asarray(swap_acceptance, dtype=np.float64), 1e-3, 1.0)
+    log_gaps = np.diff(np.log(temps))
+    # Larger acceptance -> gap can grow; smaller -> shrink.
+    log_gaps = log_gaps * (1.0 + rate * np.tanh(np.log(acc / target)))
+    new = np.concatenate([[np.log(temps[0])], np.log(temps[0]) + np.cumsum(log_gaps)])
+    new = np.exp(new)
+    lo = temps[0] if t_min is None else t_min
+    hi = temps[-1] if t_max is None else t_max
+    # Rescale interior to pinned endpoints.
+    new = lo + (new - new[0]) * (hi - lo) / max(new[-1] - new[0], 1e-12)
+    return new.astype(np.float32)

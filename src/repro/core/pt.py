@@ -1,0 +1,232 @@
+"""Parallel-Tempering driver: replica-parallel MH with interval-scheduled swaps.
+
+Maps the paper's execution scheme (section 3, Fig. 2) onto JAX:
+
+* replicas advance **in parallel** between swap iterations — here the replica
+  axis is a leading array dimension, vectorized over VPU lanes and sharded
+  over the device mesh (`repro.core.distributed`);
+* computation is scheduled in *intervals*: an inner `lax.scan` of
+  ``swap_interval`` sweeps, then one parallel swap phase (`repro.core.swap`);
+* the whole simulation — all intervals — is a single jitted `lax.scan`:
+  state never leaves device memory (the paper's CUDA device-residency
+  insight, §2 of DESIGN.md).
+
+Swap modes:
+
+* ``state``  — faithful to the paper: temperature is bound to the replica
+  index and accepted pairs exchange their *states* (O(L²) bytes per pair).
+* ``temp``   — optimized: accepted pairs exchange *rungs* (temperature
+  indices); states stay put and the chain-per-temperature is reconstructed
+  from the tracked permutation. O(1) bytes per pair — this is what makes the
+  swap phase free on a multi-pod mesh (EXPERIMENTS.md §Perf).
+
+Both produce the same extended-ensemble Markov chain law.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import swap as swap_lib
+from repro.core.systems import System, batched_energy, batched_init
+
+__all__ = ["PTConfig", "PTState", "init", "run", "make_run"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PTState:
+    """Device-resident simulation state (a pytree; donate-able)."""
+
+    states: Any  # system states, leaves shaped (R, ...)
+    energy: jax.Array  # (R,) f32 — tracked incrementally from step deltas
+    rung: jax.Array  # (R,) i32 — rung (ladder position) held by each slot
+    key: jax.Array  # PRNG key
+    phase: jax.Array  # i32 swap-phase alternator (paper Fig. 2)
+    t: jax.Array  # i32 sweep counter
+
+
+@dataclasses.dataclass(frozen=True)
+class PTConfig:
+    """Static PT configuration.
+
+    Attributes:
+      n_replicas: |R|.
+      temps: ladder, cold->hot, tuple of float (hashable for jit static use).
+      swap_interval: sweeps between swap iterations (0 disables swaps — the
+        paper's "without swaps" baseline used for its speed-up figures).
+      criterion: "logistic" (paper) | "metropolis".
+      swap_mode: "temp" (optimized) | "state" (faithful).
+      record_interval: record diagnostics every k-th interval (1 = all).
+    """
+
+    n_replicas: int
+    temps: tuple
+    swap_interval: int = 100
+    criterion: str = "logistic"
+    swap_mode: str = "temp"
+    record_interval: int = 1
+
+    @property
+    def betas(self) -> np.ndarray:
+        return 1.0 / np.asarray(self.temps, dtype=np.float32)
+
+    def __post_init__(self):
+        if len(self.temps) != self.n_replicas:
+            raise ValueError(
+                f"ladder has {len(self.temps)} rungs != n_replicas={self.n_replicas}"
+            )
+        if self.swap_mode not in ("temp", "state"):
+            raise ValueError(f"bad swap_mode {self.swap_mode!r}")
+
+
+def _batched_step(system: System):
+    """System step batched over replicas (kernel fast-path if provided)."""
+    fn = getattr(system, "batched_mcmc_step", None)
+    if fn is not None:
+        return fn
+    return jax.vmap(system.mcmc_step)
+
+
+def init(system: System, config: PTConfig, key: jax.Array, *, shard=None) -> PTState:
+    """Build the initial PT state (paper's "initialization phase")."""
+    k_init, k_run = jax.random.split(key)
+    states = batched_init(system, k_init, config.n_replicas)
+    if shard is not None:
+        states = jax.lax.with_sharding_constraint(states, shard)
+    energy = batched_energy(system, states)
+    return PTState(
+        states=states,
+        energy=energy.astype(jnp.float32),
+        rung=jnp.arange(config.n_replicas, dtype=jnp.int32),
+        key=k_run,
+        phase=jnp.int32(0),
+        t=jnp.int32(0),
+    )
+
+
+def _sweep_once(system, config, betas, st: PTState, shard=None) -> PTState:
+    """One parallel sweep of every replica at its current temperature."""
+    r = config.n_replicas
+    # 2t/2t+1 split keeps sweep and swap key streams disjoint for any R.
+    keys = jax.vmap(jax.random.fold_in, (None, 0))(
+        jax.random.fold_in(st.key, 2 * st.t), jnp.arange(r, dtype=jnp.uint32)
+    )
+    if shard is not None:
+        # pin the per-replica key axis: the per-replica random lattices then
+        # generate shard-local (otherwise the partitioner replicates the
+        # whole PRNG stream — measured 16x redundant HBM traffic)
+        keys = jax.lax.with_sharding_constraint(keys, shard)
+    betas_slot = betas[st.rung]
+    states, de, _ = _batched_step(system)(keys, st.states, betas_slot)
+    return dataclasses.replace(
+        st,
+        states=states,
+        energy=st.energy + de.astype(jnp.float32),
+        t=st.t + 1,
+    )
+
+
+def _swap_phase(config, betas, st: PTState):
+    """One parallel swap iteration; returns (state, diagnostics)."""
+    r = config.n_replicas
+    k_swap = jax.random.fold_in(st.key, 2 * st.t + 1)
+    inv = jnp.argsort(st.rung)  # slot holding rung r
+    e_rung = st.energy[inv]
+    perm, accept, prob = swap_lib.swap_permutation(
+        k_swap, st.phase, betas, e_rung, n=r, criterion=config.criterion
+    )
+    if config.swap_mode == "temp":
+        # Slot inv[r] now holds rung perm[r]; states stay in place.
+        new_rung = jnp.zeros((r,), jnp.int32).at[inv].set(perm)
+        st = dataclasses.replace(st, rung=new_rung)
+    else:
+        # Faithful mode: rung == slot identity; move the states themselves.
+        states = jax.tree_util.tree_map(lambda x: jnp.take(x, perm, axis=0), st.states)
+        st = dataclasses.replace(st, states=states, energy=st.energy[perm])
+    st = dataclasses.replace(st, phase=st.phase + 1)
+    return st, {"swap_accept": accept, "swap_prob": prob}
+
+
+def _observe(system, config, observables, st: PTState) -> Mapping[str, jax.Array]:
+    """Per-rung diagnostics (rung order, cold->hot)."""
+    inv = jnp.argsort(st.rung)
+    out = {"energy": st.energy[inv]}
+    for name, fn in (observables or {}).items():
+        vals = jax.vmap(fn)(st.states)
+        out[name] = vals[inv]
+    return out
+
+
+@partial(
+    jax.jit,
+    static_argnames=("system", "config", "n_sweeps", "observables_tuple", "shard"),
+)
+def _run_jit(system, config, state, n_sweeps, observables_tuple, shard=None):
+    observables = dict(observables_tuple)
+    betas = jnp.asarray(config.betas)
+    interval = config.swap_interval if config.swap_interval > 0 else n_sweeps
+    n_intervals = max(n_sweeps // interval, 1)
+
+    def constrain(st):
+        # keep the replica axis sharded through the loop — without this the
+        # partitioner may replicate the whole simulation (measured: 256x
+        # redundant compute on the production mesh; EXPERIMENTS.md §Perf)
+        if shard is None:
+            return st
+        from repro.core.distributed import shard_state
+
+        return shard_state(st, shard)
+
+    def interval_body(st, _):
+        def sweep_body(s, _):
+            return constrain(_sweep_once(system, config, betas, s, shard)), None
+
+        st, _ = jax.lax.scan(sweep_body, st, None, length=interval)
+        if config.swap_interval > 0:
+            st, swap_diag = _swap_phase(config, betas, st)
+        else:
+            z = jnp.zeros((config.n_replicas,))
+            swap_diag = {"swap_accept": z.astype(bool), "swap_prob": z}
+        rec = dict(_observe(system, config, observables, st))
+        rec.update(swap_diag)
+        return constrain(st), rec
+
+    state, trace = jax.lax.scan(interval_body, state, None, length=n_intervals)
+    return state, trace
+
+
+def run(
+    system: System,
+    config: PTConfig,
+    state: PTState,
+    n_sweeps: int,
+    observables: Mapping[str, Callable] | None = None,
+    shard=None,
+):
+    """Run ``n_sweeps`` sweeps of PT; returns (final_state, trace).
+
+    ``trace`` holds per-interval, per-rung arrays: ``energy``, each observable,
+    ``swap_accept``/``swap_prob`` (at the lower rung of each attempted pair).
+    The full simulation is one XLA program — no host round-trips (paper §3:
+    "all the simulation information is located inside the device").
+    ``shard``: optional NamedSharding for the replica axis, enforced through
+    the loop (see `repro.core.distributed.replica_sharding`).
+    """
+    obs = tuple(sorted((observables or {}).items()))
+    return _run_jit(system, config, state, n_sweeps, obs, shard)
+
+
+def make_run(system: System, config: PTConfig, n_sweeps: int, observables=None,
+             shard=None):
+    """AOT-compilable closure (used by benchmarks and the dry-run)."""
+
+    def fn(state):
+        return run(system, config, state, n_sweeps, observables, shard=shard)
+
+    return fn

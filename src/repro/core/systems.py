@@ -1,0 +1,62 @@
+"""The ``System`` interface: what a model must expose to be PT-sampled.
+
+A *system* is the object being simulated (the paper's: a 2-D Ising model).
+MH/PT is generic over systems — the paper notes its implementation "allows
+inserting and running another model" as future work; here that generality is
+first-class.
+
+All methods are written for a **single replica** and are `vmap`-ed by the PT
+driver over the replica axis (the paper's replica-level parallelism).  The
+state may be any pytree.
+"""
+from __future__ import annotations
+
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+
+State = Any  # pytree
+
+
+@runtime_checkable
+class System(Protocol):
+    """Protocol for MH/PT-sampleable systems."""
+
+    def init_state(self, key: jax.Array) -> State:
+        """Random initial state for one replica."""
+        ...
+
+    def energy(self, state: State) -> jax.Array:
+        """Scalar energy E(state); the target density is exp(-beta * E)."""
+        ...
+
+    def mcmc_step(self, key: jax.Array, state: State, beta: jax.Array):
+        """One MH iteration at inverse temperature ``beta``.
+
+        Returns ``(new_state, delta_e, n_accepted)`` where ``delta_e`` is the
+        exact energy change (so the driver can track energies incrementally —
+        device-resident, no O(L^2) recomputation per iteration) and
+        ``n_accepted`` counts accepted proposals (for diagnostics).
+        """
+        ...
+
+
+def batched_init(system: System, key: jax.Array, n_replicas: int) -> State:
+    """Initialize ``n_replicas`` independent replica states.
+
+    Systems may provide a natively-batched `init_state_batched` fast path
+    (e.g. the PT-LM system, whose states are token matrices); otherwise the
+    per-replica `init_state` is vmapped.
+    """
+    fast = getattr(system, "init_state_batched", None)
+    if fast is not None:
+        return fast(key, n_replicas)
+    keys = jax.random.split(key, n_replicas)
+    return jax.vmap(system.init_state)(keys)
+
+
+def batched_energy(system: System, states: State) -> jax.Array:
+    fast = getattr(system, "batched_energy", None)
+    if fast is not None:
+        return fast(states)
+    return jax.vmap(system.energy)(states)

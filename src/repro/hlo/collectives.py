@@ -1,0 +1,138 @@
+"""HLO-text analysis: collective payload bytes per device.
+
+`compiled.cost_analysis()` has no collective accounting, so we parse the
+compiled HLO module (DESIGN.md §7):
+
+1. build a name -> (dtype, shape) table from every instruction definition;
+2. for each all-gather / all-reduce / reduce-scatter / all-to-all /
+   collective-permute instruction, sum its *operand* sizes (looked up in the
+   table — for all-gather the operand is the pre-gather shard, which is what
+   each device actually sends);
+3. attribute instructions to their enclosing computation; instructions inside
+   a `while` body are multiplied by the loop trip count (best-effort: the
+   largest integer constant in the loop-condition computation — exact for
+   `lax.scan`).  The dry-run's delta method avoids relying on this (layers
+   are unrolled), but the correction makes the parser usable on production
+   scan programs too (tested in tests/test_hlo.py).
+
+The per-op "wire factor" models a ring schedule: all-reduce moves ~2x its
+payload per device (reduce-scatter + all-gather phases), the others ~1x,
+scaled by (G-1)/G for group size G when replica_groups are parseable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    payload_bytes: float  # sum of operand bytes (per device), trip-corrected
+    wire_bytes: float  # ring-model bytes moved per device
+    by_op: dict
+    count: int
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    lines = hlo_text.splitlines()
+    # pass 1: name -> type for all defs; computation spans; while bodies
+    name_type: dict[str, str] = {}
+    comp_of_line: list[str] = []
+    current = "<module>"
+    for ln in lines:
+        m = _COMP_RE.match(ln)
+        if m:
+            current = m.group(1)
+        comp_of_line.append(current)
+        d = _DEF_RE.match(ln)
+        if d:
+            name, rhs = d.groups()
+            # the type is the prefix of rhs before the opcode
+            name_type[name] = rhs.split(" ")[0] if rhs.startswith("(") else rhs
+    # while instructions: body/condition computation names
+    body_trip: dict[str, int] = {}
+    for ln in lines:
+        if " while(" in ln:
+            mb = re.search(r"body=%?([\w.\-]+)", ln)
+            mc = re.search(r"condition=%?([\w.\-]+)", ln)
+            trip = 1
+            if mc:
+                # largest integer constant inside the condition computation
+                consts = [
+                    int(c)
+                    for i, l2 in enumerate(lines)
+                    if comp_of_line[i] == mc.group(1)
+                    for c in re.findall(r"constant\((\d+)\)", l2)
+                ]
+                if consts:
+                    trip = max(consts)
+            if mb:
+                body_trip[mb.group(1)] = trip
+
+    payload = 0.0
+    wire = 0.0
+    by_op: dict[str, float] = defaultdict(float)
+    count = 0
+    for i, ln in enumerate(lines):
+        d = _DEF_RE.match(ln)
+        if not d:
+            continue
+        rhs = d.group(2)
+        opm = re.search(r"\b(" + "|".join(COLLECTIVE_OPS) + r")(?:-start|-done)?\(", rhs)
+        if not opm:
+            continue
+        op = opm.group(1)
+        if "-done(" in rhs:
+            continue  # counted at -start
+        # operand bytes
+        args_str = rhs[opm.end() :]
+        args_str = args_str.split("),")[0]
+        operand_names = _OPERANDS_RE.findall(args_str)
+        b = sum(_shape_bytes(name_type.get(nm, "")) for nm in operand_names)
+        if b == 0:  # fallback: use the result type
+            b = _shape_bytes(rhs.split(" ")[0])
+        gm = _GROUPS_RE.search(rhs)
+        gfrac = 1.0
+        if gm:
+            g = int(gm.group(2))
+            gfrac = (g - 1) / g if g > 1 else 0.0
+        factor = 2.0 if op == "all-reduce" else 1.0
+        trip = body_trip.get(comp_of_line[i], 1)
+        payload += b * trip
+        wire += b * factor * gfrac * trip
+        by_op[op] += b * trip
+        count += 1
+    return CollectiveStats(payload, wire, dict(by_op), count)

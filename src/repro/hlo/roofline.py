@@ -1,0 +1,185 @@
+"""Three-term roofline model (TPU v5e targets; DESIGN.md §7).
+
+    T_comp = FLOPs_per_device / 197e12        (bf16 peak per chip)
+    T_mem  = HBM_bytes_per_device / 819e9
+    T_coll = collective_wire_bytes_per_device / 50e9   (per-link ICI)
+
+`cost_analysis()` on this JAX/XLA build reports *per-partition* flops/bytes
+(verified in tests/test_hlo.py), so no division by chip count is applied.
+The dominant term is the step-time lower bound; `fraction_of_roofline` =
+T_comp / max(all terms) — how close the program is to being compute-bound at
+peak (the §Perf score).  MODEL_FLOPS cross-checks HLO flops for remat /
+redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    hbm_bytes_per_device: float  # HLO-derived (brief formula; pre-fusion upper)
+    coll_wire_bytes_per_device: float
+    model_flops_global: float  # 6·N·D (train) or 2·N_active·tokens (serve)
+    n_devices: int
+    hbm_analytic_per_device: float = 0.0  # minimum-traffic model (lower bound)
+
+    @property
+    def t_comp(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_mem(self) -> float:
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def t_mem_analytic(self) -> float:
+        return self.hbm_analytic_per_device / HBM_BW
+
+    @property
+    def t_coll(self) -> float:
+        return self.coll_wire_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        """Dominant term under the HLO memory bytes (the brief's formula)."""
+        terms = {"compute": self.t_comp, "memory": self.t_mem, "collective": self.t_coll}
+        return max(terms, key=terms.get)
+
+    @property
+    def dominant_analytic(self) -> str:
+        """Dominant term with the analytic (TPU-fusion-realistic) memory
+        model — the CPU backend barely fuses, so the HLO byte count is a
+        10-20x overestimate of TPU HBM traffic (EXPERIMENTS.md §Roofline)."""
+        terms = {
+            "compute": self.t_comp,
+            "memory": self.t_mem_analytic,
+            "collective": self.t_coll,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_comp, self.t_mem, self.t_coll)
+
+    @property
+    def bound_time_analytic(self) -> float:
+        return max(self.t_comp, self.t_mem_analytic, self.t_coll)
+
+    @property
+    def fraction_of_roofline(self) -> float:
+        """T_comp / max-term: 1.0 = perfectly compute-bound at peak."""
+        return self.t_comp / self.bound_time if self.bound_time else 0.0
+
+    @property
+    def fraction_of_roofline_analytic(self) -> float:
+        return self.t_comp / self.bound_time_analytic if self.bound_time_analytic else 0.0
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO FLOPs (catches remat/redundancy waste)."""
+        hlo_global = self.flops_per_device * self.n_devices
+        return self.model_flops_global / hlo_global if hlo_global else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Upper bound on model-FLOPs utilization implied by the roofline:
+        useful flops / (chips · peak · bound_time)."""
+        denom = self.n_devices * PEAK_FLOPS * self.bound_time
+        return self.model_flops_global / denom if denom else 0.0
+
+    def row(self) -> dict:
+        return {
+            "t_comp_s": self.t_comp,
+            "t_mem_s": self.t_mem,
+            "t_mem_analytic_s": self.t_mem_analytic,
+            "t_coll_s": self.t_coll,
+            "dominant": self.dominant,
+            "dominant_analytic": self.dominant_analytic,
+            "bound_time_s": self.bound_time,
+            "fraction_of_roofline": self.fraction_of_roofline,
+            "fraction_of_roofline_analytic": self.fraction_of_roofline_analytic,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def analytic_hbm_bytes(cfg, shape_kind: str, batch: int, seq: int,
+                       n_model: int, n_batchpar: int) -> float:
+    """Minimum-HBM-traffic model per device per step (lower bound).
+
+    Stream accounting (bytes each tensor must cross HBM at fusion
+    boundaries a TPU compiler reliably achieves):
+
+    train:   28·P/chips        master f32 params r/w + Adam m,v r/w + grad r
+           +  2·P_active/n_model   step-start bf16 weight cast/gather write
+           +  3·2·P_active/n_model bf16 weight reads (fwd + remat-fwd + bwd)
+           + ACT_TRAIN streams of (B_loc·S·d·2B) per layer
+           + chunked-CE logits r/w
+    prefill: bf16 weight read + ACT_PREFILL act streams + KV-cache write
+    decode:  bf16 active-weight read + KV-cache (or recurrent-state) r/w
+             + per-token activations (negligible but counted)
+    """
+    p_total, p_act = cfg.n_params, cfg.n_active_params
+    chips = n_model * n_batchpar
+    d = cfg.d_model
+    l = cfg.n_layers + (cfg.enc_layers or 0)
+    tok_loc = batch * seq / n_batchpar
+    kv_bytes_total = 0.0
+    if cfg.family not in ("rwkv",):
+        # kv cache bytes across layers (hybrid: only attention layers)
+        n_attn = l
+        if cfg.family == "hybrid":
+            n_attn = sum(
+                1 for i in range(cfg.n_layers)
+                if (cfg.pattern or ("attn",))[i % len(cfg.pattern or ("attn",))].startswith("attn")
+            )
+        eff_seq = seq
+        window = cfg.local_window if cfg.family == "hybrid" else cfg.swa_window
+        if cfg.ring_cache and window:
+            eff_seq = min(seq, window)  # ring-buffer cache (§Perf)
+        kv_bytes_total = n_attn * batch * cfg.n_kv_heads * eff_seq * cfg.head_dim * 2 * 2
+    else:
+        kv_bytes_total = (
+            cfg.n_layers * batch * (cfg.d_model // 64) * 64 * 64 * 4 * 2
+        )  # wkv f32 state k/v planes
+
+    if shape_kind == "train":
+        ACT_STREAMS = 40.0  # fwd(~14 tensors r+w) + remat refwd + bwd ≈ 40
+        opt = 28.0 * p_total / chips
+        gather = 2.0 * p_act / n_model
+        wreads = 6.0 * p_act / n_model
+        acts = l * tok_loc * d * 2.0 * ACT_STREAMS
+        logits = tok_loc * (cfg.vocab / n_model) * 4.0 * 2.0
+        return opt + gather + wreads + acts + logits
+    if shape_kind == "prefill":
+        ACT_STREAMS = 16.0
+        wreads = 2.0 * p_act / n_model
+        acts = l * tok_loc * d * 2.0 * ACT_STREAMS
+        cache_w = kv_bytes_total / chips / 2  # write once
+        return wreads + acts + cache_w
+    # decode: every step reads all active weights + the (masked) cache
+    wreads = 2.0 * p_act / n_model
+    cache_rw = kv_bytes_total / chips
+    acts = l * (batch / n_batchpar) * d * 2.0 * 12.0
+    return wreads + cache_rw + acts
+
+
+def model_flops(cfg, shape_kind: str, batch: int, seq: int) -> float:
+    """Analytic MODEL_FLOPS for a step.
+
+    train: 6·N_active·tokens (fwd 2x + bwd 4x), tokens = batch·seq.
+    prefill: 2·N_active·tokens.
+    decode: 2·N_active·batch (one token per sequence).
+    """
+    n = cfg.n_active_params
+    if shape_kind == "train":
+        return 6.0 * n * batch * seq
+    if shape_kind == "prefill":
+        return 2.0 * n * batch * seq
+    return 2.0 * n * batch

@@ -1,0 +1,109 @@
+"""Post-fusion HBM traffic estimate from compiled HLO text.
+
+XLA's `cost_analysis()['bytes accessed']` is per-instruction (pre-fusion): it
+counts every producer/consumer pair even when the compiler fuses them into a
+single kernel, overestimating real HBM traffic ~10-20x (measured on this
+backend — EXPERIMENTS.md §Roofline notes).  This module walks only
+**top-level** instructions (ENTRY, while bodies/conds, conditional branches —
+not fusion subcomputations): each one reads its operand buffers from and
+writes its result buffer to HBM, which is exactly the fusion-boundary
+traffic.  While-body contributions are multiplied by the loop trip count
+(same best-effort constant recovery as hlo/collectives.py).
+
+Skipped as free: parameter/constant/tuple/get-tuple-element/bitcast (no data
+movement of their own — their bytes are charged at their consumers).
+"""
+from __future__ import annotations
+
+import re
+
+from repro.hlo.collectives import _COMP_RE, _DEF_RE, _SHAPE_RE, _shape_bytes
+
+_FREE_OPS = (
+    "parameter(", "constant(", "tuple(", "get-tuple-element(", "bitcast(",
+    "after-all(", "iota(",
+)
+
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _opcode_of(rhs: str) -> str:
+    # rhs looks like: "f32[8,16]{1,0} fusion(%a, %b), kind=kLoop, ..."
+    m = re.search(r"\}?\s([a-z][\w\-]*)\(", rhs)
+    return m.group(1) if m else ""
+
+
+def hbm_traffic_bytes(hlo_text: str) -> float:
+    lines = hlo_text.splitlines()
+    name_type: dict[str, str] = {}
+    comp_of_line: list[str] = []
+    current = "<module>"
+    fusion_comps: set[str] = set()
+    for ln in lines:
+        m = _COMP_RE.match(ln)
+        if m:
+            current = m.group(1)
+        comp_of_line.append(current)
+        d = _DEF_RE.match(ln)
+        if d:
+            name, rhs = d.groups()
+            if rhs.startswith("("):
+                name_type[name] = rhs.split(") ")[0] + ")"
+            else:
+                name_type[name] = rhs.split(" ")[0]
+            # computations referenced as fused kernels / reducer lambdas
+            for ref in re.findall(r"(?:calls|to_apply)=%?([\w.\-]+)", rhs):
+                fusion_comps.add(ref)
+
+    # computations that are loop bodies/conditions/branches stay top-level:
+    loop_comps: set[str] = set()
+    for ln in lines:
+        for ref in re.findall(
+            r"(?:true_computation|false_computation)=%?([\w.\-]+)", ln
+        ):
+            loop_comps.add(ref)
+        mbr = re.search(r"branch_computations=\{([^}]*)\}", ln)
+        if mbr:
+            for ref in re.findall(r"%?([\w.\-]+)", mbr.group(1)):
+                loop_comps.add(ref)
+    body_trip: dict[str, int] = {}
+    for ln in lines:
+        if " while(" in ln:
+            mb = re.search(r"body=%?([\w.\-]+)", ln)
+            mc = re.search(r"condition=%?([\w.\-]+)", ln)
+            trip = 1
+            if mc:
+                loop_comps.add(mc.group(1))
+                consts = [
+                    int(c)
+                    for i, l2 in enumerate(lines)
+                    if comp_of_line[i] == mc.group(1)
+                    for c in re.findall(r"constant\((\d+)\)", l2)
+                ]
+                if consts:
+                    trip = max(consts)
+            if mb:
+                loop_comps.add(mb.group(1))
+                body_trip[mb.group(1)] = trip
+
+    total = 0.0
+    for i, ln in enumerate(lines):
+        comp = comp_of_line[i]
+        if comp in fusion_comps and comp not in loop_comps:
+            continue  # inside a fused kernel: no HBM traffic
+        d = _DEF_RE.match(ln)
+        if not d:
+            continue
+        name, rhs = d.groups()
+        if any(op in rhs for op in _FREE_OPS):
+            continue
+        opcode = _opcode_of(rhs)
+        if not opcode:
+            continue
+        out_b = _shape_bytes(rhs.split(" ")[0] if not rhs.startswith("(") else rhs)
+        args_str = rhs[rhs.find("(") :]
+        in_b = sum(
+            _shape_bytes(name_type.get(nm, "")) for nm in _OPERANDS_RE.findall(args_str)
+        )
+        total += (out_b + in_b) * body_trip.get(comp, 1)
+    return total

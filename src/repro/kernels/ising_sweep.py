@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: checkerboard Metropolis sweep for the 2-D Ising model.
+
+This is the paper's compute hot-spot (the per-iteration MH update, §3)
+re-thought for the TPU memory hierarchy (DESIGN.md §2/§6):
+
+* one grid step processes a **block of replicas** with their full (L, L)
+  lattices resident in VMEM — the analogue of the paper's "replicas per CUDA
+  block" question (Fig. 6); the block size `r_blk` is the tuning knob swept by
+  ``benchmarks/tile_sweep.py``;
+* both colour half-sweeps run back-to-back in-kernel, so each sweep costs one
+  HBM round-trip of the spin block instead of two;
+* spins are int8 in HBM (8× denser than the f32 math dtype) and are widened
+  to f32 only inside VMEM;
+* random uniforms are **kernel inputs** so the CPU `interpret=True` path is
+  bit-exact with `ref.ising_sweep` (on hardware, `pltpu.prng_random_bits`
+  in-kernel would remove that HBM stream — recorded as follow-up work).
+
+VMEM working set per grid step  ≈ r_blk · L² · (1 int8 + 2·4 u-f32 + 4 f32)
+≈ 13·r_blk·L² bytes; for the paper's L=300 and r_blk=8 that's ≈ 9.4 MB — just
+inside a v5e core's 16 MB of VMEM (checked by the tile sweep).
+
+On hardware, the trailing lattice dim should be padded to a multiple of 128
+lanes for full VPU utilization (the wrapper in ops.py reports alignment).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _roll1(x: jnp.ndarray, shift: int, axis: int) -> jnp.ndarray:
+    """±1 circular shift via slice+concat (lowers on both Mosaic and CPU)."""
+    n = x.shape[axis]
+    if shift == 1:
+        a = jax.lax.slice_in_dim(x, n - 1, n, axis=axis)
+        b = jax.lax.slice_in_dim(x, 0, n - 1, axis=axis)
+    else:  # shift == -1
+        a = jax.lax.slice_in_dim(x, 1, n, axis=axis)
+        b = jax.lax.slice_in_dim(x, 0, 1, axis=axis)
+    return jnp.concatenate([a, b], axis=axis)
+
+
+def _accept_prob(de, beta, rule):
+    """Mirror of `ref.accept_prob` (kept local: kernel code is self-contained)."""
+    if rule == "metropolis":
+        return jnp.exp(-beta * de)
+    if rule == "glauber":
+        return jax.nn.sigmoid(-beta * de)
+    raise ValueError(rule)
+
+
+def _ising_sweep_kernel(
+    spins_ref, u_ref, beta_ref, out_ref, de_ref, nacc_ref, *, j, b, rule
+):
+    """One full checkerboard sweep over an (r_blk, L, L) block."""
+    s = spins_ref[...].astype(jnp.float32)  # widen in VMEM only
+    l = s.shape[-1]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    parity = (ii + jj) % 2
+    beta = beta_ref[...].astype(jnp.float32)[:, None, None]
+
+    de_total = jnp.zeros(s.shape[0], jnp.float32)
+    n_acc = jnp.zeros(s.shape[0], jnp.int32)
+    for color in (0, 1):  # static unroll: two half-sweeps, one HBM round-trip
+        nbr = (
+            _roll1(s, 1, 1) + _roll1(s, -1, 1) + _roll1(s, 1, 2) + _roll1(s, -1, 2)
+        )
+        de = 2.0 * s * (j * nbr - b)
+        accept = (u_ref[:, color] < _accept_prob(de, beta, rule)) & (parity == color)
+        s = jnp.where(accept, -s, s)
+        de_total = de_total + jnp.sum(jnp.where(accept, de, 0.0), axis=(1, 2))
+        n_acc = n_acc + jnp.sum(accept.astype(jnp.int32), axis=(1, 2))
+
+    out_ref[...] = s.astype(jnp.int8)
+    de_ref[...] = de_total
+    nacc_ref[...] = n_acc
+
+
+def ising_sweep_pallas(
+    spins: jnp.ndarray,
+    u: jnp.ndarray,
+    betas: jnp.ndarray,
+    *,
+    j: float = 1.0,
+    b: float = 0.0,
+    rule: str = "metropolis",
+    r_blk: int = 8,
+    interpret: bool = True,
+):
+    """pallas_call wrapper. See `repro.kernels.ref.ising_sweep` for semantics.
+
+    Args:
+      spins: (R, L, L) int8; R must be a multiple of ``r_blk`` (ops.py pads).
+      u: (R, 2, L, L) f32 uniforms; betas: (R,) f32.
+      r_blk: replicas per grid step (the Fig.-6 "block size" analogue).
+      interpret: True on CPU (bit-exact vs the oracle); False on real TPU.
+    """
+    r, l, _ = spins.shape
+    assert r % r_blk == 0, (r, r_blk)
+    grid = (r // r_blk,)
+    kernel = functools.partial(_ising_sweep_kernel, j=j, b=b, rule=rule)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r_blk, l, l), lambda i: (i, 0, 0)),
+            pl.BlockSpec((r_blk, 2, l, l), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((r_blk,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((r_blk, l, l), lambda i: (i, 0, 0)),
+            pl.BlockSpec((r_blk,), lambda i: (i,)),
+            pl.BlockSpec((r_blk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, l, l), jnp.int8),
+            jax.ShapeDtypeStruct((r,), jnp.float32),
+            jax.ShapeDtypeStruct((r,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(spins, u, betas)
+
+
+def vmem_working_set_bytes(r_blk: int, length: int) -> int:
+    """Static VMEM budget model used by the tile sweep (bytes per grid step)."""
+    spins_in = r_blk * length * length  # int8
+    uniforms = r_blk * 2 * length * length * 4
+    widened = r_blk * length * length * 4  # f32 working copy
+    nbr = r_blk * length * length * 4  # neighbour-sum temporary
+    out = r_blk * length * length
+    return spins_in + uniforms + widened + nbr + out

@@ -1,0 +1,85 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles padding to kernel-friendly shapes, dispatch between the Pallas path
+and the pure-jnp oracle (`ref.py`), and platform detection (interpret=True
+everywhere except real TPUs).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ising_sweep as _ising
+from repro.kernels import ref as _ref
+from repro.kernels import wkv6 as _wkv6
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("j", "b", "rule", "r_blk", "use_pallas"))
+def ising_sweep(
+    spins: jnp.ndarray,
+    u: jnp.ndarray,
+    betas: jnp.ndarray,
+    *,
+    j: float = 1.0,
+    b: float = 0.0,
+    rule: str = "metropolis",
+    r_blk: int = 8,
+    use_pallas: bool = True,
+):
+    """Checkerboard sweep; see `ref.ising_sweep` for the contract.
+
+    Pads the replica axis to a multiple of ``r_blk`` (padded replicas run at
+    beta=0 on junk lattices and are dropped — grid shape stays static).
+    """
+    if not use_pallas:
+        return _ref.ising_sweep(spins, u, betas, j=j, b=b, rule=rule)
+    r = spins.shape[0]
+    pad = (-r) % r_blk
+    if pad:
+        spins = jnp.concatenate([spins, spins[:pad]], axis=0)
+        u = jnp.concatenate([u, u[:pad]], axis=0)
+        betas = jnp.concatenate([betas, jnp.zeros((pad,), betas.dtype)], axis=0)
+    out, de, nacc = _ising.ising_sweep_pallas(
+        spins, u, betas, j=j, b=b, rule=rule, r_blk=min(r_blk, spins.shape[0]),
+        interpret=not _on_tpu(),
+    )
+    return out[:r], de[:r], nacc[:r]
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_pallas"))
+def wkv6(
+    r: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,
+    initial_state: jnp.ndarray | None = None,
+    *,
+    chunk: int = 64,
+    use_pallas: bool = True,
+):
+    """RWKV-6 recurrence; see `ref.wkv6` for the contract.
+
+    Pads T to a multiple of ``chunk`` with w=1, k=0 steps (state-neutral).
+    """
+    if not use_pallas:
+        return _ref.wkv6(r, k, v, w, u, initial_state)
+    bh, t, dk = r.shape
+    pad = (-t) % chunk
+    if pad:
+        zk = jnp.zeros((bh, pad, dk), r.dtype)
+        zv = jnp.zeros((bh, pad, v.shape[-1]), v.dtype)
+        r = jnp.concatenate([r, zk], axis=1)
+        k = jnp.concatenate([k, zk], axis=1)
+        v = jnp.concatenate([v, zv], axis=1)
+        w = jnp.concatenate([w, jnp.ones((bh, pad, dk), w.dtype)], axis=1)
+    o, s = _wkv6.wkv6_pallas(
+        r, k, v, w, u, initial_state, chunk=chunk, interpret=not _on_tpu()
+    )
+    return o[:, :t], s

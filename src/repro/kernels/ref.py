@@ -1,0 +1,126 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the *numerical contracts*: each kernel in this package must match
+its oracle bit-for-bit in f32 (tests/test_kernels_*.py sweep shapes/dtypes).
+They are also used as the production XLA fallback paths (e.g. lattices too
+large for VMEM-resident tiles, or CPU execution).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def accept_prob(de: jnp.ndarray, beta, rule: str) -> jnp.ndarray:
+    """Per-site acceptance probability.
+
+    * ``metropolis`` — ``min(1, e^{-beta*dE})`` (paper Eq. 1).  NOTE: at
+      dE <= 0 this accepts deterministically; simultaneous (checkerboard)
+      deterministic flips can create absorbing 2-cycles on tiny/stripe-
+      symmetric lattices (observed on 2x2 — see tests/test_ising.py).
+    * ``glauber`` — heat-bath ``1/(1 + e^{beta*dE})``: strictly in (0,1), so
+      the simultaneous update stays aperiodic; same stationary law.
+    """
+    if rule == "metropolis":
+        return jnp.exp(-beta * de)  # u in [0,1) < e^0 handles dE<=0
+    if rule == "glauber":
+        return jax.nn.sigmoid(-beta * de)
+    raise ValueError(f"unknown acceptance rule {rule!r}")
+
+
+def ising_sweep(
+    spins: jnp.ndarray,
+    u: jnp.ndarray,
+    betas: jnp.ndarray,
+    *,
+    j: float,
+    b: float,
+    rule: str = "metropolis",
+):
+    """One full checkerboard Metropolis sweep, batched over replicas.
+
+    Args:
+      spins: (R, L, L) int8 in {-1, +1}.
+      u: (R, 2, L, L) float32 uniforms in [0, 1) — one lattice of randoms per
+        colour half-sweep.  Randoms are *inputs* (not generated in-kernel) so
+        the Pallas kernel and this oracle are bit-exact on CPU (DESIGN.md §6).
+      betas: (R,) float32 inverse temperatures.
+      rule: per-site acceptance rule (see `accept_prob`).
+
+    Returns:
+      (new_spins (R,L,L) int8, delta_e (R,) f32, n_accepted (R,) i32).
+    """
+    L = spins.shape[-1]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    parity = (ii + jj) % 2
+    beta = betas.astype(jnp.float32)[:, None, None]
+
+    s = spins.astype(jnp.float32)
+    de_total = jnp.zeros(spins.shape[0], jnp.float32)
+    n_acc = jnp.zeros(spins.shape[0], jnp.int32)
+    for color in (0, 1):  # static unroll, exactly as the kernel does
+        nbr = (
+            jnp.roll(s, 1, axis=-2)
+            + jnp.roll(s, -1, axis=-2)
+            + jnp.roll(s, 1, axis=-1)
+            + jnp.roll(s, -1, axis=-1)
+        )
+        de = 2.0 * s * (j * nbr - b)
+        accept = (u[:, color] < accept_prob(de, beta, rule)) & (parity == color)
+        s = jnp.where(accept, -s, s)
+        de_total = de_total + jnp.sum(jnp.where(accept, de, 0.0), axis=(-2, -1))
+        n_acc = n_acc + jnp.sum(accept.astype(jnp.int32), axis=(-2, -1))
+    return s.astype(jnp.int8), de_total, n_acc
+
+
+def wkv6(
+    r: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,
+    initial_state: jnp.ndarray | None = None,
+):
+    """RWKV-6 ("Finch") recurrence, one batch*head slab at a time.
+
+    Per head, with state ``S`` of shape (dk, dv)::
+
+        o_t = r_t @ S_{t-1}  +  (r_t · (u ⊙ k_t)) v_t
+        S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t
+
+    ``w_t`` is the *data-dependent* decay in (0, 1) — the defining RWKV-6
+    feature [arXiv:2404.05892].
+
+    Args:
+      r, k, w: (BH, T, dk) float32 (w already exp(-exp(...))-activated).
+      v: (BH, T, dv) float32.
+      u: (BH, dk) float32 "bonus" for the current token.
+      initial_state: optional (BH, dk, dv) f32 (decode); zeros otherwise.
+
+    Returns (o (BH, T, dv) f32, final_state (BH, dk, dv) f32).
+    """
+    bh, t, dk = r.shape
+    dv = v.shape[-1]
+    s0 = (
+        jnp.zeros((bh, dk, dv), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(s, inputs):
+        rt, kt, vt, wt, ut = inputs  # (bh,dk),(bh,dk),(bh,dv),(bh,dk),(bh,dk)
+        bonus = jnp.sum(rt * ut * kt, axis=-1, keepdims=True)  # (bh, 1)
+        out = jnp.einsum("bk,bkv->bv", rt, s) + bonus * vt
+        s = wt[:, :, None] * s + kt[:, :, None] * vt[:, None, :]
+        return s, out
+
+    xs = (
+        r.transpose(1, 0, 2),
+        k.transpose(1, 0, 2),
+        v.transpose(1, 0, 2),
+        w.transpose(1, 0, 2),
+        jnp.broadcast_to(u[None], (t, bh, dk)),
+    )
+    s_final, o = jax.lax.scan(step, s0, xs)
+    return o.transpose(1, 0, 2), s_final

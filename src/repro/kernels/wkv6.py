@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: RWKV-6 ("Finch") linear-attention recurrence.
+
+The assigned ``rwkv6-7b`` architecture is attention-free; its hot-spot is the
+per-head recurrence ``S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t`` with
+data-dependent decay.  A naive `lax.scan` keeps the (dk × dv) state in HBM
+between steps; this kernel keeps it in a **VMEM scratch that persists across
+the sequential time-chunk grid dimension**, so HBM sees only the streaming
+r/k/v/w inputs and the output — the TPU analogue of the CUDA "state in
+registers/SMEM" linear-attention kernels.
+
+Grid: ``(BH, T/chunk)`` — the second (minor) dimension is sequential on TPU,
+so the scratch carries the state from chunk to chunk for a fixed batch*head
+slab; on a new slab (first chunk) the state is re-initialized from the
+``initial_state`` input (zeros for training, the cache for decode).
+
+VMEM per step ≈ chunk·(3·dk + dv)·4 + dk·dv·4 bytes: for dk=dv=64,
+chunk=128 that's ≈ 150 KB — tiny; many slabs can be multi-buffered.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sout_ref, s_scr):
+    chunk_idx = pl.program_id(1)
+
+    @pl.when(chunk_idx == 0)
+    def _init():
+        s_scr[...] = s0_ref[0]
+
+    ct = r_ref.shape[1]
+    s = s_scr[...]
+
+    def body(t, s):
+        rt = r_ref[0, t]  # (dk,)
+        kt = k_ref[0, t]
+        vt = v_ref[0, t]  # (dv,)
+        wt = w_ref[0, t]
+        bonus = jnp.sum(rt * u_ref[0] * kt)  # scalar
+        out = jnp.dot(rt, s) + bonus * vt  # (dv,)
+        o_ref[0, t] = out.astype(o_ref.dtype)
+        return wt[:, None] * s + kt[:, None] * vt[None, :]
+
+    s = jax.lax.fori_loop(0, ct, body, s)
+    s_scr[...] = s
+    # Final state is only meaningful after the last chunk; writing every chunk
+    # keeps the dataflow simple (last write wins).
+    sout_ref[0] = s
+
+
+def wkv6_pallas(
+    r: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,
+    initial_state: jnp.ndarray | None = None,
+    *,
+    chunk: int = 64,
+    interpret: bool = True,
+):
+    """pallas_call wrapper. Contract: `repro.kernels.ref.wkv6`.
+
+    Args:
+      r, k, w: (BH, T, dk) f32; v: (BH, T, dv) f32; u: (BH, dk) f32.
+      initial_state: (BH, dk, dv) f32 or None (zeros).
+      chunk: time-chunk size; T must be a multiple (ops.py pads).
+    """
+    bh, t, dk = r.shape
+    dv = v.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    if initial_state is None:
+        initial_state = jnp.zeros((bh, dk, dv), jnp.float32)
+    grid = (bh, t // chunk)
+    return pl.pallas_call(
+        _wkv6_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, dk), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, dk, dv), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, dv), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, dk, dv), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, dv), jnp.float32),
+            jax.ShapeDtypeStruct((bh, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, initial_state)

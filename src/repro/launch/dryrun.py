@@ -1,0 +1,343 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init).  This flag is set here and ONLY here (DESIGN.md §7).
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Per cell:
+  * delta-method lowerings (unrolled 1-group and 2-group configs) give exact
+    per-partition FLOPs / bytes / collective payloads despite XLA's
+    count-while-bodies-once cost analysis (DESIGN.md §7);
+  * a full-config `lax.scan` lowering proves the production program compiles
+    on the target mesh and yields `memory_analysis()` (does it fit?);
+  * results land in results/dryrun/<arch>--<shape>--<mesh>[--variant].json,
+    consumed by benchmarks/roofline_report.py and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3_32b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --arch all --shape all --mesh both
+  ... --override attn_chunk=4096 --variant chunk4k     (hillclimb variants)
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.hlo.collectives import parse_collectives
+from repro.hlo.roofline import Roofline, analytic_hbm_bytes, model_flops
+from repro.hlo.traffic import hbm_traffic_bytes
+from repro.launch import input_specs as ispec
+from repro.launch import sharding as shard_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as model_lib
+from repro.models import transformer
+from repro.models.common import ModelConfig
+from repro.train import optimizer as opt_lib
+from repro.train.train_step import init_state, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# reduced-layer configs for the delta method
+# ---------------------------------------------------------------------------
+def delta_axes(cfg: ModelConfig) -> dict[str, tuple[int, int, int]]:
+    """axis -> (full, base, step) layer counts."""
+    if cfg.family == "encdec":
+        return {
+            "n_layers": (cfg.n_layers, 1, 1),
+            "enc_layers": (cfg.enc_layers, 1, 1),
+        }
+    plen = len(transformer.layer_pattern(cfg))
+    tail = cfg.n_layers % plen
+    return {"n_layers": (cfg.n_layers, plen + tail, plen)}
+
+
+def _with_layers(cfg: ModelConfig, **counts) -> ModelConfig:
+    return dataclasses.replace(cfg, scan_layers=False, **counts)
+
+
+# ---------------------------------------------------------------------------
+# lowering helpers
+# ---------------------------------------------------------------------------
+def _microbatches(cfg, cell, mesh) -> int:
+    """Pick the microbatch count so saved per-layer scan residuals fit HBM.
+
+    scan+remat saves one (B_loc, S, D) input per layer; target <= ~4 GB of
+    residuals per device (leaving room for weights + transients on a 16 GB
+    v5e).  Power of two so it divides the global batch.
+    """
+    n_batchpar = mesh.size // mesh.shape["model"]
+    b_loc = max(cell.batch // n_batchpar, 1)
+    l = cfg.n_layers + (cfg.enc_layers or 0)
+    res_bytes = l * b_loc * cell.seq * cfg.d_model * 2
+    m = 1
+    while res_bytes / m > 4e9 and m < cell.batch:
+        m *= 2
+    return m
+
+
+_BATCH_EXTRA_AXES: tuple = ()  # set by --batch-axes dpmodel (§Perf variant)
+_SEQ_AXES: tuple = ()  # set by --batch-axes dpmodel_sp (context parallelism)
+
+
+def _train_fn_and_specs(cfg, cell, mesh, fsdp=True, microbatches=1):
+    opt_cfg = opt_lib.AdamWConfig()
+    state_shapes = jax.eval_shape(lambda k: init_state(cfg, k), jax.random.key(0))
+    batch_shapes = ispec.batch_specs(cfg, cell)
+    cast_sh = shard_lib.param_shardings(mesh, state_shapes.params, fsdp=False)
+    fsdp_sh = shard_lib.param_shardings(mesh, state_shapes.params, fsdp=True)
+    step_fn = make_train_step(cfg, opt_cfg, microbatches=microbatches,
+                              cast_shardings=cast_sh if fsdp else None,
+                              grad_shardings=fsdp_sh if fsdp else None)
+    in_sh = (
+        shard_lib.param_shardings(mesh, state_shapes, fsdp=fsdp),
+        shard_lib.batch_shardings(mesh, batch_shapes, extra_axes=_BATCH_EXTRA_AXES,
+                                  seq_axes=_SEQ_AXES),
+    )
+    return step_fn, (state_shapes, batch_shapes), in_sh
+
+
+def _serve_dtype(params_shapes):
+    """Serving holds bf16 weights (production standard — halves HBM)."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        if s.dtype == jnp.float32 and len(s.shape) >= 2 else s,
+        params_shapes,
+    )
+
+
+def _prefill_fn_and_specs(cfg, cell, mesh):
+    def fn(params, batch):
+        return model_lib.prefill_logits(params, cfg, batch)
+
+    params_shapes = jax.eval_shape(lambda k: model_lib.init_params(cfg, k), jax.random.key(0))
+    params_shapes = _serve_dtype(params_shapes)
+    batch_shapes = ispec.batch_specs(cfg, cell)
+    in_sh = (
+        shard_lib.param_shardings(mesh, params_shapes),
+        shard_lib.batch_shardings(mesh, batch_shapes),
+    )
+    return fn, (params_shapes, batch_shapes), in_sh
+
+
+def _decode_fn_and_specs(cfg, cell, mesh):
+    state_shapes, token, pos, ctx = ispec.decode_specs(cfg, cell)
+
+    if ctx is None:
+        def fn(params, state, token, pos):
+            return model_lib.decode_step(params, cfg, state, token, pos)
+        args = (state_shapes, token, pos)
+    else:
+        def fn(params, state, token, pos, ctx):
+            return model_lib.decode_step(params, cfg, state, token, pos, ctx=ctx)
+        args = (state_shapes, token, pos, ctx)
+
+    params_shapes = jax.eval_shape(lambda k: model_lib.init_params(cfg, k), jax.random.key(0))
+    params_shapes = _serve_dtype(params_shapes)
+    in_sh = [shard_lib.param_shardings(mesh, params_shapes),
+             shard_lib.decode_state_shardings(mesh, state_shapes, cfg)]
+    in_sh.append(shard_lib.batch_shardings(mesh, token))
+    in_sh.append(shard_lib.scalar_sharding(mesh))
+    if ctx is not None:
+        in_sh.append(shard_lib.batch_shardings(mesh, ctx))
+    return fn, (params_shapes,) + args, tuple(in_sh)
+
+
+def lower_one(cfg, cell, mesh, label: str, microbatches: int = 1) -> dict:
+    """Lower + compile one program; return cost/memory/collective record."""
+    if cell.kind == "train":
+        fn, arg_shapes, in_sh = _train_fn_and_specs(cfg, cell, mesh,
+                                                    microbatches=microbatches)
+    elif cell.kind == "prefill":
+        fn, arg_shapes, in_sh = _prefill_fn_and_specs(cfg, cell, mesh)
+    else:
+        fn, arg_shapes, in_sh = _decode_fn_and_specs(cfg, cell, mesh)
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh)
+        lowered = jitted.lower(*arg_shapes)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    ma = compiled.memory_analysis()
+    hlo_text = compiled.as_text()
+    coll = parse_collectives(hlo_text)
+    traffic = hbm_traffic_bytes(hlo_text)
+    return {
+        "label": label,
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "hbm_traffic_bytes": traffic,
+        "collective_payload_bytes": coll.payload_bytes,
+        "collective_wire_bytes": coll.wire_bytes,
+        "collective_by_op": coll.by_op,
+        "collective_count": coll.count,
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "generated_code_bytes": ma.generated_code_size_in_bytes,
+        },
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, overrides: dict,
+             variant: str, out_dir: str, skip_full: bool = False) -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    cell = ispec.SHAPES[shape_name]
+    ok, reason = ispec.applicable(cfg, shape_name)
+    mesh_name = "multi" if multi_pod else "single"
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "variant": variant, "overrides": overrides,
+        "n_params": cfg.n_params, "n_active_params": cfg.n_active_params,
+    }
+    if not ok:
+        rec["skipped"] = reason
+        _dump(rec, out_dir)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    axes = delta_axes(cfg)
+
+    # --- delta-method lowerings (unrolled) ---
+    base_counts = {ax: base for ax, (_, base, _) in axes.items()}
+    lows = {"base": lower_one(_with_layers(cfg, **base_counts), cell, mesh, "base")}
+    for ax, (_, base, step) in axes.items():
+        counts = dict(base_counts)
+        counts[ax] = base + step
+        lows[f"plus_{ax}"] = lower_one(_with_layers(cfg, **counts), cell, mesh, f"plus_{ax}")
+
+    def compose(field: str) -> float:
+        total = lows["base"][field]
+        for ax, (full, base, step) in axes.items():
+            per_group = (lows[f"plus_{ax}"][field] - lows["base"][field])
+            total += (full - base) // step * per_group
+        return total
+
+    composed = {
+        "flops_per_device": compose("flops"),
+        "hbm_bytes_per_device": compose("hbm_traffic_bytes"),
+        "hbm_bytes_prefusion_upper": compose("bytes_accessed"),
+        "coll_payload_bytes": compose("collective_payload_bytes"),
+        "coll_wire_bytes": compose("collective_wire_bytes"),
+    }
+
+    # --- full-config scan lowering: compile proof + memory analysis ---
+    # production program: scan over layers + microbatched grad accumulation
+    if not skip_full:
+        mb = _microbatches(cfg, cell, mesh) if cell.kind == "train" else 1
+        full = lower_one(dataclasses.replace(cfg, scan_layers=True), cell, mesh,
+                         "full_scan", microbatches=mb)
+        full["microbatches"] = mb
+        rec["full_scan"] = full
+
+    rec["lowerings"] = lows
+    rec["composed"] = composed
+    mf = model_flops(cfg, cell.kind, cell.batch, cell.seq)
+    n_model = mesh.shape["model"]
+    roof = Roofline(
+        flops_per_device=composed["flops_per_device"],
+        hbm_bytes_per_device=composed["hbm_bytes_per_device"],
+        coll_wire_bytes_per_device=composed["coll_wire_bytes"],
+        model_flops_global=mf,
+        n_devices=n_dev,
+        hbm_analytic_per_device=analytic_hbm_bytes(
+            cfg, cell.kind, cell.batch, cell.seq, n_model, n_dev // n_model
+        ),
+    )
+    rec["model_flops"] = mf
+    rec["roofline"] = roof.row()
+    _dump(rec, out_dir)
+    return rec
+
+
+def _dump(rec: dict, out_dir: str):
+    os.makedirs(out_dir, exist_ok=True)
+    variant = rec.get("variant") or "baseline"
+    name = f"{rec['arch']}--{rec['shape']}--{rec['mesh']}--{variant}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def _parse_overrides(pairs):
+    out = {}
+    for pair in pairs or []:
+        k, v = pair.split("=", 1)
+        for cast in (int, float):
+            try:
+                out[k] = cast(v)
+                break
+            except ValueError:
+                continue
+        else:
+            out[k] = {"true": True, "false": False}.get(v.lower(), v)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--override", nargs="*", default=[])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-full", action="store_true",
+                    help="skip the full-config scan compile (fast iteration)")
+    ap.add_argument("--batch-axes", default="dp",
+                    choices=["dp", "dpmodel", "dpmodel_sp"],
+                    help="dpmodel: fold the model axis into the batch shard; "
+                         "dpmodel_sp: additionally shard the sequence over "
+                         "'pod' (context parallelism, §Perf variants)")
+    args = ap.parse_args()
+    global _BATCH_EXTRA_AXES, _SEQ_AXES
+    if args.batch_axes in ("dpmodel", "dpmodel_sp"):
+        _BATCH_EXTRA_AXES = ("model",)
+    if args.batch_axes == "dpmodel_sp":
+        _SEQ_AXES = ("pod",)
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(ispec.SHAPE_NAMES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    overrides = _parse_overrides(args.override)
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}/{shape}/{'multi' if mp else 'single'}"
+                t0 = time.time()
+                try:
+                    rec = run_cell(arch, shape, mp, overrides, args.variant,
+                                   args.out, skip_full=args.skip_full)
+                    status = "SKIP " + rec.get("skipped", "") if "skipped" in rec else (
+                        f"ok   dominant={rec['roofline']['dominant']}"
+                        f" frac={rec['roofline']['fraction_of_roofline']:.3f}"
+                    )
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append(tag)
+                    status = f"FAIL {type(e).__name__}: {e}"
+                print(f"[dryrun] {tag:55s} {time.time()-t0:7.1f}s  {status}", flush=True)
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

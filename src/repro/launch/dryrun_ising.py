@@ -1,0 +1,132 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Must precede every other import (same rule as dryrun.py).
+
+"""Dry-run for the paper's OWN workload: the 1500-replica (padded to 1536)
+300x300 Ising MH/PT benchmark on the production meshes.
+
+This is the paper-representative §Perf cell: it lowers one full PT interval
+(``swap_interval`` sweeps + one parallel swap iteration) with the replica
+axis sharded over the mesh, and records the collective traffic of the two
+swap implementations:
+
+  * ``state`` — faithful to the paper: accepted pairs exchange (L,L) int8
+    lattices (a replica-axis gather -> all-to-all at shard boundaries);
+  * ``temp``  — optimized: accepted pairs exchange rung indices (O(R) bytes).
+
+The sweep itself is communication-free (replica-parallel, like the paper's
+threads); `jnp.roll` halos stay on-device because lattices are unsharded.
+
+  python -m repro.launch.dryrun_ising --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distributed, ising, ladder, pt
+from repro.hlo.collectives import parse_collectives
+from repro.hlo.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.hlo.traffic import hbm_traffic_bytes
+from repro.launch.mesh import make_production_mesh
+
+
+def lower_pt(mesh, *, replicas, length, interval, swap_mode, criterion="logistic"):
+    system = ising.IsingSystem(length=length, j=1.0, b=0.0)
+    temps = tuple(float(t) for t in ladder.paper_ladder(replicas))
+    cfg = pt.PTConfig(
+        n_replicas=replicas, temps=temps, swap_interval=interval,
+        swap_mode=swap_mode, criterion=criterion,
+    )
+    state_shapes = jax.eval_shape(lambda k: pt.init(system, cfg, k), jax.random.key(0))
+    shard = distributed.replica_sharding(mesh)
+    scalar = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+    def like(leaf):
+        if hasattr(leaf, "ndim") and leaf.ndim >= 1 and leaf.shape[0] == replicas:
+            return shard
+        return scalar
+
+    in_sh = (jax.tree_util.tree_map(like, state_shapes),)
+
+    def run_interval(st):
+        st, trace = pt.run(system, cfg, st, interval, shard=shard)
+        # depend on the post-swap STATES (not just energies) with a
+        # replica-weighted reduction — otherwise DCE deletes the state-swap
+        # gather in a single-interval program and the collective vanishes
+        w = jnp.arange(cfg.n_replicas, dtype=jnp.float32)[:, None, None]
+        probe = jnp.sum(st.states.astype(jnp.float32) * w)
+        return st.energy, trace["swap_accept"], probe
+
+    t0 = time.time()
+    with mesh:
+        compiled = jax.jit(run_interval, in_shardings=in_sh).lower(state_shapes).compile()
+    dt = time.time() - t0
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    txt = compiled.as_text()
+    coll = parse_collectives(txt)
+    ma = compiled.memory_analysis()
+    # analytic FLOPs: 2 half-sweeps x ~12 ops/site per sweep, R*L^2 sites
+    sweep_flops = replicas * length * length * 2 * 12 * interval
+    return {
+        "swap_mode": swap_mode,
+        "replicas": replicas,
+        "length": length,
+        "interval": interval,
+        "flops_per_device_hlo": float(ca.get("flops", 0.0)),
+        "model_flops_per_device": sweep_flops / mesh.size,
+        "hbm_traffic_per_device": hbm_traffic_bytes(txt),
+        "coll_payload_bytes": coll.payload_bytes,
+        "coll_wire_bytes": coll.wire_bytes,
+        "coll_by_op": coll.by_op,
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+        },
+        "t_comp_s": sweep_flops / mesh.size / PEAK_FLOPS,
+        "t_mem_s": hbm_traffic_bytes(txt) / HBM_BW,
+        "t_coll_s": coll.wire_bytes / ICI_BW,
+        "compile_s": dt,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--replicas", type=int, default=1536)  # paper's 1500, padded
+    ap.add_argument("--length", type=int, default=300)  # paper's 300x300
+    ap.add_argument("--interval", type=int, default=100)
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    for mp in meshes:
+        mesh = make_production_mesh(multi_pod=mp)
+        mesh_name = "multi" if mp else "single"
+        for mode in ("state", "temp"):
+            rec = lower_pt(
+                mesh, replicas=args.replicas, length=args.length,
+                interval=args.interval, swap_mode=mode,
+            )
+            rec.update({"arch": "ising_paper", "shape": f"pt{args.interval}",
+                        "mesh": mesh_name, "variant": mode})
+            name = f"ising_paper--pt{args.interval}--{mesh_name}--{mode}.json"
+            with open(os.path.join(args.out, name), "w") as f:
+                json.dump(rec, f, indent=1)
+            print(
+                f"[ising-dryrun] {mesh_name}/{mode}: compile {rec['compile_s']:.1f}s  "
+                f"coll_wire={rec['coll_wire_bytes']/2**20:.2f} MiB/dev  "
+                f"by_op={ {k: round(v/2**20, 2) for k, v in rec['coll_by_op'].items()} }",
+                flush=True,
+            )
+
+
+if __name__ == "__main__":
+    main()

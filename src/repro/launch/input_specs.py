@@ -1,0 +1,94 @@
+"""ShapeDtypeStruct stand-ins for every (architecture × input-shape) cell.
+
+No device allocation — everything here is metadata.  The assigned shape set
+(brief):
+
+    train_4k     seq=4096    global_batch=256   (training)
+    prefill_32k  seq=32768   global_batch=32    (inference-prefill)
+    decode_32k   seq=32768   global_batch=128   (decode: 1 new token, 32k KV)
+    long_500k    seq=524288  global_batch=1     (long-context decode)
+
+`long_500k` requires sub-quadratic attention: it runs for rwkv6 (SSM),
+recurrentgemma (hybrid local-attn) and mixtral (SWA) and is skipped for pure
+full-attention archs (DESIGN.md §5).  Enc-dec/vlm frontends are stubs: specs
+include precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str  # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+SHAPE_NAMES = tuple(SHAPES)
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) per the brief's applicability rules."""
+    if shape_name == "long_500k":
+        subquad = cfg.family in ("rwkv", "hybrid") or cfg.swa_window > 0
+        if not subquad:
+            return False, "pure full-attention arch: long_500k needs sub-quadratic attention"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Model inputs for train/prefill kinds."""
+    b, s = cell.batch, cell.seq
+    out = {"tokens": _sds((b, s), jnp.int32)}
+    if cell.kind == "train":
+        out["labels"] = _sds((b, s), jnp.int32)
+    if cfg.family == "encdec":
+        out["frames"] = _sds((b, cfg.enc_seq, cfg.d_model), cfg.compute_dtype)
+    if cfg.family == "vlm":
+        out["img"] = _sds((b, cfg.img_tokens, cfg.d_model), cfg.compute_dtype)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of a cell (brief §2).
+
+    train/prefill -> dict of batch specs; decode -> (state, token, pos, ctx).
+    """
+    cell = SHAPES[shape_name]
+    if cell.kind in ("train", "prefill"):
+        return batch_specs(cfg, cell)
+    return decode_specs(cfg, cell)
+
+
+def decode_specs(cfg: ModelConfig, cell: ShapeCell):
+    """(state, token, pos, ctx) specs for the serve step."""
+    state = jax.eval_shape(
+        lambda: model_lib.init_decode_state(cfg, cell.batch, cell.seq)
+    )
+    token = _sds((cell.batch, 1), jnp.int32)
+    pos = _sds((), jnp.int32)
+    ctx = None
+    if cfg.family == "encdec":
+        ctx = _sds((cell.batch, cfg.enc_seq, cfg.d_model), cfg.compute_dtype)
+    elif cfg.family == "vlm":
+        ctx = _sds((cell.batch, cfg.img_tokens, cfg.d_model), cfg.compute_dtype)
+    return state, token, pos, ctx

@@ -1,0 +1,26 @@
+"""Production mesh construction (DESIGN.md §4).
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state (required so smoke tests see 1 CPU device while the dry-run
+sees 512 placeholder devices via its XLA_FLAGS preamble).
+"""
+from __future__ import annotations
+
+import jax
+
+BATCH_AXES = ("pod", "data")  # logical batch/replica axes (present subset used)
+MODEL_AXIS = "model"
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def batch_axes(mesh) -> tuple:
+    """The subset of (pod, data) present in this mesh, for batch sharding."""
+    return tuple(a for a in BATCH_AXES if a in mesh.axis_names)

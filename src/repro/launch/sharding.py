@@ -1,0 +1,196 @@
+"""Sharding policy: logical-rule PartitionSpecs with divisibility fallback.
+
+Rules are keyed on the trailing parameter-path component (the weight's role),
+then validated against the actual mesh: any sharded dim that does not divide
+by its mesh axes is dropped to replication (e.g. Mixtral's 8 experts cannot
+take EP over a 16-way model axis, so expert weights fall back from
+P('model',None,None) to the intra-expert TP alternative P(None,None,'model')).
+
+Stacked scan groups ("groups" in the path) get a leading None prepended.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+
+# rule: name -> list of candidate dim-spec tuples, first fitting one wins.
+# 'B' is replaced by the mesh's batch axes; 'M' by the model axis.
+_RULES: dict[str, list[tuple]] = {
+    # embeddings
+    "embed": [("M", None)],
+    "unembed": [(None, "M")],
+    # attention
+    "wq": [(None, "M", None), ("M", None, None)],
+    "wk": [(None, "M", None), ("M", None, None)],
+    "wv": [(None, "M", None), ("M", None, None)],
+    "wo": [("M", None, None), (None, None, "M")],
+    # dense ffn (2-D) and moe experts (3-D share the names)
+    "w_gate": [(None, "M"), ("M", None, None), (None, None, "M")],
+    "w_up": [(None, "M"), ("M", None, None), (None, None, "M")],
+    "w_down": [("M", None), ("M", None, None), (None, "M", None)],
+    "router": [(None, None)],
+    # rglru
+    "w_x": [(None, "M")],
+    "w_gmlp": [(None, "M")],
+    "conv_w": [(None, "M")],
+    "w_r": [(None, "M")],
+    "w_i": [(None, "M")],
+    "w_out": [("M", None)],
+    # rwkv time-mix
+    "w_k": [(None, "M")],
+    "w_v": [(None, "M"), ("M", None)],
+    "w_g": [(None, "M")],
+    "w_o": [("M", None)],
+    "lora_a": [(None, None)],
+    "lora_b": [(None, "M")],
+}
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _fits(mesh: Mesh, shape, spec) -> bool:
+    for dim, axis in zip(shape, spec):
+        if axis is not None and dim % _axis_size(mesh, axis) != 0:
+            return False
+    return True
+
+
+def _leaf_spec(mesh: Mesh, path: str, shape, fsdp: bool = False) -> P:
+    name = path.rstrip("]").split("'")[-2] if "'" in path else path.split(".")[-1]
+    stacked = "groups" in path or re.search(r"\['(enc|dec)'\]", path) is not None
+    base_shape = shape[1:] if stacked and len(shape) >= 2 else shape
+    rules = _RULES.get(name, [])
+    chosen = None
+    for cand in rules:
+        if len(cand) != len(base_shape):
+            continue
+        spec = tuple("model" if a == "M" else a for a in cand)
+        if _fits(mesh, base_shape, spec):
+            chosen = spec
+            break
+    if chosen is None:
+        chosen = (None,) * len(base_shape)
+    if fsdp:
+        # ZeRO-3-style: additionally shard the largest unsharded dim over
+        # 'data' so params + optimizer state fit HBM without a full DP copy
+        # (weight all-gathers are generated per layer by GSPMD).
+        chosen = list(chosen)
+        free = [i for i, a in enumerate(chosen) if a is None]
+        free.sort(key=lambda i: -base_shape[i])
+        for i in free:
+            if base_shape[i] % _axis_size(mesh, "data") == 0:
+                chosen[i] = "data"
+                break
+        chosen = tuple(chosen)
+    if stacked and len(shape) >= 2:
+        chosen = (None,) + chosen
+    return P(*chosen)
+
+
+def param_shardings(mesh: Mesh, params_shapes: Any, fsdp: bool = False):
+    """NamedSharding tree for a params (or optimizer-state) shape tree.
+
+    fsdp=True additionally shards each weight's largest free dim over 'data'
+    (train-time default: v5e HBM cannot hold a full f32 params+Adam copy per
+    data-parallel group for the larger assigned archs — see EXPERIMENTS.md).
+    """
+
+    def fn(path, leaf):
+        return NamedSharding(
+            mesh, _leaf_spec(mesh, jax.tree_util.keystr(path), leaf.shape, fsdp=fsdp)
+        )
+
+    return jax.tree_util.tree_map_with_path(fn, params_shapes)
+
+
+def batch_shardings(mesh: Mesh, batch_shapes: Any, extra_axes: tuple = (),
+                    seq_axes: tuple = ()):
+    """Batch inputs: leading axis over (pod, data) when divisible.
+
+    ``extra_axes``: additional mesh axes to fold into the batch shard — e.g.
+    ("model",) turns TP training into 256-way hierarchical DP (the §Perf
+    "dp256" variant: per-device batch drops n_model-fold and the TP
+    activation all-reduces shrink proportionally).
+    ``seq_axes``: mesh axes for dim 1 (the sequence) — context parallelism;
+    pairs with extra_axes on the 2x16x16 mesh where global_batch 256 cannot
+    cover all 512 devices on the batch dim alone.
+    """
+    ba = batch_axes(mesh) + tuple(a for a in extra_axes if a in mesh.axis_names)
+    ba = tuple(a for a in ba if a not in seq_axes)
+    sa = tuple(a for a in seq_axes if a in mesh.axis_names)
+
+    def fn(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        # progressively drop leading axes until the batch divides (e.g.
+        # global_batch 256 cannot take (pod,data,model)=512; (data,model)
+        # still applies) — silently replicating instead is catastrophic
+        # (measured 2x compute + 5x collectives, §Perf refuted-log).
+        use = ba
+        while use and leaf.shape[0] % _axis_size(mesh, use) != 0:
+            use = use[1:]
+        rest: list = [None] * (leaf.ndim - 1)
+        if sa and leaf.ndim >= 2 and leaf.shape[1] % _axis_size(mesh, sa) == 0:
+            rest[0] = sa if len(sa) > 1 else sa[0]
+        if use:
+            return NamedSharding(mesh, P(use, *rest))
+        return NamedSharding(mesh, P(None, *rest))
+
+    return jax.tree_util.tree_map(fn, batch_shapes)
+
+
+def decode_state_shardings(mesh: Mesh, state_shapes: Any, cfg):
+    """Decode-state sharding: KV caches (…, B, KV, S, hd) shard batch over
+    (pod,data) and the *sequence* over 'model' (DESIGN.md §4); recurrent
+    states shard their batch-ish leading dims and feature dims over 'model'
+    when divisible."""
+    ba = batch_axes(mesh)
+    msize = mesh.shape["model"]
+    bsize = _axis_size(mesh, ba)
+
+    def fn(path, leaf):
+        key = jax.tree_util.keystr(path)
+        nd = leaf.ndim
+        if nd >= 4 and ("'k'" in key or "'v'" in key):
+            # (B,KV,S,hd) possibly with leading stack dims
+            spec = [None] * nd
+            if leaf.shape[nd - 4] % bsize == 0:
+                spec[nd - 4] = ba
+            if leaf.shape[nd - 2] % msize == 0:
+                spec[nd - 2] = "model"
+            return NamedSharding(mesh, P(*spec))
+        if "wkv" in key and nd >= 3:
+            # (BH, dk, dv) (+leading stack): shard the fused batch*head dim
+            spec = [None] * nd
+            if leaf.shape[nd - 3] % bsize == 0:
+                spec[nd - 3] = ba
+            return NamedSharding(mesh, P(*spec))
+        if nd >= 2:
+            # recurrent misc: (B, ..., C) -> batch on lead dim if divisible,
+            # model on trailing feature dim if divisible
+            lead = 1 if nd > 2 and "groups" in key else 0
+            spec = [None] * nd
+            if leaf.shape[lead] % bsize == 0:
+                spec[lead] = ba
+            if leaf.shape[-1] % msize == 0 and nd - 1 != lead:
+                spec[-1] = "model"
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P(*(None,) * nd))
+
+    return jax.tree_util.tree_map_with_path(fn, state_shapes)
+
+
+def scalar_sharding(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,69 @@
+"""Production training driver: mesh-sharded train loop with checkpointing.
+
+On this CPU container it runs reduced configs (--smoke); the full configs are
+exercised by launch/dryrun.py (AOT lower+compile).  On a real multi-pod
+deployment: one process per host, `jax.distributed.initialize()`, the same
+mesh/sharding code, and the data pipeline shards per host.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma_2b --smoke --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma_2b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.configs import get_config
+    from repro.data.synthetic import SyntheticLM
+    from repro.train import optimizer as opt_lib
+    from repro.train.train_step import init_state, make_train_step
+
+    cfg = get_config(args.arch, reduced=args.smoke)
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch)
+    opt_cfg = opt_lib.AdamWConfig(warmup_steps=20, total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, microbatches=args.microbatches))
+
+    state = init_state(cfg, jax.random.key(0))
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if mgr is not None:
+        restored = mgr.restore_latest(state)
+        if restored:
+            state, meta = restored
+            start = meta["step"]
+            print(f"[restart] resumed at step {start}")
+
+    t0 = time.time()
+    for step, batch in data.batches(start):
+        if step >= args.steps:
+            break
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        state, metrics = step_fn(state, batch)
+        if (step + 1) % 10 == 0:
+            print(f"step {step+1:5d} loss {float(metrics['loss']):.4f} "
+                  f"{(step + 1 - start) / (time.time() - t0):.2f} it/s", flush=True)
+        if mgr is not None and (step + 1) % args.ckpt_every == 0:
+            mgr.save(step + 1, state, blocking=False)
+    if mgr is not None:
+        mgr.wait()
+
+
+if __name__ == "__main__":
+    main()

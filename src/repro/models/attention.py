@@ -1,0 +1,223 @@
+"""Attention layers: GQA/MQA, qk-norm, sliding-window/local, cross-attn,
+flash-style chunked computation, and KV-cache decode.
+
+Conventions:
+  x: (B, S, D); q: (B, S, H, hd); k/v: (B, S, KV, hd); cache k/v: (B, KV, S, hd)
+  (cache layout puts S after KV so the *sequence* axis can be sharded over the
+  'model' mesh axis for decode — GQA kv-head counts (1–8) don't divide 16;
+  see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, apply_rope, dense_init, rms_norm, split_keys
+
+NEG_INF = -2.3819763e38  # large negative for masking (bf16-safe)
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = split_keys(key, ["wq", "wk", "wv", "wo"])
+    p = {
+        "wq": dense_init(ks["wq"], (d, h, hd)),
+        "wk": dense_init(ks["wk"], (d, kv, hd)),
+        "wv": dense_init(ks["wv"], (d, kv, hd)),
+        "wo": dense_init(ks["wo"], (h, hd, d), in_axis=0),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    if cross:
+        p["gate"] = jnp.zeros((1,), jnp.float32)  # llama-3.2-vision tanh gate
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, x, kv_x=None):
+    """Project to q, k, v (kv_x: cross-attention context)."""
+    dt = cfg.compute_dtype
+    x = x.astype(dt)
+    kv_src = x if kv_x is None else kv_x.astype(dt)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dgk->btgk", kv_src, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dgk->btgk", kv_src, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def _gqa_scores(q, k, scale):
+    """(B,S,H,hd) x (B,T,KV,hd) -> (B, KV, H/KV, S, T) grouped scores."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    qg = q.reshape(b, s, kv, h // kv, hd)
+    return jnp.einsum("bskgd,btkd->bkgst", qg, k) * scale
+
+
+def _gqa_out(probs, v):
+    """(B,KV,G,S,T) x (B,T,KV,hd) -> (B,S,H,hd)."""
+    b, kv, g, s, t = probs.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, kv * g, v.shape[-1])
+
+
+def _causal_mask(s, t, offset: int = 0, window: int = 0):
+    """(s, t) boolean keep-mask. offset = (kv length − q length)."""
+    qi = jax.lax.broadcasted_iota(jnp.int32, (s, t), 0) + offset
+    kj = jax.lax.broadcasted_iota(jnp.int32, (s, t), 1)
+    keep = kj <= qi
+    if window:
+        keep &= kj > qi - window
+    return keep
+
+
+def attend_full(q, k, v, cfg: ModelConfig, *, causal=True, offset=0):
+    """Dense-scores attention (train/prefill path for moderate S)."""
+    scale = cfg.head_dim**-0.5
+    scores = _gqa_scores(q, k, scale).astype(jnp.float32)
+    if causal:
+        keep = _causal_mask(q.shape[1], k.shape[1], offset, cfg.swa_window)
+        scores = jnp.where(keep[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return _gqa_out(probs, v)
+
+
+def attend_chunked(q, k, v, cfg: ModelConfig, *, chunk: int, window: int = 0):
+    """Flash-style causal attention: static triangular loop over chunks.
+
+    Online-softmax accumulation over kv chunks keeps the live score block at
+    (B, KV, G, c, c) instead of (…, S, S) — the 32k-prefill memory fix.  The
+    triangular structure is *static* (python loop), so HLO contains only the
+    ~(n²/2) needed blocks and the roofline FLOP count stays honest (no wasted
+    upper-triangle compute).  With `window`, off-diagonal blocks outside the
+    sliding window are skipped entirely (mixtral/recurrentgemma local attn).
+    """
+    b, s, h, hd = q.shape
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    scale = hd**-0.5
+    kvh = k.shape[2]
+    outs = []
+    for i in range(n):
+        qi = q[:, i * chunk : (i + 1) * chunk]
+        m = jnp.full((b, kvh, h // kvh, chunk, 1), NEG_INF, jnp.float32)
+        l = jnp.zeros((b, kvh, h // kvh, chunk, 1), jnp.float32)
+        acc = jnp.zeros((b, kvh, h // kvh, chunk, hd), jnp.float32)
+        j_lo = 0
+        if window:
+            j_lo = max(0, (i * chunk - window + 1) // chunk)
+        for jc in range(j_lo, i + 1):
+            kj = k[:, jc * chunk : (jc + 1) * chunk]
+            vj = v[:, jc * chunk : (jc + 1) * chunk]
+            sc = _gqa_scores(qi, kj, scale).astype(jnp.float32)
+            if jc == i or window:
+                keep = _causal_mask(chunk, chunk, offset=(i - jc) * chunk, window=window)
+                sc = jnp.where(keep[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(axis=-1, keepdims=True))
+            p = jnp.exp(sc - m_new)
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(axis=-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum(
+                "bkgst,btkd->bkgsd", p.astype(q.dtype), vj
+            ).astype(jnp.float32)
+            m = m_new
+        out = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+        outs.append(out.reshape(b, chunk, h, hd))
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention(p, cfg: ModelConfig, x, positions, *, layer_window: int | None = None):
+    """Self-attention over a full sequence (train / prefill)."""
+    q, k, v = _project_qkv(p, cfg, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    window = cfg.swa_window if layer_window is None else layer_window
+    if cfg.attn_chunk and x.shape[1] > cfg.attn_chunk:
+        ctx = attend_chunked(q, k, v, cfg, chunk=cfg.attn_chunk, window=window)
+    else:
+        if layer_window is not None:
+            # local-attention layer in a hybrid stack
+            scale = cfg.head_dim**-0.5
+            scores = _gqa_scores(q, k, scale).astype(jnp.float32)
+            keep = _causal_mask(x.shape[1], x.shape[1], 0, window)
+            scores = jnp.where(keep[None, None, None], scores, NEG_INF)
+            probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+            ctx = _gqa_out(probs, v)
+        else:
+            ctx = attend_full(q, k, v, cfg, causal=True)
+    return jnp.einsum("bshk,hkd->bsd", ctx, p["wo"].astype(cfg.compute_dtype))
+
+
+def cross_attention(p, cfg: ModelConfig, x, context, *, gated=False):
+    """Cross-attention (whisper decoder / llama-vision image layers)."""
+    q, k, v = _project_qkv(p, cfg, x, kv_x=context)
+    scale = cfg.head_dim**-0.5
+    scores = _gqa_scores(q, k, scale).astype(jnp.float32)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    ctx = _gqa_out(probs, v)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"].astype(cfg.compute_dtype))
+    if gated:
+        out = jnp.tanh(p["gate"].astype(jnp.float32)).astype(out.dtype) * out
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode path (KV cache)
+# ---------------------------------------------------------------------------
+def init_kv_cache(cfg: ModelConfig, n_layers: int, batch: int, max_seq: int):
+    """Cache layout (layers, B, KV, S, hd); S shardable over 'model'."""
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    shape = (n_layers, batch, kv, max_seq, hd)
+    return {
+        "k": jnp.zeros(shape, cfg.compute_dtype),
+        "v": jnp.zeros(shape, cfg.compute_dtype),
+    }
+
+
+def decode_attention(p, cfg: ModelConfig, x, cache_k, cache_v, pos, *,
+                     layer_window: int | None = None):
+    """One-token self-attention against a cache.
+
+    Two cache layouts (DESIGN.md §4 / EXPERIMENTS.md §Perf):
+      * full:  cache (B, KV, S, hd), write at `pos`, mask to causality (and
+        the sliding window if any).
+      * ring (``cfg.ring_cache``, windowed layers only): cache (B, KV, W, hd)
+        with W = window; write at ``pos % W``.  Keys carry RoPE at their true
+        position, so slot order is irrelevant to the scores; every slot is in
+        the window by construction once warm (slots > pos masked while cold).
+        Cuts decode cache traffic S/W-fold for SWA/local-attention archs.
+
+    Args:
+      x: (B, 1, D); cache_k/v: (B, KV, S|W, hd); pos: scalar position.
+    Returns (out (B,1,D), new cache_k, new cache_v).
+    """
+    dt = cfg.compute_dtype
+    window = cfg.swa_window if layer_window is None else layer_window
+    ring = bool(window) and cfg.ring_cache
+    q, k_new, v_new = _project_qkv(p, cfg, x)
+    q = apply_rope(q, jnp.full((x.shape[0], 1), pos), cfg.rope_theta)
+    k_new = apply_rope(k_new, jnp.full((x.shape[0], 1), pos), cfg.rope_theta)
+    k_in = k_new.transpose(0, 2, 1, 3).astype(dt)  # (B, KV, 1, hd)
+    v_in = v_new.transpose(0, 2, 1, 3).astype(dt)
+    slot = (pos % cache_k.shape[2]) if ring else pos
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_in, slot, axis=2)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_in, slot, axis=2)
+
+    b, kv, s, hd = cache_k.shape
+    h = q.shape[2]
+    qg = q.reshape(b, 1, kv, h // kv, hd)
+    scores = jnp.einsum("bokgd,bktd->bkgot", qg, cache_k) * (hd**-0.5)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (s,), 0)
+    if ring:
+        keep = t_idx <= pos  # cold-start only; warm ring is fully valid
+    else:
+        keep = t_idx <= pos
+        if window:
+            keep &= t_idx > pos - window
+    scores = jnp.where(keep[None, None, None, None], scores.astype(jnp.float32), NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+    ctx = jnp.einsum("bkgot,bktd->bokgd", probs, cache_v).reshape(b, 1, h, hd)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"].astype(dt))
+    return out, cache_k, cache_v

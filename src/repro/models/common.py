@@ -1,0 +1,180 @@
+"""Shared model components: config, norms, RoPE, embeddings, initializers.
+
+Everything takes/returns plain pytrees (nested dicts of jnp arrays) — no
+framework dependency — so parameters stack cleanly for `lax.scan` over layers
+and shard with simple PartitionSpec rules (repro/launch/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description (one instance per assigned arch in configs/)."""
+
+    name: str
+    family: str  # dense | moe | hybrid | rwkv | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    act: str = "silu"  # silu | gelu | geglu-style gating handled by ffn
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    renorm_gates: bool = True
+    # token-stationary MoE: capacity axis sharded over (data, model); expert
+    # weights all-gathered per layer instead of all-reducing the (E,C,D)
+    # activation tensor — the §Perf fix for small-E archs (mixtral: E=8 < 16)
+    moe_token_stationary: bool = False
+    # --- attention variants ---
+    swa_window: int = 0  # sliding-window size; 0 = full causal
+    attn_chunk: int = 0  # 0 = dense scores; else flash-style chunked
+    ring_cache: bool = False  # windowed decode: ring-buffer KV (W slots) vs full S
+    # --- hybrid (RG-LRU / Griffin) ---
+    pattern: tuple = ()  # cyclic layer pattern, e.g. ("rglru","rglru","attn")
+    lru_width: int = 0
+    conv1d_width: int = 4
+    local_window: int = 2048  # hybrid local-attention window
+    # --- enc-dec (whisper) ---
+    enc_layers: int = 0
+    enc_seq: int = 1500  # precomputed frame embeddings (stub frontend)
+    # --- vlm ---
+    cross_attn_every: int = 0  # every k-th layer is cross-attn (0 = none)
+    img_tokens: int = 0
+    # --- numerics / execution ---
+    dtype: str = "bfloat16"  # matmul/activation dtype
+    param_dtype: str = "float32"  # master weights
+    remat: bool = True
+    remat_policy: str = "full"  # full (recompute all) | dots (save matmul outs)
+    scan_layers: bool = True  # False: python-unrolled (dry-run delta method)
+    logit_chunk: int = 512  # CE computed in seq chunks of this size
+    tie_embeddings: bool = False
+    embed_scale: float = 1.0  # sqrt(d_model) for gemma-family
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def n_params(self) -> int:
+        """Total parameter count (analytic; used for MODEL_FLOPS)."""
+        return param_count(self)
+
+    @property
+    def n_active_params(self) -> int:
+        """Active-per-token parameters (MoE: only routed experts)."""
+        return param_count(self, active_only=True)
+
+
+def param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Analytic parameter count, matching init_params leaf sizes."""
+    d, hd = cfg.d_model, cfg.head_dim
+    attn = d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd + cfg.n_heads * hd * d
+    if cfg.qk_norm:
+        attn += 2 * hd
+    gated = cfg.act in ("silu", "gelu_glu", "geglu", "swiglu")
+    dense_ffn = (3 if gated else 2) * d * cfg.d_ff
+    per_layer_norms = 2 * d
+    emb = cfg.vocab * d
+    out = 0
+    if cfg.family == "moe":
+        e_used = cfg.top_k if active_only else cfg.n_experts
+        ffn = e_used * (3 * d * cfg.d_ff) + d * cfg.n_experts
+        out = cfg.n_layers * (attn + ffn + per_layer_norms)
+    elif cfg.family == "rwkv":
+        # time-mix: r,k,v,g,o (5 d^2) + decay lora (2*64d) + bonus u (d)
+        tm = 5 * d * d + 2 * d * 64 + d
+        cm = 2 * d * cfg.d_ff + d * d  # channel-mix k/v + receptance gate
+        out = cfg.n_layers * (tm + cm + per_layer_norms)
+    elif cfg.family == "hybrid":
+        n_attn = sum(1 for i in range(cfg.n_layers) if _hybrid_kind(cfg, i) == "attn")
+        n_rec = cfg.n_layers - n_attn
+        lru = cfg.lru_width or d
+        rec = 2 * d * lru + lru * cfg.conv1d_width + 3 * lru + lru * d + 2 * lru * lru
+        out = n_attn * (attn + dense_ffn + per_layer_norms) + n_rec * (
+            rec + dense_ffn + per_layer_norms
+        )
+    elif cfg.family == "encdec":
+        enc = cfg.enc_layers * (attn + dense_ffn + per_layer_norms)
+        dec = cfg.n_layers * (2 * attn + dense_ffn + 3 * d)
+        out = enc + dec
+    elif cfg.family == "vlm":
+        n_cross = sum(1 for i in range(cfg.n_layers) if _is_cross_layer(cfg, i))
+        out = (cfg.n_layers - n_cross) * (attn + dense_ffn + per_layer_norms) + n_cross * (
+            attn + dense_ffn + per_layer_norms + d  # gate
+        )
+    else:  # dense
+        out = cfg.n_layers * (attn + dense_ffn + per_layer_norms)
+    out += emb + d  # embedding + final norm
+    if not cfg.tie_embeddings:
+        out += cfg.vocab * d  # untied unembed
+    return out
+
+
+def _hybrid_kind(cfg: ModelConfig, i: int) -> str:
+    return cfg.pattern[i % len(cfg.pattern)] if cfg.pattern else "attn"
+
+
+def _is_cross_layer(cfg: ModelConfig, i: int) -> bool:
+    # Llama-3.2-Vision style: cross-attn at layers 3, 8, 13, ... (every 5th).
+    k = cfg.cross_attn_every
+    return bool(k) and (i % k == k - 2)
+
+
+# ----------------------------------------------------------------------------
+# primitives
+# ----------------------------------------------------------------------------
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: (..., S, n, head_dim); positions: (..., S)."""
+    freqs = rope_freqs(x.shape[-1], theta)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(n: int, d: int) -> jnp.ndarray:
+    """Classic transformer sinusoidal table (whisper encoder)."""
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ----------------------------------------------------------------------------
+# init helpers
+# ----------------------------------------------------------------------------
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    fan_in = shape[in_axis] if in_axis >= 0 else int(jnp.prod(jnp.asarray(shape[:-1])))
+    scale = 1.0 / jnp.sqrt(jnp.float32(max(fan_in, 1)))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def split_keys(key, names):
+    ks = jax.random.split(key, len(names))
+    return dict(zip(names, ks))

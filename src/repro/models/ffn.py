@@ -1,0 +1,55 @@
+"""Feed-forward layers: gated (SwiGLU/GeGLU) and plain MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, split_keys
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+def is_gated(act: str) -> bool:
+    return act in ("silu", "geglu", "swiglu", "gelu_glu")
+
+
+def _gate_fn(act: str):
+    if act in ("silu", "swiglu"):
+        return _ACTS["silu"]
+    if act in ("geglu", "gelu_glu"):
+        return _ACTS["gelu"]
+    return _ACTS[act]
+
+
+def init_ffn(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    if is_gated(cfg.act):
+        ks = split_keys(key, ["w_gate", "w_up", "w_down"])
+        return {
+            "w_gate": dense_init(ks["w_gate"], (d, f)),
+            "w_up": dense_init(ks["w_up"], (d, f)),
+            "w_down": dense_init(ks["w_down"], (f, d)),
+        }
+    ks = split_keys(key, ["w_up", "w_down"])
+    return {
+        "w_up": dense_init(ks["w_up"], (d, f)),
+        "w_down": dense_init(ks["w_down"], (f, d)),
+    }
+
+
+def ffn(p: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    dt = cfg.compute_dtype
+    if is_gated(cfg.act):
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+        h = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+        h = _gate_fn(cfg.act)(g) * h
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+        h = _ACTS[cfg.act](h)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt))

@@ -1,0 +1,71 @@
+"""Unified model API — family dispatch for the assigned architecture pool.
+
+  init_params(cfg, key)                 -> params pytree
+  forward_loss(params, cfg, batch)      -> scalar loss  (train)
+  prefill_logits(params, cfg, batch)    -> (B, V) last-position logits
+  init_decode_state(cfg, batch, seq)    -> decode-state pytree
+  decode_step(params, cfg, state, ...)  -> (logits, new state)   (serve)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import transformer, whisper
+from repro.models.common import ModelConfig
+
+
+def init_params(cfg: ModelConfig, key):
+    if cfg.family == "encdec":
+        return whisper.init_params(cfg, key)
+    return transformer.init_params(cfg, key)
+
+
+def forward_loss(params, cfg: ModelConfig, batch):
+    if cfg.family == "encdec":
+        return whisper.forward_loss(params, cfg, batch)
+    return transformer.forward_loss(params, cfg, batch)
+
+
+def prefill_logits(params, cfg: ModelConfig, batch):
+    """Inference-prefill: full-sequence forward, last-position logits.
+
+    (Cache emission during prefill is byte-traffic ≈ the KV cache size and is
+    accounted analytically in the roofline notes — see EXPERIMENTS.md.)
+    """
+    if cfg.family == "encdec":
+        enc_out = whisper.encode(params, cfg, batch["frames"])
+        import jax
+
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cfg.compute_dtype)
+        positions = jnp.broadcast_to(
+            jnp.arange(batch["tokens"].shape[1], dtype=jnp.int32)[None],
+            batch["tokens"].shape,
+        )
+        def layer(lp, x):
+            return whisper._dec_layer(lp, cfg, x, positions, enc_out)
+
+        fn = jax.checkpoint(layer) if cfg.remat else layer
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(lambda c, lp: (fn(lp, c), None), x, params["dec"])
+        else:
+            for i in range(cfg.n_layers):
+                lp = jax.tree_util.tree_map(lambda a: a[i], params["dec"])
+                x = fn(lp, x)
+        hidden = whisper.rms_norm(x, params["final_norm"])
+        return transformer.last_logits(params, cfg, hidden)
+    ctx = batch.get("img")
+    hidden = transformer.backbone(params, cfg, batch["tokens"], ctx=ctx)
+    return transformer.last_logits(params, cfg, hidden)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int):
+    if cfg.family == "encdec":
+        return whisper.init_decode_state(cfg, batch, max_seq)
+    return transformer.init_decode_state(cfg, batch, max_seq)
+
+
+def decode_step(params, cfg: ModelConfig, state, token, pos, ctx=None):
+    """ctx: encoder output (encdec) or image embeddings (vlm); else None."""
+    if cfg.family == "encdec":
+        return whisper.decode_step(params, cfg, state, token, pos, ctx)
+    return transformer.decode_step(params, cfg, state, token, pos, ctx=ctx)

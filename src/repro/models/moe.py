@@ -1,0 +1,120 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch (EP/TP-shardable).
+
+Design (DESIGN.md §3): router → top-k → flatten assignments → stable sort by
+expert id → rank-within-expert → capacity-bounded slotting → gather tokens
+into (E, C, D) → per-expert gated-FFN einsum → weighted scatter-add combine.
+
+Unlike the one-hot GShard dispatch einsum (whose FLOPs are quadratic in
+tokens), sort-based dispatch is gather/scatter (memory-bound) and the expert
+compute is exactly ``2·T·top_k·capacity_factor·(3·D·F)`` — so the roofline
+compute term honestly reflects *active* parameters.  Capacity overflow drops
+tokens (standard "dropping" MoE); the residual stream carries them unchanged.
+
+Sharding intent: experts over the 'model' axis (EP) when E % model == 0
+(qwen3-moe: 128/16), else intra-expert TP on F (mixtral: E=8 < 16).
+Token/capacity axes follow the data axis.  The argsort over T·k assignments
+is the main collective cost at scale — measured in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, split_keys
+from repro.models.ffn import _gate_fn
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = split_keys(key, ["router", "w_gate", "w_up", "w_down"])
+    return {
+        "router": dense_init(ks["router"], (d, e)),
+        "w_gate": dense_init(ks["w_gate"], (e, d, f), in_axis=1),
+        "w_up": dense_init(ks["w_up"], (e, d, f), in_axis=1),
+        "w_down": dense_init(ks["w_down"], (e, f, d), in_axis=1),
+    }
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(c, cfg.top_k)
+
+
+def moe_ffn(p: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, D) -> (B, S, D)."""
+    dt = cfg.compute_dtype
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    c = capacity(cfg, t)
+    xt = x.reshape(t, d)
+
+    # --- route (f32 for numerics) ---
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (t, k)
+    if cfg.renorm_gates:
+        gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # --- sort-based dispatch ---
+    flat_expert = expert_idx.reshape(-1)  # (t*k,)
+    flat_token = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    flat_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_expert, stable=True)  # (t*k,)
+    sorted_expert = flat_expert[order]
+    # rank within expert: position − first-occurrence index of that expert
+    first = jnp.searchsorted(sorted_expert, sorted_expert, side="left")
+    rank = jnp.arange(t * k, dtype=jnp.int32) - first.astype(jnp.int32)
+    keep = rank < c
+    slot = jnp.where(keep, sorted_expert * c + rank, e * c)  # e*c = dropped bin
+
+    # slot -> source token / gate (scatter into E*C+1 buffers, drop the tail)
+    token_for_slot = jnp.zeros((e * c + 1,), jnp.int32).at[slot].set(
+        flat_token[order], mode="drop"
+    )[: e * c]
+    gate_for_slot = jnp.zeros((e * c + 1,), jnp.float32).at[slot].set(
+        jnp.where(keep, flat_gate[order], 0.0), mode="drop"
+    )[: e * c]
+    valid = jnp.zeros((e * c + 1,), jnp.bool_).at[slot].set(keep, mode="drop")[: e * c]
+
+    x_g = jnp.take(xt, token_for_slot, axis=0).reshape(e, c, d)
+    x_g = jnp.where(valid.reshape(e, c, 1), x_g, 0).astype(dt)
+
+    def tokstat(z):
+        """2-D MoE sharding: pin the capacity axis to 'data' while the expert
+        f-dim stays on 'model' — the (E, C, ·) tensors then carry BOTH axes
+        and the w_down psum payload shrinks n_data-fold.  (Sharding C over
+        (data, model) jointly conflicts with the f-sharded weights and makes
+        GSPMD replicate — measured, see §Perf.)"""
+        if not cfg.moe_token_stationary:
+            return z
+        from jax.sharding import PartitionSpec as P
+
+        return jax.lax.with_sharding_constraint(z, P(None, "data", None))
+
+    # --- expert compute (exact active FLOPs) ---
+    x_g = tokstat(x_g)
+    g = jnp.einsum("ecd,edf->ecf", x_g, p["w_gate"].astype(dt))
+    h = jnp.einsum("ecd,edf->ecf", x_g, p["w_up"].astype(dt))
+    h = tokstat(_gate_fn(cfg.act)(g) * h)
+    y_g = tokstat(jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dt)))
+
+    # --- combine (gate-weighted scatter-add) ---
+    y_flat = (y_g.reshape(e * c, d).astype(jnp.float32)) * gate_for_slot[:, None]
+    out = jnp.zeros((t, d), jnp.float32).at[token_for_slot].add(
+        jnp.where(valid[:, None], y_flat, 0.0)
+    )
+    return out.reshape(b, s, d).astype(dt)
+
+
+def router_load(cfg: ModelConfig, x: jnp.ndarray, p: dict):
+    """Diagnostics: per-expert assignment counts and dropped-token fraction."""
+    b, s, d = x.shape
+    t = b * s
+    logits = jnp.einsum("td,de->te", x.reshape(t, d).astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    _, expert_idx = jax.lax.top_k(jax.nn.softmax(logits, -1), cfg.top_k)
+    counts = jnp.bincount(expert_idx.reshape(-1), length=cfg.n_experts)
+    c = capacity(cfg, t)
+    dropped = jnp.maximum(counts - c, 0).sum() / (t * cfg.top_k)
+    return counts, dropped

@@ -1,0 +1,127 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block:  y = W_out( GeLU(W_gmlp x) ⊙ RG-LRU(conv1d(W_x x)) )
+
+RG-LRU per channel::
+
+    r_t = sigmoid(W_r u_t + b_r)        # recurrence gate
+    i_t = sigmoid(W_i u_t + b_i)        # input gate
+    a_t = exp(c * r_t * log(sigmoid(Lambda)))     (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Train/prefill uses `jax.lax.associative_scan` (log-depth, parallelizes over
+the sequence — the sub-quadratic path that makes `long_500k` feasible);
+decode carries `h` plus the causal-conv tail.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, split_keys
+
+_C = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    lru = cfg.lru_width or d
+    w = cfg.conv1d_width
+    ks = split_keys(key, ["w_x", "w_gmlp", "conv", "w_r", "w_i", "lam", "w_out"])
+    return {
+        "w_x": dense_init(ks["w_x"], (d, lru)),
+        "w_gmlp": dense_init(ks["w_gmlp"], (d, lru)),
+        "conv_w": dense_init(ks["conv"], (w, lru)),
+        "conv_b": jnp.zeros((lru,), jnp.float32),
+        "w_r": dense_init(ks["w_r"], (lru, lru)),
+        "b_r": jnp.zeros((lru,), jnp.float32),
+        "w_i": dense_init(ks["w_i"], (lru, lru)),
+        "b_i": jnp.zeros((lru,), jnp.float32),
+        # Lambda init so that a = sigmoid(lam) in ~[0.9, 0.999]
+        "lam": jnp.linspace(2.2, 6.9, lru, dtype=jnp.float32),
+        "w_out": dense_init(ks["w_out"], (lru, d)),
+    }
+
+
+def causal_conv1d(u, conv_w, conv_b, state=None):
+    """Depthwise causal conv. u: (B,S,C), conv_w: (W,C).
+
+    state: (B, W-1, C) trailing inputs from the previous segment (decode).
+    Returns (y, new_state).
+    """
+    w = conv_w.shape[0]
+    if state is None:
+        state = jnp.zeros((u.shape[0], w - 1, u.shape[-1]), u.dtype)
+    ext = jnp.concatenate([state, u], axis=1)  # (B, S+W-1, C)
+    y = sum(
+        ext[:, i : i + u.shape[1]] * conv_w[i].astype(u.dtype) for i in range(w)
+    ) + conv_b.astype(u.dtype)
+    return y, ext[:, -(w - 1) :]
+
+
+def _gates(p, u, dt):
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsc,ck->bsk", u, p["w_r"].astype(dt)).astype(jnp.float32)
+        + p["b_r"]
+    )
+    i = jax.nn.sigmoid(
+        jnp.einsum("bsc,ck->bsk", u, p["w_i"].astype(dt)).astype(jnp.float32)
+        + p["b_i"]
+    )
+    log_a = -jax.nn.softplus(-p["lam"])  # log sigmoid(lam)  (f32)
+    a = jnp.exp(_C * r * log_a)  # (B,S,C) f32
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * i * u.astype(jnp.float32)
+    return a, gated
+
+
+def rglru_scan(p, cfg: ModelConfig, u, h0=None):
+    """Sequence-parallel RG-LRU. u: (B,S,C). Returns (y (B,S,C), h_last)."""
+    dt = cfg.compute_dtype
+    a, bterm = _gates(p, u, dt)
+    if h0 is not None:
+        # fold initial state in as a virtual step: h_t = (prod a) h0 + ...
+        bterm = bterm.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_c, h = jax.lax.associative_scan(combine, (a, bterm), axis=1)
+    return h.astype(dt), h[:, -1]
+
+
+def rglru_step(p, cfg: ModelConfig, u_t, h):
+    """One decode step. u_t: (B,1,C); h: (B,C). Returns (y (B,1,C), h)."""
+    a, bterm = _gates(p, u_t, cfg.compute_dtype)
+    h = a[:, 0] * h.astype(jnp.float32) + bterm[:, 0]
+    return h[:, None].astype(cfg.compute_dtype), h
+
+
+def rglru_block(p, cfg: ModelConfig, x, state=None):
+    """Full Griffin recurrent block.
+
+    x: (B,S,D).  state: None (train/prefill) or dict(conv, h) for decode.
+    Returns (y (B,S,D), new_state).
+    """
+    dt = cfg.compute_dtype
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dc->bsc", x, p["w_gmlp"].astype(dt)), approximate=True
+    )
+    u = jnp.einsum("bsd,dc->bsc", x, p["w_x"].astype(dt))
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = causal_conv1d(u, p["conv_w"], p["conv_b"], conv_state)
+    if state is None:
+        h_seq, h_last = rglru_scan(p, cfg, u)
+    else:
+        h_seq, h_last = rglru_step(p, cfg, u, state["h"])
+    y = jnp.einsum("bsc,cd->bsd", gate * h_seq, p["w_out"].astype(dt))
+    return y, {"conv": new_conv, "h": h_last}
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int):
+    lru = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, lru), cfg.compute_dtype),
+        "h": jnp.zeros((batch, lru), jnp.float32),
+    }

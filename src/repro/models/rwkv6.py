@@ -1,0 +1,146 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free token mixing via a
+data-dependent-decay linear recurrence + squared-ReLU channel mixing.
+
+Per layer:
+  time-mix: token-shift lerp -> r,k,v,g projections + LoRA decay w_t
+            -> wkv6 recurrence (Pallas kernel on TPU; jnp oracle elsewhere)
+            -> per-head RMS "group norm" -> SiLU(g) gate -> output proj
+  channel-mix: token-shift lerp -> relu(W_k x)^2 -> W_v, gated by sigmoid(W_r x)
+
+Decode state per layer: time-mix shift (B,D), channel-mix shift (B,D) and the
+wkv state (B,H,dk,dv) — O(1) in sequence length, which is why `long_500k`
+runs for this family (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, split_keys
+
+LORA_RANK = 64
+HEAD_DIM = 64  # dk = dv = 64 (RWKV-6 default)
+
+
+def heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // HEAD_DIM
+
+
+def init_rwkv_layer(key, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    h = heads(cfg)
+    ks = split_keys(
+        key,
+        ["w_r", "w_k", "w_v", "w_g", "w_o", "lora_a", "lora_b", "cm_k", "cm_v", "cm_r"],
+    )
+    mu = lambda: jnp.full((d,), 0.5, jnp.float32)
+    return {
+        "tm": {
+            "mu_r": mu(), "mu_k": mu(), "mu_v": mu(), "mu_w": mu(), "mu_g": mu(),
+            "w_r": dense_init(ks["w_r"], (d, d)),
+            "w_k": dense_init(ks["w_k"], (d, d)),
+            "w_v": dense_init(ks["w_v"], (d, d)),
+            "w_g": dense_init(ks["w_g"], (d, d)),
+            "w_o": dense_init(ks["w_o"], (d, d)),
+            "w0": jnp.full((d,), -3.0, jnp.float32),  # base decay (slow)
+            "lora_a": dense_init(ks["lora_a"], (d, LORA_RANK)),
+            "lora_b": dense_init(ks["lora_b"], (LORA_RANK, d)),
+            "u": jnp.zeros((h, HEAD_DIM), jnp.float32),
+            "ln_scale": jnp.zeros((d,), jnp.float32),
+        },
+        "cm": {
+            "mu_k": mu(), "mu_r": mu(),
+            "w_k": dense_init(ks["cm_k"], (d, f)),
+            "w_v": dense_init(ks["cm_v"], (f, d)),
+            "w_r": dense_init(ks["cm_r"], (d, d)),
+        },
+    }
+
+
+def _shift(x, last):
+    """Token shift: x_{t-1} with `last` filling t=0. Returns (shifted, new_last)."""
+    prev = jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+    return prev, x[:, -1]
+
+
+def _lerp(x, prev, mu):
+    return x + (prev - x) * mu.astype(x.dtype)
+
+
+def _head_rms(x, scale, h):
+    b, s, d = x.shape
+    xh = x.reshape(b, s, h, d // h).astype(jnp.float32)
+    var = jnp.mean(jnp.square(xh), axis=-1, keepdims=True)
+    xh = xh * jax.lax.rsqrt(var + 1e-6)
+    return (xh.reshape(b, s, d) * (1.0 + scale)).astype(x.dtype)
+
+
+def time_mix(p, cfg: ModelConfig, x, shift_last, wkv_state, use_pallas=False):
+    """x: (B,S,D). Returns (out, new_shift_last, new_wkv_state)."""
+    dt = cfg.compute_dtype
+    b, s, d = x.shape
+    h = heads(cfg)
+    prev, new_last = _shift(x, shift_last)
+    xr = _lerp(x, prev, p["mu_r"])
+    xk = _lerp(x, prev, p["mu_k"])
+    xv = _lerp(x, prev, p["mu_v"])
+    xw = _lerp(x, prev, p["mu_w"])
+    xg = _lerp(x, prev, p["mu_g"])
+
+    r = jnp.einsum("bsd,de->bse", xr, p["w_r"].astype(dt))
+    k = jnp.einsum("bsd,de->bse", xk, p["w_k"].astype(dt))
+    v = jnp.einsum("bsd,de->bse", xv, p["w_v"].astype(dt))
+    g = jnp.einsum("bsd,de->bse", xg, p["w_g"].astype(dt))
+    # data-dependent decay (f32): w_t = exp(-exp(w0 + tanh(x A) B))
+    dd = jnp.einsum(
+        "bsr,re->bse",
+        jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["lora_a"].astype(dt))),
+        p["lora_b"].astype(dt),
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(p["w0"] + dd))  # in (0,1)
+
+    # reshape to (B*H, S, 64) slabs for the recurrence
+    def to_heads(z):
+        return (
+            z.reshape(b, s, h, HEAD_DIM).transpose(0, 2, 1, 3).reshape(b * h, s, HEAD_DIM)
+        )
+
+    from repro.kernels import ops as kops
+
+    u = jnp.broadcast_to(p["u"][None], (b, h, HEAD_DIM)).reshape(b * h, HEAD_DIM)
+    o, new_state = kops.wkv6(
+        to_heads(r).astype(jnp.float32),
+        to_heads(k).astype(jnp.float32),
+        to_heads(v).astype(jnp.float32),
+        to_heads(w),
+        u,
+        wkv_state,
+        use_pallas=use_pallas,
+    )
+    o = (
+        o.reshape(b, h, s, HEAD_DIM).transpose(0, 2, 1, 3).reshape(b, s, d).astype(dt)
+    )
+    o = _head_rms(o, p["ln_scale"], h)
+    o = o * jax.nn.silu(g)
+    return jnp.einsum("bse,ed->bsd", o, p["w_o"].astype(dt)), new_last, new_state
+
+
+def channel_mix(p, cfg: ModelConfig, x, shift_last):
+    dt = cfg.compute_dtype
+    prev, new_last = _shift(x, shift_last)
+    xk = _lerp(x, prev, p["mu_k"])
+    xr = _lerp(x, prev, p["mu_r"])
+    kk = jnp.einsum("bsd,df->bsf", xk, p["w_k"].astype(dt))
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["w_v"].astype(dt))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["w_r"].astype(dt)))
+    return rr * vv, new_last
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int):
+    h = heads(cfg)
+    return {
+        "tm_last": jnp.zeros((batch, cfg.d_model), cfg.compute_dtype),
+        "cm_last": jnp.zeros((batch, cfg.d_model), cfg.compute_dtype),
+        "wkv": jnp.zeros((batch * h, HEAD_DIM, HEAD_DIM), jnp.float32),
+    }

@@ -1,0 +1,327 @@
+"""Decoder-only LM assembly for the dense / moe / hybrid / rwkv / vlm families.
+
+Layer-kind plan: each architecture expands to a cyclic *pattern* of layer
+kinds (dense: ("attn",); mixtral: ("attn",) with SWA; recurrentgemma:
+("rglru","rglru","attn_local"); vlm: ("attn","attn","attn","cross","attn")).
+Layers are stacked into `n_layers // len(pattern)` scanned *groups* plus an
+unscanned tail of `n_layers % len(pattern)` layers — identical parameter
+layout whether executed with `lax.scan` (production) or a python loop
+(`scan_layers=False`, used by the dry-run delta method, DESIGN.md §7).
+
+Params pytree:
+  {"embed": (V,D), "groups": {<kind_i>: stacked (G, ...)}, "tail": [layer...],
+   "final_norm": (D,), "unembed": (D,V)}
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import ffn as ffn_lib
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import rwkv6 as rwkv_lib
+from repro.models.common import ModelConfig, dense_init, rms_norm, split_keys
+
+
+# ---------------------------------------------------------------------------
+# layer plans
+# ---------------------------------------------------------------------------
+def layer_pattern(cfg: ModelConfig) -> tuple:
+    if cfg.family == "hybrid":
+        return cfg.pattern or ("rglru", "rglru", "attn_local")
+    if cfg.family == "vlm":
+        k = cfg.cross_attn_every or 5
+        return tuple("cross" if i == k - 2 else "attn" for i in range(k))
+    if cfg.family == "rwkv":
+        return ("rwkv",)
+    if cfg.family == "moe":
+        return ("attn_moe",)
+    return ("attn",)
+
+
+def plan(cfg: ModelConfig):
+    pat = layer_pattern(cfg)
+    return pat, cfg.n_layers // len(pat), cfg.n_layers % len(pat)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_layer(key, cfg: ModelConfig, kind: str) -> dict:
+    d = cfg.d_model
+    ks = split_keys(key, ["a", "b"])
+    norm = lambda: jnp.zeros((d,), jnp.float32)
+    if kind == "rwkv":
+        p = rwkv_lib.init_rwkv_layer(ks["a"], cfg)
+        p["norm1"] = norm()
+        p["norm2"] = norm()
+        return p
+    if kind == "rglru":
+        return {"norm1": norm(), "mix": rglru_lib.init_rglru(ks["a"], cfg),
+                "norm2": norm(), "ffn": ffn_lib.init_ffn(ks["b"], cfg)}
+    if kind in ("attn", "attn_local"):
+        return {"norm1": norm(), "attn": attn_lib.init_attention(ks["a"], cfg),
+                "norm2": norm(), "ffn": ffn_lib.init_ffn(ks["b"], cfg)}
+    if kind == "attn_moe":
+        return {"norm1": norm(), "attn": attn_lib.init_attention(ks["a"], cfg),
+                "norm2": norm(), "moe": moe_lib.init_moe(ks["b"], cfg)}
+    if kind == "cross":
+        return {"norm1": norm(),
+                "attn": attn_lib.init_attention(ks["a"], cfg, cross=True),
+                "norm2": norm(), "ffn": ffn_lib.init_ffn(ks["b"], cfg)}
+    raise ValueError(kind)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    pat, n_groups, tail = plan(cfg)
+    ks = split_keys(key, ["embed", "groups", "tail", "unembed"])
+    d = cfg.d_model
+
+    def group_init(gkey):
+        gks = jax.random.split(gkey, len(pat))
+        return {f"{i}_{kind}": _init_layer(gks[i], cfg, kind)
+                for i, kind in enumerate(pat)}
+
+    params: dict[str, Any] = {
+        "embed": dense_init(ks["embed"], (cfg.vocab, d), in_axis=1),
+        "final_norm": jnp.zeros((d,), jnp.float32),
+    }
+    if n_groups:
+        gkeys = jax.random.split(ks["groups"], n_groups)
+        params["groups"] = jax.vmap(group_init)(gkeys)
+    if tail:
+        tkeys = jax.random.split(ks["tail"], tail)
+        params["tail"] = [
+            _init_layer(tkeys[i], cfg, pat[i % len(pat)]) for i in range(tail)
+        ]
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(ks["unembed"], (d, cfg.vocab))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (full-sequence: train / prefill)
+# ---------------------------------------------------------------------------
+def _apply_layer(lp, cfg: ModelConfig, kind: str, x, positions, ctx, state):
+    """One layer. state: None (train) or this layer's decode state."""
+    new_state = state
+    if kind == "rwkv":
+        h = rms_norm(x, lp["norm1"])
+        if state is None:
+            st = rwkv_lib.init_rwkv_state(cfg, x.shape[0])
+        else:
+            st = state
+        o, tm_last, wkv = rwkv_lib.time_mix(
+            lp["tm"], cfg, h, st["tm_last"], st["wkv"]
+        )
+        x = x + o
+        h = rms_norm(x, lp["norm2"])
+        o, cm_last = rwkv_lib.channel_mix(lp["cm"], cfg, h, st["cm_last"])
+        x = x + o
+        new_state = {"tm_last": tm_last, "cm_last": cm_last, "wkv": wkv}
+    elif kind == "rglru":
+        h = rms_norm(x, lp["norm1"])
+        o, new_state = rglru_lib.rglru_block(lp["mix"], cfg, h, state)
+        x = x + o
+        x = x + ffn_lib.ffn(lp["ffn"], cfg, rms_norm(x, lp["norm2"]))
+    elif kind in ("attn", "attn_local"):
+        window = cfg.local_window if kind == "attn_local" else None
+        h = rms_norm(x, lp["norm1"])
+        x = x + attn_lib.attention(lp["attn"], cfg, h, positions, layer_window=window)
+        x = x + ffn_lib.ffn(lp["ffn"], cfg, rms_norm(x, lp["norm2"]))
+    elif kind == "attn_moe":
+        h = rms_norm(x, lp["norm1"])
+        x = x + attn_lib.attention(lp["attn"], cfg, h, positions)
+        x = x + moe_lib.moe_ffn(lp["moe"], cfg, rms_norm(x, lp["norm2"]))
+    elif kind == "cross":
+        h = rms_norm(x, lp["norm1"])
+        x = x + attn_lib.cross_attention(lp["attn"], cfg, h, ctx, gated=True)
+        x = x + ffn_lib.ffn(lp["ffn"], cfg, rms_norm(x, lp["norm2"]))
+    else:
+        raise ValueError(kind)
+    return x, new_state
+
+
+def _group_fn(cfg, pat):
+    def fn(x, gparams, positions, ctx):
+        for i, kind in enumerate(pat):
+            x, _ = _apply_layer(gparams[f"{i}_{kind}"], cfg, kind, x, positions, ctx, None)
+        return x
+
+    return fn
+
+
+def backbone(params, cfg: ModelConfig, tokens, ctx=None):
+    """Token ids -> final hidden states (B,S,D)."""
+    pat, n_groups, tail = plan(cfg)
+    dt = cfg.compute_dtype
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt) * cfg.embed_scale
+    positions = jnp.broadcast_to(
+        jnp.arange(tokens.shape[1], dtype=jnp.int32)[None], tokens.shape
+    )
+    gfn = _group_fn(cfg, pat)
+    if cfg.remat:
+        policy = (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            if cfg.remat_policy == "dots" else None
+        )
+        gfn = jax.checkpoint(gfn, policy=policy)
+    if n_groups:
+        if cfg.scan_layers:
+            def body(carry, gp):
+                return gfn(carry, gp, positions, ctx), None
+
+            x, _ = jax.lax.scan(body, x, params["groups"])
+        else:
+            for g in range(n_groups):
+                gp = jax.tree_util.tree_map(lambda a: a[g], params["groups"])
+                x = gfn(x, gp, positions, ctx)
+    for i, lp in enumerate(params.get("tail", [])):
+        x, _ = _apply_layer(lp, cfg, pat[i % len(pat)], x, positions, ctx, None)
+    return rms_norm(x, params["final_norm"])
+
+
+def unembed_matrix(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+def lm_loss(params, cfg: ModelConfig, hidden, labels):
+    """Chunked-softmax cross-entropy — never materializes (B,S,V) at once.
+
+    Operands stay bf16 (MXU-native); accumulation is f32 via
+    preferred_element_type, so only the (B, chunk, V) logits chunk is ever
+    f32 — this halves the CE working set vs casting hidden/unembed to f32.
+    """
+    b, s, d = hidden.shape
+    w = unembed_matrix(params, cfg).astype(cfg.compute_dtype)
+    chunk = min(cfg.logit_chunk or s, s)
+    n = (s + chunk - 1) // chunk
+    total = jnp.float32(0)
+    count = jnp.float32(0)
+    for i in range(n):
+        h = hidden[:, i * chunk : (i + 1) * chunk].astype(cfg.compute_dtype)
+        y = labels[:, i * chunk : (i + 1) * chunk]
+        logits = jnp.einsum(
+            "bsd,dv->bsv", h, w, preferred_element_type=jnp.float32
+        )
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        total = total + jnp.sum(lse - gold)
+        count = count + y.size
+    return total / count
+
+
+def forward_loss(params, cfg: ModelConfig, batch) -> jnp.ndarray:
+    ctx = batch.get("img") if isinstance(batch, dict) else None
+    hidden = backbone(params, cfg, batch["tokens"], ctx=ctx)
+    return lm_loss(params, cfg, hidden, batch["labels"])
+
+
+def last_logits(params, cfg: ModelConfig, hidden):
+    w = unembed_matrix(params, cfg).astype(cfg.compute_dtype)
+    return jnp.einsum(
+        "bd,dv->bv", hidden[:, -1].astype(cfg.compute_dtype), w,
+        preferred_element_type=jnp.float32,
+    )
+
+
+# ---------------------------------------------------------------------------
+# decode (single-token serve step)
+# ---------------------------------------------------------------------------
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int, ctx_len: int = 0):
+    """Per-layer decode state, stacked like the params (groups + tail)."""
+    pat, n_groups, tail = plan(cfg)
+
+    def one(kind):
+        if kind == "rwkv":
+            return rwkv_lib.init_rwkv_state(cfg, batch)
+        if kind == "rglru":
+            return rglru_lib.init_rglru_state(cfg, batch)
+        kv, hd = cfg.n_kv_heads, cfg.head_dim
+        window = cfg.local_window if kind == "attn_local" else cfg.swa_window
+        s = max_seq
+        if window and cfg.ring_cache:
+            s = min(max_seq, window)  # ring buffer (§Perf optimization)
+        return {
+            "k": jnp.zeros((batch, kv, s, hd), cfg.compute_dtype),
+            "v": jnp.zeros((batch, kv, s, hd), cfg.compute_dtype),
+        }
+
+    def group_state():
+        return {f"{i}_{kind}": one(kind) for i, kind in enumerate(pat)}
+
+    state = {}
+    if n_groups:
+        state["groups"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape), group_state()
+        )
+    if tail:
+        state["tail"] = [one(pat[i % len(pat)]) for i in range(tail)]
+    return state
+
+
+def _decode_layer(lp, cfg: ModelConfig, kind: str, x, pos, ctx, st):
+    if kind in ("rwkv", "rglru"):
+        return _apply_layer(lp, cfg, kind, x, None, ctx, st)
+    if kind == "cross":
+        h = rms_norm(x, lp["norm1"])
+        x = x + attn_lib.cross_attention(lp["attn"], cfg, h, ctx, gated=True)
+        x = x + ffn_lib.ffn(lp["ffn"], cfg, rms_norm(x, lp["norm2"]))
+        return x, st
+    window = cfg.local_window if kind == "attn_local" else None
+    h = rms_norm(x, lp["norm1"])
+    o, ck, cv = attn_lib.decode_attention(
+        lp["attn"], cfg, h, st["k"], st["v"], pos, layer_window=window
+    )
+    x = x + o
+    if kind == "attn_moe":
+        x = x + moe_lib.moe_ffn(lp["moe"], cfg, rms_norm(x, lp["norm2"]))
+    else:
+        x = x + ffn_lib.ffn(lp["ffn"], cfg, rms_norm(x, lp["norm2"]))
+    return x, {"k": ck, "v": cv}
+
+
+def decode_step(params, cfg: ModelConfig, state, token, pos, ctx=None):
+    """One serve step: token (B,1) at scalar position `pos`.
+
+    Returns (logits (B,V) f32, new_state).
+    """
+    pat, n_groups, tail = plan(cfg)
+    dt = cfg.compute_dtype
+    x = jnp.take(params["embed"], token, axis=0).astype(dt) * cfg.embed_scale
+
+    def gbody(x, inputs):
+        gp, gst = inputs
+        new = {}
+        for i, kind in enumerate(pat):
+            nm = f"{i}_{kind}"
+            x, new[nm] = _decode_layer(gp[nm], cfg, kind, x, pos, ctx, gst[nm])
+        return x, new
+
+    if n_groups:
+        if cfg.scan_layers:
+            x, new_gstate = jax.lax.scan(gbody, x, (params["groups"], state["groups"]))
+        else:
+            outs = []
+            for g in range(n_groups):
+                gp = jax.tree_util.tree_map(lambda a: a[g], params["groups"])
+                gst = jax.tree_util.tree_map(lambda a: a[g], state["groups"])
+                x, ns = gbody(x, (gp, gst))
+                outs.append(ns)
+            new_gstate = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *outs)
+        state = dict(state, groups=new_gstate)
+    if tail:
+        new_tail = []
+        for i, lp in enumerate(params["tail"]):
+            x, ns = _decode_layer(lp, cfg, pat[i % len(pat)], x, pos, ctx, state["tail"][i])
+            new_tail.append(ns)
+        state = dict(state, tail=new_tail)
+    hidden = rms_norm(x, params["final_norm"])
+    return last_logits(params, cfg, hidden), state

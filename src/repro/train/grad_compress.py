@@ -1,0 +1,57 @@
+"""int8 gradient compression with error feedback, for DP all-reduce.
+
+At multi-pod scale the inter-pod (DCN / slow-link) gradient all-reduce can
+dominate step time.  Compressing f32/bf16 gradients to int8 with a per-tensor
+scale cuts those bytes 4x/2x; the quantization error is fed back into the
+next step (error-feedback SGD, Seide et al. 2014 / Karimireddy et al. 2019),
+which keeps convergence unchanged to first order.
+
+Usage pattern (shard_map over the 'pod' axis — the slow links):
+
+    g_sum, new_err = compressed_psum(g, err, axis_name="pod")
+
+The intra-pod reduction stays full-precision (fast ICI); only the hierarchy
+level you name pays the quantization.  tests/test_train.py checks the
+error-feedback contraction property numerically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray):
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(g: jnp.ndarray, err: jnp.ndarray):
+    """Quantize (g + carried error); return (q, scale, new_err)."""
+    target = g.astype(jnp.float32) + err
+    q, scale = quantize_int8(target)
+    new_err = target - dequantize(q, scale)
+    return q, scale, new_err
+
+
+def compressed_psum(g: jnp.ndarray, err: jnp.ndarray, axis_name: str):
+    """int8 all-reduce over `axis_name` with error feedback.
+
+    Must be called inside `shard_map`/`pmap` with the named axis.  The int8
+    payload is summed in int32 (no overflow for <= 2^23 participants); scales
+    are max-reduced so every participant dequantizes identically.
+    """
+    q, scale, new_err = compress_with_feedback(g, err)
+    # max scale across participants -> requantize against the common scale
+    common = jax.lax.pmax(scale, axis_name)
+    q = jnp.clip(
+        jnp.round(dequantize(q, scale) / common), -127, 127
+    ).astype(jnp.int32)
+    total = jax.lax.psum(q, axis_name)
+    return total.astype(jnp.float32) * common, new_err

@@ -1,0 +1,91 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Self-contained (no optax in the container).  Optimizer state mirrors the
+parameter pytree — so it shards with the same PartitionSpec rules and
+checkpoints with the same code paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    # cosine decay to lr*min_ratio over total_steps (0 = constant after warmup)
+    total_steps: int = 0
+    min_ratio: float = 0.1
+
+
+def init(params) -> AdamWState:
+    z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(
+        mu=jax.tree_util.tree_map(z, params),
+        nu=jax.tree_util.tree_map(z, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.total_steps:
+        frac = jnp.clip(
+            (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0, 1.0,
+        )
+        cos = cfg.min_ratio + (1 - cfg.min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    else:
+        cos = 1.0
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def apply(cfg: AdamWConfig, params, grads, state: AdamWState):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) if cfg.grad_clip else 1.0
+    count = state.count + 1
+    lr = schedule(cfg, count)
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        step = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        new_p = p.astype(jnp.float32) - lr * (step + cfg.weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.mu)
+    flat_v = tdef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(new_m, new_v, count), {"grad_norm": gnorm, "lr": lr}

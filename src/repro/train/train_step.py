@@ -1,0 +1,104 @@
+"""Training step: loss → grad → AdamW, with microbatch gradient accumulation
+and optional int8-compressed data-parallel gradient reduction."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.models.common import ModelConfig
+from repro.train import optimizer as opt_lib
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: opt_lib.AdamWState
+    step: jax.Array
+
+
+def init_state(cfg: ModelConfig, key) -> TrainState:
+    params = model_lib.init_params(cfg, key)
+    return TrainState(params=params, opt=opt_lib.init(params), step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: opt_lib.AdamWConfig, *,
+                    microbatches: int = 1, cast_shardings=None,
+                    grad_shardings=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``microbatches`` splits the per-step batch on the leading axis and
+    accumulates gradients with a `lax.scan` — the standard trick to fit large
+    global batches and to overlap the DP gradient reduction with backward
+    compute (XLA schedules the accumulated psum once per step).
+
+    ``cast_shardings``: mixed-precision FSDP pattern — master f32 params and
+    Adam state live FSDP-sharded (model × data); at step start every ≥2-D
+    weight is cast to bf16 and constrained to the given TP-only shardings,
+    so the weight all-gather over 'data' happens ONCE per step *outside* the
+    layer scan (a naive FSDP in_sharding makes GSPMD re-materialize inside
+    the scan body — measured catastrophic, see EXPERIMENTS.md §Perf).
+    Gradients flow back to the FSDP layout via GSPMD reduce-scatter.
+    """
+
+    def cast_params(params):
+        dt = cfg.compute_dtype
+
+        def one(p, s=None):
+            if p.ndim >= 2 and p.dtype == jnp.float32:
+                p = p.astype(dt)
+            if s is not None:
+                p = jax.lax.with_sharding_constraint(p, s)
+            return p
+
+        if cast_shardings is None:
+            return jax.tree_util.tree_map(one, params)
+        return jax.tree_util.tree_map(one, params, cast_shardings)
+
+    def loss_fn(params, batch):
+        return model_lib.forward_loss(cast_params(params), cfg, batch)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def constrain_grads(g):
+        # keep the accumulator in the master (FSDP) layout — without this the
+        # f32 gradient tree stays TP-gathered and blows the per-device HBM
+        if grad_shardings is None:
+            return g
+        return jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, g, grad_shardings
+        )
+
+    def train_step(state: TrainState, batch):
+        if microbatches == 1:
+            loss, grads = grad_fn(state.params, batch)
+            grads = constrain_grads(grads)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])
+
+            mb = jax.tree_util.tree_map(split, batch)
+
+            def body(acc, mbatch):
+                l, g = grad_fn(state.params, mbatch)
+                g = constrain_grads(g)
+                return (
+                    acc[0] + l,
+                    jax.tree_util.tree_map(jnp.add, acc[1], g),
+                ), None
+
+            zero = constrain_grads(jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            ))
+            (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0), zero), mb)
+            loss = loss / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+        params, opt, metrics = opt_lib.apply(opt_cfg, state.params, grads, state.opt)
+        metrics["loss"] = loss
+        return TrainState(params, opt, state.step + 1), metrics
+
+    return train_step

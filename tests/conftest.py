@@ -1,0 +1,17 @@
+"""Shared test configuration.
+
+NOTE: tests run on the single real CPU device — the 512-device flag is set
+*only* inside `repro/launch/dryrun.py` (per DESIGN.md §7); never here.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,86 @@
+"""Property-based tests (hypothesis) for system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ising, ladder, swap
+from repro.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(n=st.integers(2, 64), phase=st.integers(0, 5))
+@settings(**SETTINGS)
+def test_pairing_involution_property(n, phase):
+    p = np.asarray(swap.pair_partners(n, phase))
+    np.testing.assert_array_equal(p[p], np.arange(n))
+    assert np.all(np.abs(p - np.arange(n)) <= 1)
+
+
+@given(
+    l=st.integers(2, 6).map(lambda k: 2 * k),  # checkerboard needs even L (PBC)
+    seed=st.integers(0, 2**20),
+    j=st.floats(-2, 2, allow_nan=False),
+    b=st.floats(-1, 1, allow_nan=False),
+)
+@settings(**SETTINGS)
+def test_sweep_energy_delta_property(l, seed, j, b):
+    """For ANY even (L, J, B): incremental dE == recomputed energy difference
+    and spins stay in {-1, +1}."""
+    key = jax.random.key(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    spins = jnp.where(jax.random.uniform(k1, (2, l, l)) < 0.5, 1, -1).astype(jnp.int8)
+    u = jax.random.uniform(k2, (2, 2, l, l))
+    betas = jax.random.uniform(k3, (2,), minval=0.05, maxval=2.0)
+    new, de, nacc = ref.ising_sweep(spins, u, betas, j=j, b=b)
+    e0 = ising.lattice_energy(spins, j, b)
+    e1 = ising.lattice_energy(new, j, b)
+    np.testing.assert_allclose(np.asarray(e1 - e0), np.asarray(de), rtol=1e-4, atol=1e-2)
+    assert set(np.unique(np.asarray(new))).issubset({-1, 1})
+    assert (np.asarray(nacc) >= 0).all() and (np.asarray(nacc) <= 2 * l * l).all()
+
+
+@given(seed=st.integers(0, 2**20), n=st.integers(2, 32))
+@settings(**SETTINGS)
+def test_swap_probability_bounds_and_symmetry(seed, n):
+    key = jax.random.key(seed)
+    k1, k2 = jax.random.split(key)
+    betas = jnp.sort(jax.random.uniform(k1, (n,), minval=0.1, maxval=2.0))[::-1]
+    e = jax.random.normal(k2, (n,)) * 50
+    p = swap.swap_probability(betas[:-1], betas[1:], e[:-1], e[1:], "logistic")
+    # relabel invariance: negating both factors keeps p unchanged
+    q = swap.swap_probability(betas[1:], betas[:-1], e[1:], e[:-1], "logistic")
+    # Barker complement: reversing only the energies complements p
+    q2 = swap.swap_probability(betas[:-1], betas[1:], e[1:], e[:-1], "logistic")
+    assert np.all((np.asarray(p) >= 0) & (np.asarray(p) <= 1))
+    np.testing.assert_allclose(np.asarray(p), np.asarray(q), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(p + q2), 1.0, rtol=1e-5)
+
+
+@given(n=st.integers(2, 40))
+@settings(**SETTINGS)
+def test_paper_ladder_property(n):
+    t = np.asarray(ladder.paper_ladder(n))
+    assert abs(t[0] - 1.0) < 1e-6
+    assert np.all(np.diff(t) > 0)
+    np.testing.assert_allclose(np.diff(t), 3.0 / n, rtol=1e-5)
+    assert t[-1] < 4.0  # paper's formula is exclusive at the hot end
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_wkv6_linearity_in_v(seed):
+    """The recurrence is linear in v: wkv6(..., 2v) == 2*wkv6(..., v)."""
+    key = jax.random.key(seed)
+    ks = jax.random.split(key, 5)
+    bh, t, dk, dv = 1, 12, 4, 4
+    r = jax.random.normal(ks[0], (bh, t, dk))
+    k = jax.random.normal(ks[1], (bh, t, dk))
+    v = jax.random.normal(ks[2], (bh, t, dv))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (bh, t, dk)))
+    u = jax.random.normal(ks[4], (bh, dk))
+    o1, s1 = ref.wkv6(r, k, v, w, u)
+    o2, s2 = ref.wkv6(r, k, 2 * v, w, u)
+    np.testing.assert_allclose(np.asarray(o2), 2 * np.asarray(o1), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s2), 2 * np.asarray(s1), rtol=1e-5, atol=1e-5)

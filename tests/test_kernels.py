@@ -1,0 +1,96 @@
+"""Pallas-kernel vs oracle sweeps (shapes / dtypes / block sizes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ising_sweep as isk
+from repro.kernels import ops, ref
+
+
+def _rand_ising(key, r, l):
+    k1, k2, k3 = jax.random.split(key, 3)
+    spins = jnp.where(jax.random.uniform(k1, (r, l, l)) < 0.5, 1, -1).astype(jnp.int8)
+    u = jax.random.uniform(k2, (r, 2, l, l), jnp.float32)
+    betas = jax.random.uniform(k3, (r,), minval=0.1, maxval=1.5)
+    return spins, u, betas
+
+
+@pytest.mark.parametrize("r,l,r_blk", [
+    (1, 4, 1), (2, 8, 2), (8, 16, 4), (8, 16, 8), (5, 12, 2),  # pad path
+    (16, 30, 8),   # odd (non-128-aligned) lattice like the paper's 300
+    (3, 7, 4),     # odd lattice side AND padded replicas
+])
+@pytest.mark.parametrize("jb", [(1.0, 0.0), (1.0, 0.4), (-0.7, -0.2)])
+def test_ising_kernel_matches_oracle(r, l, r_blk, jb):
+    j, b = jb
+    spins, u, betas = _rand_ising(jax.random.key(r * 100 + l), r, l)
+    got = ops.ising_sweep(spins, u, betas, j=j, b=b, r_blk=r_blk, use_pallas=True)
+    want = ref.ising_sweep(spins, u, betas, j=j, b=b)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]), rtol=1e-6, atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(want[2]))
+
+
+def test_ising_kernel_block_size_invariance():
+    """Fig-6 analogue invariant: the tile size must not change the result."""
+    spins, u, betas = _rand_ising(jax.random.key(0), 16, 10)
+    outs = [
+        ops.ising_sweep(spins, u, betas, j=1.0, b=0.0, r_blk=rb, use_pallas=True)[0]
+        for rb in (1, 2, 4, 8, 16)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(o))
+
+
+def test_ising_vmem_model_monotonic():
+    assert isk.vmem_working_set_bytes(8, 300) > isk.vmem_working_set_bytes(4, 300)
+    assert isk.vmem_working_set_bytes(8, 300) < 16 * 2**20  # fits v5e VMEM
+
+
+def _rand_wkv(key, bh, t, dk, dv, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (bh, t, dk), dtype)
+    k = jax.random.normal(ks[1], (bh, t, dk), dtype)
+    v = jax.random.normal(ks[2], (bh, t, dv), dtype)
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (bh, t, dk), dtype))
+    u = jax.random.normal(ks[4], (bh, dk), dtype)
+    return r, k, v, w, u
+
+
+@pytest.mark.parametrize("bh,t,dk,dv,chunk", [
+    (1, 8, 4, 4, 4), (2, 32, 8, 16, 8), (4, 33, 8, 8, 16),  # pad path
+    (3, 64, 64, 64, 32), (2, 16, 16, 8, 16),
+])
+def test_wkv6_kernel_matches_oracle(bh, t, dk, dv, chunk):
+    r, k, v, w, u = _rand_wkv(jax.random.key(bh * 7 + t), bh, t, dk, dv)
+    o1, s1 = ops.wkv6(r, k, v, w, u, chunk=chunk, use_pallas=True)
+    o2, s2 = ops.wkv6(r, k, v, w, u, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=3e-5, atol=3e-5)
+
+
+def test_wkv6_initial_state_threading():
+    """Chunked decode: running T=32 in two halves == one shot (cache reuse)."""
+    bh, t, dk, dv = 2, 32, 8, 8
+    r, k, v, w, u = _rand_wkv(jax.random.key(5), bh, t, dk, dv)
+    o_full, s_full = ops.wkv6(r, k, v, w, u, chunk=8)
+    o1, s1 = ops.wkv6(r[:, :16], k[:, :16], v[:, :16], w[:, :16], u, chunk=8)
+    o2, s2 = ops.wkv6(r[:, 16:], k[:, 16:], v[:, 16:], w[:, 16:], u, s1, chunk=8)
+    np.testing.assert_allclose(np.asarray(o_full), np.asarray(jnp.concatenate([o1, o2], 1)), rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(s_full), np.asarray(s2), rtol=3e-5, atol=3e-5)
+
+
+def test_wkv6_decay_semantics():
+    """w=1, k=0 must be the identity (state preserved, output = r @ S)."""
+    bh, dk, dv = 1, 4, 4
+    s0 = jnp.arange(dk * dv, dtype=jnp.float32).reshape(1, dk, dv)
+    r = jnp.ones((1, 2, dk))
+    k = jnp.zeros((1, 2, dk))
+    v = jnp.zeros((1, 2, dv))
+    w = jnp.ones((1, 2, dk))
+    u = jnp.zeros((1, dk))
+    o, s = ops.wkv6(r, k, v, w, u, s0, chunk=2)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s0), rtol=1e-6)
+    want = np.asarray(jnp.einsum("bk,bkv->bv", r[:, 0], s0))
+    np.testing.assert_allclose(np.asarray(o[0, 0]), want[0], rtol=1e-6)

@@ -1,0 +1,207 @@
+"""PT driver & swap-scheduler correctness: pairing rules, permutations,
+acceptance law, bimodal mixing advantage, elastic rebalance."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distributed, gaussian, ising, ladder, pt, swap
+
+
+# ---------- paper's pairing rules (section 3) --------------------------------
+@pytest.mark.parametrize("n", [2, 3, 8, 9, 16, 31])
+@pytest.mark.parametrize("phase", [0, 1])
+def test_pair_partners_rules(n, phase):
+    p = np.asarray(swap.pair_partners(n, phase))
+    # involution: partner of my partner is me (each replica swaps at most once)
+    np.testing.assert_array_equal(p[p], np.arange(n))
+    # neighbours only
+    assert np.all(np.abs(p - np.arange(n)) <= 1)
+    # even phase pairs (0,1),(2,3)...; odd phase pairs (1,2),(3,4)...
+    for i in range(n):
+        if p[i] != i:
+            lo = min(i, p[i])
+            assert lo % 2 == (0 if phase == 0 else 1)
+
+
+def test_pairing_alternation_covers_all_adjacent_pairs():
+    n = 8
+    pairs = set()
+    for phase in (0, 1):
+        p = np.asarray(swap.pair_partners(n, phase))
+        for i in range(n):
+            if p[i] != i:
+                pairs.add((min(i, p[i]), max(i, p[i])))
+    assert pairs == {(i, i + 1) for i in range(n - 1)}
+
+
+# ---------- acceptance law ----------------------------------------------------
+def test_logistic_probability_matches_paper_formula():
+    b = jnp.asarray([1.0, 0.5])
+    e = jnp.asarray([-10.0, -14.0])
+    arg = (b[0] - b[1]) * (e[0] - e[1])
+    want = float(jnp.exp(arg) / (1 + jnp.exp(arg)))
+    got = float(swap.swap_probability(b[0], b[1], e[0], e[1], "logistic"))
+    assert abs(got - want) < 1e-6
+
+
+def test_logistic_relabel_invariance_and_complement():
+    # Relabeling the pair negates BOTH factors -> same probability (the
+    # decision must not depend on which member computes it) ...
+    p1 = float(swap.swap_probability(1.0, 0.5, -3.0, -9.0, "logistic"))
+    p2 = float(swap.swap_probability(0.5, 1.0, -9.0, -3.0, "logistic"))
+    assert abs(p1 - p2) < 1e-6
+    # ... while reversing only the energy order complements it (Barker rule).
+    p3 = float(swap.swap_probability(1.0, 0.5, -9.0, -3.0, "logistic"))
+    assert abs(p1 + p3 - 1.0) < 1e-6
+
+
+def test_metropolis_caps_at_one():
+    assert float(swap.swap_probability(1.0, 0.2, 100.0, -100.0, "metropolis")) == 1.0
+
+
+def test_swap_permutation_is_permutation():
+    n = 9
+    key = jax.random.key(0)
+    betas = jnp.linspace(1.0, 0.25, n)
+    for phase in (0, 1):
+        for seed in range(5):
+            e = jax.random.normal(jax.random.fold_in(key, seed), (n,)) * 10
+            perm, acc, prob = swap.swap_permutation(
+                jax.random.fold_in(key, 100 + seed), phase, betas, e, n=n
+            )
+            p = np.asarray(perm)
+            assert sorted(p.tolist()) == list(range(n))
+            np.testing.assert_array_equal(p[p], np.arange(n))  # involution
+
+
+def test_swap_acceptance_statistics():
+    """Accepted fraction over many draws matches the analytic probability."""
+    n = 2
+    betas = jnp.asarray([1.0, 0.5])
+    e = jnp.asarray([-5.0, -8.0])
+    p_exact = float(swap.swap_probability(betas[0], betas[1], e[0], e[1], "logistic"))
+    keys = jax.random.split(jax.random.key(2), 4000)
+    accepted = jax.vmap(
+        lambda k: swap.swap_permutation(k, 0, betas, e, n=n)[1][0]
+    )(keys)
+    rate = float(jnp.mean(accepted.astype(jnp.float32)))
+    assert abs(rate - p_exact) < 0.03
+
+
+# ---------- driver invariants --------------------------------------------------
+def _tiny_run(swap_mode, n_sweeps=200):
+    R = 6
+    system = ising.IsingSystem(length=8)
+    temps = tuple(float(t) for t in ladder.paper_ladder(R))
+    cfg = pt.PTConfig(n_replicas=R, temps=temps, swap_interval=5, swap_mode=swap_mode)
+    st = pt.init(system, cfg, jax.random.key(1))
+    return system, cfg, *pt.run(system, cfg, st, n_sweeps)
+
+
+@pytest.mark.parametrize("swap_mode", ["temp", "state"])
+def test_energy_tracking_exact(swap_mode):
+    system, cfg, st, _ = _tiny_run(swap_mode)
+    direct = jax.vmap(system.energy)(st.states)
+    np.testing.assert_allclose(
+        np.asarray(st.energy), np.asarray(direct), rtol=1e-4, atol=1e-2
+    )
+
+
+@pytest.mark.parametrize("swap_mode", ["temp", "state"])
+def test_rung_is_always_a_permutation(swap_mode):
+    _, _, st, _ = _tiny_run(swap_mode)
+    assert sorted(np.asarray(st.rung).tolist()) == list(range(6))
+
+
+def test_state_mode_keeps_identity_rung():
+    _, _, st, _ = _tiny_run("state")
+    np.testing.assert_array_equal(np.asarray(st.rung), np.arange(6))
+
+
+def test_temp_and_state_modes_same_law():
+    """Both swap modes must produce the same *distribution* — compare the
+    per-rung mean |m| of two long runs (same system, different bookkeeping)."""
+    R, L = 8, 8
+    system = ising.IsingSystem(length=L)
+    temps = tuple(float(t) for t in ladder.linear_ladder(R, 1.5, 3.5))
+    obs = {"am": lambda s: jnp.abs(ising.magnetization(s))}
+    res = {}
+    for mode in ("temp", "state"):
+        cfg = pt.PTConfig(n_replicas=R, temps=temps, swap_interval=5, swap_mode=mode)
+        st = pt.init(system, cfg, jax.random.key(9))
+        _, trace = pt.run(system, cfg, st, 3000, observables=obs)
+        from repro.core import diagnostics
+
+        res[mode] = diagnostics.grand_mean_by_rung(trace, "am")
+    np.testing.assert_allclose(res["temp"], res["state"], atol=0.08)
+
+
+def test_no_swap_interval_zero():
+    R = 4
+    system = ising.IsingSystem(length=8)
+    temps = tuple(float(t) for t in ladder.paper_ladder(R))
+    cfg = pt.PTConfig(n_replicas=R, temps=temps, swap_interval=0)
+    st = pt.init(system, cfg, jax.random.key(1))
+    st, trace = pt.run(system, cfg, st, 50)
+    assert not np.asarray(trace["swap_accept"]).any()
+
+
+# ---------- the paper's core claim: PT explores better -------------------------
+def test_pt_mixes_bimodal_better_than_mh():
+    """A cold chain alone stays in its starting mode; PT lets it cross."""
+    sysm = gaussian.GaussianMixture(mus=(-4.0, 4.0), sigmas=(0.6, 0.6), step_size=0.8)
+    R = 8
+    temps = tuple(float(t) for t in ladder.geometric_ladder(R, 1.0, 30.0))
+
+    # plain MH at T=1: all replicas cold (equal-T "swaps" are no-ops for the
+    # law), start in left mode.  Trace granularity = one record per interval.
+    cfg0 = pt.PTConfig(n_replicas=R, temps=(1.0,) * R, swap_interval=5)
+    st0 = pt.init(sysm, cfg0, jax.random.key(3))
+    _, tr0 = pt.run(sysm, cfg0, st0, 3000, observables={"x": lambda s: s})
+    # PT with a hot ladder
+    cfg1 = pt.PTConfig(n_replicas=R, temps=temps, swap_interval=5, swap_mode="temp")
+    st1 = pt.init(sysm, cfg1, jax.random.key(3))
+    _, tr1 = pt.run(sysm, cfg1, st1, 3000, observables={"x": lambda s: s})
+
+    x0 = np.asarray(tr0["x"])  # (600, R) — all rungs cold
+    x1 = np.asarray(tr1["x"])  # (600, R) — rung 0 cold
+    frac_right_mh = float(np.mean(x0[:, :] > 0))  # any cold chain crossing
+    frac_right_pt = float(np.mean(x1[len(x1) // 2 :, 0] > 0))
+    # MH cold chains stay left; PT cold rung should see the right mode ~half
+    # the time after burn-in.
+    assert frac_right_mh < 0.05, frac_right_mh
+    assert 0.2 < frac_right_pt < 0.8, frac_right_pt
+
+
+# ---------- elastic rebalance ---------------------------------------------------
+@pytest.mark.parametrize("new_r", [4, 6, 12])
+def test_rebalance_state(new_r):
+    R = 6
+    system = ising.IsingSystem(length=8)
+    temps = tuple(float(t) for t in ladder.paper_ladder(R))
+    cfg = pt.PTConfig(n_replicas=R, temps=temps, swap_interval=5)
+    st = pt.init(system, cfg, jax.random.key(0))
+    st, _ = pt.run(system, cfg, st, 20)
+    st2 = distributed.rebalance_state(st, new_r)
+    assert st2.energy.shape == (new_r,)
+    assert st2.states.shape == (new_r, 8, 8)
+    # energies stay consistent with states
+    direct = jax.vmap(system.energy)(st2.states)
+    np.testing.assert_allclose(np.asarray(st2.energy), np.asarray(direct), atol=1e-2)
+    # ladder rebalance preserves endpoints
+    t2 = distributed.rebalance_ladder(np.asarray(temps), new_r)
+    assert abs(t2[0] - temps[0]) < 1e-5 and abs(t2[-1] - temps[-1]) < 1e-5
+
+
+def test_ladder_tuning_moves_toward_uniform_acceptance():
+    temps = np.geomspace(1.0, 8.0, 6).astype(np.float32)
+    acc = np.array([0.9, 0.6, 0.2, 0.05, 0.01])  # too-dense cold end
+    new = ladder.tune_ladder(temps, acc, target=0.3)
+    gaps_old = np.diff(np.log(temps))
+    gaps_new = np.diff(np.log(new))
+    # over-accepting cold gaps widen relative to under-accepting hot gaps
+    assert (gaps_new[0] / gaps_old[0]) > (gaps_new[-1] / gaps_old[-1])
+    assert abs(new[0] - 1.0) < 1e-5 and abs(new[-1] - 8.0) < 1e-4

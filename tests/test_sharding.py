@@ -1,0 +1,84 @@
+"""Sharding-policy unit tests (pure metadata — no devices needed beyond 1)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.launch import sharding as shard_lib
+
+
+class FakeMesh:
+    """Duck-typed mesh for spec selection (shape dict + axis names)."""
+
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+
+
+def _spec(path, shape, fsdp=False):
+    return shard_lib._leaf_spec(MESH, path, shape, fsdp=fsdp)
+
+
+def test_attention_weights_tp():
+    assert _spec("['wq']", (5120, 64, 128)) == P(None, "model", None)
+    assert _spec("['wo']", (64, 128, 5120)) == P("model", None, None)
+
+
+def test_kv_heads_fallback_when_indivisible():
+    # kv=8 heads cannot shard over model=16 -> falls back to sharding D
+    assert _spec("['wk']", (5120, 8, 128)) == P("model", None, None)
+    # MQA kv=1, d_model also indivisible -> fully replicated
+    assert _spec("['wk']", (2048, 1, 256)) == P("model", None, None)
+
+
+def test_moe_expert_parallel_vs_tp_fallback():
+    # qwen3-moe: 128 experts / 16 = EP
+    assert _spec("['w_up']", (128, 4096, 1536)) == P("model", None, None)
+    # mixtral: 8 experts < 16 -> intra-expert TP on F
+    assert _spec("['w_up']", (8, 6144, 16384)) == P(None, None, "model")
+    assert _spec("['w_down']", (8, 16384, 6144)) == P(None, "model", None)
+
+
+def test_stacked_groups_get_leading_none():
+    s = _spec("['groups']['0_attn']['attn']['wq']", (64, 5120, 64, 128))
+    assert s == P(None, None, "model", None)
+
+
+def test_ffn_2d_rules():
+    assert _spec("['ffn']['w_up']", (4096, 14336)) == P(None, "model")
+    assert _spec("['ffn']['w_down']", (14336, 4096)) == P("model", None)
+
+
+def test_embed_vocab_sharded():
+    assert _spec("['embed']", (151936, 5120)) == P("model", None)
+    assert _spec("['unembed']", (5120, 151936)) == P(None, "model")
+
+
+def test_fsdp_adds_data_axis():
+    # wq (D,H,hd): model on H; fsdp shards D (largest free, divisible) on data
+    assert _spec("['wq']", (5120, 64, 128), fsdp=True) == P("data", "model", None)
+    # replicated fallback still gets a data shard on the largest dim
+    assert _spec("['router']", (4096, 128), fsdp=True) == P("data", None)
+
+
+def test_fsdp_skips_indivisible():
+    s = _spec("['wq']", (100, 4, 30), fsdp=True)
+    assert s == P(None, None, None)  # nothing divides by 16
+    # but a divisible smaller dim is still picked up
+    s = _spec("['wq']", (100, 4, 32), fsdp=True)
+    assert s == P(None, None, "data")
+
+
+def test_real_mesh_end_to_end_single_device():
+    """With the real 1-device CPU mesh every rule must degrade gracefully."""
+    mesh = Mesh(np.array(jax.devices()).reshape(1, 1), ("data", "model"))
+    shapes = {
+        "embed": jax.ShapeDtypeStruct((512, 64), jax.numpy.float32),
+        "groups": {"0_attn": {"attn": {"wq": jax.ShapeDtypeStruct((2, 64, 4, 16), jax.numpy.float32)}}},
+    }
+    tree = shard_lib.param_shardings(mesh, shapes)
+    specs = jax.tree_util.tree_leaves(tree, is_leaf=lambda x: hasattr(x, "spec"))
+    assert all(hasattr(s, "spec") for s in specs)
