@@ -1,5 +1,9 @@
 """Paper Fig. 3a/3b analogues: magnetization vs temperature (phase
 transition) and iterations-to-converge vs lattice size (quadratic scaling).
+
+Fig. 3a runs purely on the engine's streaming statistics (burn-in, reset the
+O(R) accumulators, measure — no trace); Fig. 3b needs the time *series* and
+uses the engine's opt-in per-chunk trace streaming.
 """
 from __future__ import annotations
 
@@ -9,18 +13,32 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_call
-from repro.core import diagnostics, ising, ladder, pt
+from repro.core import diagnostics, ising, ladder
+from repro.engine import Engine, EngineConfig
 
 
 def fig3a(r: int = 16, length: int = 16, sweeps: int = 3000):
     system = ising.IsingSystem(length=length)
-    temps = tuple(float(t) for t in ladder.linear_ladder(r, 1.0, 4.0))
-    cfg = pt.PTConfig(n_replicas=r, temps=temps, swap_interval=10)
+    temps = np.asarray(ladder.linear_ladder(r, 1.0, 4.0))
+    interval = 10
+    # engine runs advance whole intervals: round the budget so any `sweeps`
+    # argument works and the burn/measure split stays interval-aligned
+    n_int = max(2, round(sweeps / interval))
+    sweeps = n_int * interval
+    burn = (n_int // 2) * interval
+    cfg = EngineConfig(
+        n_replicas=r, swap_interval=interval, chunk_intervals=50, donate=False
+    )
     obs = {"am": lambda s: jnp.abs(ising.magnetization(s))}
-    st = pt.init(system, cfg, jax.random.key(0))
-    t = time_call(lambda s: pt.run(system, cfg, s, sweeps)[0].energy, st, iters=1)
-    _, trace = pt.run(system, cfg, st, sweeps, observables=obs)
-    m = diagnostics.grand_mean_by_rung(trace, "am")
+    eng = Engine(system, cfg, observables=obs)
+    st = eng.init(jax.random.key(0), temps)
+    t = time_call(lambda s: eng.run(s, sweeps)[0].pt.energy, st, iters=1)
+    # burn-in, zero the accumulators, then measure: the streaming analogue of
+    # trace-and-discard-half (same estimator, O(R) memory)
+    st, _ = eng.run(st, burn)
+    st = eng.reset_stats(st)
+    _, res = eng.run(st, sweeps - burn)
+    m = res.summary["mean_am"]
     rows = ";".join(f"T{temps[i]:.2f}={m[i]*100:.0f}%" for i in range(0, r, 3))
     emit("fig3a_magnetization", t, rows + f";Tc~2.27_observed={'yes' if m[0]>0.8>m[-1] else 'no'}")
 
@@ -33,16 +51,22 @@ def fig3b(sizes=(8, 12, 16, 24), seeds=3, max_sweeps: int = 6000):
     lattices need orders more sweeps — the paper's Fig. 3b scaling)."""
     iters = []
     for L in sizes:
+        # one Engine per lattice size: its compiled mega-step is identical
+        # across seeds (only the PRNG key changes), so seeds share the cache
+        system = ising.IsingSystem(length=L)
+        r = 8
+        temps = np.asarray(ladder.linear_ladder(r, 1.0, 3.0))
+        cfg = EngineConfig(
+            n_replicas=r, swap_interval=2, chunk_intervals=250,
+            record_trace=True,
+        )
+        obs = {"am": lambda s: jnp.abs(ising.magnetization(s))}
+        eng = Engine(system, cfg, observables=obs)
         per_seed = []
         for seed in range(seeds):
-            system = ising.IsingSystem(length=L)
-            r = 8
-            temps = tuple(float(t) for t in ladder.linear_ladder(r, 1.0, 3.0))
-            cfg = pt.PTConfig(n_replicas=r, temps=temps, swap_interval=2)
-            obs = {"am": lambda s: jnp.abs(ising.magnetization(s))}
-            st = pt.init(system, cfg, jax.random.key(seed))
-            _, trace = pt.run(system, cfg, st, max_sweeps, observables=obs)
-            am = np.asarray(trace["am"])[:, 0]  # cold rung
+            st = eng.init(jax.random.key(seed), temps)
+            _, res = eng.run(st, max_sweeps)
+            am = res.trace["am"][:, 0]  # cold rung
             it = diagnostics.iterations_to_converge(am, threshold=0.98, window=4)
             per_seed.append(it * cfg.swap_interval if it >= 0 else max_sweeps)
         iters.append(float(np.median(per_seed)))

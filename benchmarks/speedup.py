@@ -2,35 +2,59 @@
 
 The paper measures OpenMP/CUDA thread scaling.  On this CPU host the
 equivalent comparison is *sequential per-replica execution* (the paper's
-1-thread baseline: one replica stepped at a time) vs the framework's
-*vectorized replica batch* (all replicas advance in one fused program — the
-paper's all-threads case; on TPU this is also what shards across the mesh).
+1-thread baseline: one replica stepped at a time) vs the engine's
+*vectorized replica batch* (all replicas advance in one compiled mega-step —
+the paper's all-threads case; on TPU this is also what shards across the
+mesh).  Both paths now run through `repro.engine.Engine` (DESIGN.md §1): the
+chunked AOT driver with streaming O(R) statistics.
+
+Extra rows beyond the paper:
+
+* ``engine_ensemble_CxR`` — the many-chain axis: C independent chains of R
+  replicas in one launch, per-chain cost (throughput scaling knob);
+* ``engine_stream_mem`` — device bytes held by the streaming statistics vs
+  the O(intervals x R) trace the seed driver would materialize for a
+  10k-sweep run (the engine's memory win).
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit, time_call
-from repro.core import ising, ladder, pt
+from repro.core import ising, ladder
+from repro.engine import Engine, EngineConfig
+
+
+def _engine(system, r: int, sweeps: int, n_chains: int = 1) -> Engine:
+    cfg = EngineConfig(
+        n_replicas=r,
+        swap_interval=0,  # swaps off, as in the paper's speed-up figures
+        measure_interval=sweeps,
+        chunk_intervals=1,
+        n_chains=n_chains,
+        track_stats=True,
+        donate=False,  # timing loops re-run the same state
+    )
+    return Engine(system, cfg)
 
 
 def run(sweeps: int = 50, length: int = 32):
     system = ising.IsingSystem(length=length)
 
     for r in (16, 64, 256):
-        temps = tuple(float(t) for t in ladder.paper_ladder(r))
-        cfg = pt.PTConfig(n_replicas=r, temps=temps, swap_interval=0)
-        state = pt.init(system, cfg, jax.random.key(0))
+        temps = np.asarray(ladder.paper_ladder(r))
+        eng = _engine(system, r, sweeps)
+        state = eng.init(jax.random.key(0), temps)
 
-        # vectorized: all replicas in one program (swaps off, as in the paper)
-        vec = jax.jit(lambda st: pt.run(system, cfg, st, sweeps)[0].energy)
+        # vectorized: all replicas in one compiled mega-step
+        vec = lambda st: eng.run(st, sweeps)[0].pt.energy
         t_vec = time_call(vec, state)
 
         # sequential: replicas advanced one-by-one (paper's serial baseline)
-        cfg1 = pt.PTConfig(n_replicas=1, temps=(1.0,), swap_interval=0)
-        st1 = pt.init(system, cfg1, jax.random.key(0))
-        one = jax.jit(lambda st: pt.run(system, cfg1, st, sweeps)[0].energy)
+        eng1 = _engine(system, 1, sweeps)
+        st1 = eng1.init(jax.random.key(0), np.asarray([1.0]))
+        one = lambda st: eng1.run(st, sweeps)[0].pt.energy
 
         def seq(st):
             out = None
@@ -43,3 +67,32 @@ def run(sweeps: int = 50, length: int = 32):
             f"fig45_speedup_R{r}", t_vec,
             f"seq_us={t_seq*1e6:.0f};speedup={t_seq / t_vec:.1f}x;sweeps={sweeps}",
         )
+
+    # ensemble axis: many chains per launch (per-chain cost should stay flat
+    # until the hardware saturates — the Karimi-style throughput knob)
+    r = 16
+    temps = np.asarray(ladder.paper_ladder(r))
+    for c in (1, 4, 16):
+        eng = _engine(system, r, sweeps, n_chains=c)
+        state = eng.init(jax.random.key(0), temps)
+        t = time_call(lambda st: eng.run(st, sweeps)[0].pt.energy, state)
+        emit(
+            f"engine_ensemble_C{c}xR{r}", t,
+            f"per_chain_us={t/c*1e6:.0f};sweeps={sweeps}",
+        )
+
+    # streaming-stats memory vs the seed's full trace, 10k-sweep run
+    n_sweeps, interval = 10_000, 100
+    eng = _engine(system, 64, interval)
+    state = eng.init(jax.random.key(0), np.asarray(ladder.paper_ladder(64)))
+    stats_bytes = sum(
+        x.nbytes for x in jax.tree_util.tree_leaves(state.stats)
+    )
+    # per interval per rung: energy f32 + swap_prob f32 + swap_accept bool +
+    # swap_attempt bool = 10 bytes
+    trace_bytes = (n_sweeps // interval) * 64 * 10
+    emit(
+        "engine_stream_mem", 0.0,
+        f"stats_bytes={stats_bytes};trace_bytes_10k={trace_bytes};"
+        f"ratio={trace_bytes/max(stats_bytes,1):.0f}x",
+    )

@@ -14,9 +14,12 @@ Layout:  <dir>/step_<N>/arrays.npz + meta.json   (+ .tmp staging dirs)
   reads the local process' file (single-process here, but the layout is the
   production one).
 
-PT states, train states and data-cursor metadata all go through the same
-pytree path-flattening, so any registered dataclass (PTState, TrainState)
-round-trips.
+PT states, train states, engine states and data-cursor metadata all go
+through the same pytree path-flattening, so any registered dataclass
+(PTState, TrainState, `repro.engine.EngineState` — including its dict-keyed
+online-stats leaves) round-trips.  Typed PRNG-key leaves are stored as their
+`key_data` words and re-wrapped with the template's key impl on restore, so
+a resumed engine run continues the *same* random streams mid-run.
 """
 from __future__ import annotations
 
@@ -31,10 +34,17 @@ import jax
 import numpy as np
 
 
+def _is_prng_key(leaf) -> bool:
+    dtype = getattr(leaf, "dtype", None)
+    return dtype is not None and jax.dtypes.issubdtype(dtype, jax.dtypes.prng_key)
+
+
 def _flatten(tree) -> dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = jax.tree_util.keystr(path)
+        if _is_prng_key(leaf):
+            leaf = jax.random.key_data(leaf)
         flat[key] = np.asarray(leaf)
     return flat
 
@@ -47,6 +57,16 @@ def _unflatten(tree_like, arrays: dict[str, np.ndarray]):
         if key not in arrays:
             raise KeyError(f"checkpoint missing leaf {key}")
         arr = arrays[key]
+        if _is_prng_key(like):
+            want = tuple(jax.random.key_data(like).shape)
+            if tuple(arr.shape) != want:
+                raise ValueError(f"{key}: key-data shape {arr.shape} != {want}")
+            out.append(
+                jax.random.wrap_key_data(
+                    jax.numpy.asarray(arr), impl=jax.random.key_impl(like)
+                )
+            )
+            continue
         if tuple(arr.shape) != tuple(like.shape):
             raise ValueError(f"{key}: shape {arr.shape} != expected {like.shape}")
         out.append(jax.numpy.asarray(arr, dtype=like.dtype))

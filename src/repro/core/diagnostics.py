@@ -20,13 +20,18 @@ __all__ = [
 def swap_acceptance_rate(trace: dict) -> np.ndarray:
     """Mean accepted/attempted per adjacent rung pair, shape (R-1,).
 
-    `swap_accept`/`swap_prob` are recorded at the *lower* rung of each
-    attempted pair; a rung pair (r, r+1) is attempted on alternating phases,
-    so we normalize by attempts (prob > 0 marks an attempt).
+    `swap_accept`/`swap_attempt` are recorded at the *lower* rung of each
+    attempted pair; a rung pair (r, r+1) is attempted on alternating phases.
+    Attempts come from the structural pairing mask when the trace carries it
+    (engine-era traces); older traces fall back to `prob > 0`, which can
+    undercount pairs whose acceptance probability underflows to 0 in f32.
     """
     acc = np.asarray(trace["swap_accept"], dtype=np.float64)  # (T, R)
-    prob = np.asarray(trace["swap_prob"], dtype=np.float64)
-    attempts = (prob > 0).sum(axis=0)  # (R,)
+    if "swap_attempt" in trace:
+        attempts = np.asarray(trace["swap_attempt"], dtype=np.float64).sum(axis=0)
+    else:
+        prob = np.asarray(trace["swap_prob"], dtype=np.float64)
+        attempts = (prob > 0).sum(axis=0)  # (R,)
     accepted = acc.sum(axis=0)
     with np.errstate(invalid="ignore", divide="ignore"):
         rate = np.where(attempts > 0, accepted / np.maximum(attempts, 1), 0.0)

@@ -7,7 +7,7 @@ iterations with zero communication.  At a swap iteration:
 
 * ``temp`` swap mode: the decision needs only the (R,) energy/rung vectors —
   an all-gather of a few KB — and *no state movement*.  This is the
-  O(R·L²) → O(R) swap-traffic reduction measured in EXPERIMENTS.md §Perf.
+  O(R·L²) → O(R) swap-traffic reduction measured in DESIGN.md §Perf.
 * ``state`` swap mode (faithful): accepted pairs exchange (L,L) lattices;
   pairs that straddle a shard boundary become GSPMD-generated
   collective-permutes/all-to-alls.

@@ -9,7 +9,14 @@ Maps the paper's execution scheme (section 3, Fig. 2) onto JAX:
   ``swap_interval`` sweeps, then one parallel swap phase (`repro.core.swap`);
 * the whole simulation — all intervals — is a single jitted `lax.scan`:
   state never leaves device memory (the paper's CUDA device-residency
-  insight, §2 of DESIGN.md).
+  insight, DESIGN.md §2).
+
+This module is the **monolithic compatibility shim**: the physics of one
+interval lives in `repro.engine.driver.make_interval_step`, shared with the
+chunked streaming engine (`repro.engine.Engine`, DESIGN.md §1).  `run` here
+keeps the seed API — one jitted program per ``n_sweeps`` and a full
+O(intervals x R) trace — which is convenient for tests and short runs but
+recompiles per sweep count; long or adaptive runs should use the engine.
 
 Swap modes:
 
@@ -18,7 +25,7 @@ Swap modes:
 * ``temp``   — optimized: accepted pairs exchange *rungs* (temperature
   indices); states stay put and the chain-per-temperature is reconstructed
   from the tracked permutation. O(1) bytes per pair — this is what makes the
-  swap phase free on a multi-pod mesh (EXPERIMENTS.md §Perf).
+  swap phase free on a multi-pod mesh (DESIGN.md §Perf).
 
 Both produce the same extended-ensemble Markov chain law.
 """
@@ -32,10 +39,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import swap as swap_lib
 from repro.core.systems import System, batched_energy, batched_init
 
-__all__ = ["PTConfig", "PTState", "init", "run", "make_run"]
+__all__ = ["PTConfig", "PTState", "init", "init_replicas", "run", "make_run"]
 
 
 @jax.tree_util.register_dataclass
@@ -84,83 +90,48 @@ class PTConfig:
         if self.swap_mode not in ("temp", "state"):
             raise ValueError(f"bad swap_mode {self.swap_mode!r}")
 
+    def step_spec(self, n_sweeps: int):
+        """The engine `StepSpec` + interval count equivalent to this config."""
+        from repro.engine.driver import StepSpec
 
-def _batched_step(system: System):
-    """System step batched over replicas (kernel fast-path if provided)."""
-    fn = getattr(system, "batched_mcmc_step", None)
-    if fn is not None:
-        return fn
-    return jax.vmap(system.mcmc_step)
+        interval = self.swap_interval if self.swap_interval > 0 else n_sweeps
+        spec = StepSpec(
+            n_replicas=self.n_replicas,
+            sweeps_per_interval=interval,
+            do_swap=self.swap_interval > 0,
+            criterion=self.criterion,
+            swap_mode=self.swap_mode,
+        )
+        return spec, max(n_sweeps // interval, 1)
 
 
-def init(system: System, config: PTConfig, key: jax.Array, *, shard=None) -> PTState:
-    """Build the initial PT state (paper's "initialization phase")."""
+def init_replicas(
+    system: System, n_replicas: int, key: jax.Array, *, shard=None
+) -> PTState:
+    """Build the initial PT state (paper's "initialization phase").
+
+    The single source of truth for state construction — the engine
+    (`repro.engine.driver`) and the `init` wrapper below both use it, which
+    keeps their PRNG streams (and hence trajectories) identical.
+    """
     k_init, k_run = jax.random.split(key)
-    states = batched_init(system, k_init, config.n_replicas)
+    states = batched_init(system, k_init, n_replicas)
     if shard is not None:
         states = jax.lax.with_sharding_constraint(states, shard)
     energy = batched_energy(system, states)
     return PTState(
         states=states,
         energy=energy.astype(jnp.float32),
-        rung=jnp.arange(config.n_replicas, dtype=jnp.int32),
+        rung=jnp.arange(n_replicas, dtype=jnp.int32),
         key=k_run,
         phase=jnp.int32(0),
         t=jnp.int32(0),
     )
 
 
-def _sweep_once(system, config, betas, st: PTState, shard=None) -> PTState:
-    """One parallel sweep of every replica at its current temperature."""
-    r = config.n_replicas
-    # 2t/2t+1 split keeps sweep and swap key streams disjoint for any R.
-    keys = jax.vmap(jax.random.fold_in, (None, 0))(
-        jax.random.fold_in(st.key, 2 * st.t), jnp.arange(r, dtype=jnp.uint32)
-    )
-    if shard is not None:
-        # pin the per-replica key axis: the per-replica random lattices then
-        # generate shard-local (otherwise the partitioner replicates the
-        # whole PRNG stream — measured 16x redundant HBM traffic)
-        keys = jax.lax.with_sharding_constraint(keys, shard)
-    betas_slot = betas[st.rung]
-    states, de, _ = _batched_step(system)(keys, st.states, betas_slot)
-    return dataclasses.replace(
-        st,
-        states=states,
-        energy=st.energy + de.astype(jnp.float32),
-        t=st.t + 1,
-    )
-
-
-def _swap_phase(config, betas, st: PTState):
-    """One parallel swap iteration; returns (state, diagnostics)."""
-    r = config.n_replicas
-    k_swap = jax.random.fold_in(st.key, 2 * st.t + 1)
-    inv = jnp.argsort(st.rung)  # slot holding rung r
-    e_rung = st.energy[inv]
-    perm, accept, prob = swap_lib.swap_permutation(
-        k_swap, st.phase, betas, e_rung, n=r, criterion=config.criterion
-    )
-    if config.swap_mode == "temp":
-        # Slot inv[r] now holds rung perm[r]; states stay in place.
-        new_rung = jnp.zeros((r,), jnp.int32).at[inv].set(perm)
-        st = dataclasses.replace(st, rung=new_rung)
-    else:
-        # Faithful mode: rung == slot identity; move the states themselves.
-        states = jax.tree_util.tree_map(lambda x: jnp.take(x, perm, axis=0), st.states)
-        st = dataclasses.replace(st, states=states, energy=st.energy[perm])
-    st = dataclasses.replace(st, phase=st.phase + 1)
-    return st, {"swap_accept": accept, "swap_prob": prob}
-
-
-def _observe(system, config, observables, st: PTState) -> Mapping[str, jax.Array]:
-    """Per-rung diagnostics (rung order, cold->hot)."""
-    inv = jnp.argsort(st.rung)
-    out = {"energy": st.energy[inv]}
-    for name, fn in (observables or {}).items():
-        vals = jax.vmap(fn)(st.states)
-        out[name] = vals[inv]
-    return out
+def init(system: System, config: PTConfig, key: jax.Array, *, shard=None) -> PTState:
+    """Seed-compatible `init` (see `init_replicas`)."""
+    return init_replicas(system, config.n_replicas, key, shard=shard)
 
 
 @partial(
@@ -168,34 +139,14 @@ def _observe(system, config, observables, st: PTState) -> Mapping[str, jax.Array
     static_argnames=("system", "config", "n_sweeps", "observables_tuple", "shard"),
 )
 def _run_jit(system, config, state, n_sweeps, observables_tuple, shard=None):
-    observables = dict(observables_tuple)
+    from repro.engine.driver import make_interval_step
+
+    spec, n_intervals = config.step_spec(n_sweeps)
+    step = make_interval_step(system, spec, dict(observables_tuple), shard)
     betas = jnp.asarray(config.betas)
-    interval = config.swap_interval if config.swap_interval > 0 else n_sweeps
-    n_intervals = max(n_sweeps // interval, 1)
-
-    def constrain(st):
-        # keep the replica axis sharded through the loop — without this the
-        # partitioner may replicate the whole simulation (measured: 256x
-        # redundant compute on the production mesh; EXPERIMENTS.md §Perf)
-        if shard is None:
-            return st
-        from repro.core.distributed import shard_state
-
-        return shard_state(st, shard)
 
     def interval_body(st, _):
-        def sweep_body(s, _):
-            return constrain(_sweep_once(system, config, betas, s, shard)), None
-
-        st, _ = jax.lax.scan(sweep_body, st, None, length=interval)
-        if config.swap_interval > 0:
-            st, swap_diag = _swap_phase(config, betas, st)
-        else:
-            z = jnp.zeros((config.n_replicas,))
-            swap_diag = {"swap_accept": z.astype(bool), "swap_prob": z}
-        rec = dict(_observe(system, config, observables, st))
-        rec.update(swap_diag)
-        return constrain(st), rec
+        return step(st, betas)
 
     state, trace = jax.lax.scan(interval_body, state, None, length=n_intervals)
     return state, trace
@@ -217,6 +168,10 @@ def run(
     "all the simulation information is located inside the device").
     ``shard``: optional NamedSharding for the replica axis, enforced through
     the loop (see `repro.core.distributed.replica_sharding`).
+
+    For long, adaptive, or many-chain runs prefer `repro.engine.Engine`: same
+    per-interval physics (bit-equal PRNG streams), O(1) compile cost and O(R)
+    streaming diagnostics instead of this full trace.
     """
     obs = tuple(sorted((observables or {}).items()))
     return _run_jit(system, config, state, n_sweeps, obs, shard)

@@ -103,6 +103,10 @@ def swap_permutation(
         (for acceptance-rate diagnostics).
       prob_pair: (R,) acceptance probability at the lower rung of each pair,
         0 elsewhere (for diagnostics; masked like ``accept_pair``).
+      attempt_pair: (R,) bool, True at the lower rung of each *attempted*
+        pair this phase — the structural pairing mask.  This is the single
+        source of truth for what counts as an attempt (acceptance statistics
+        and the adaptive-ladder feedback both normalize by it).
     """
     partner = pair_partners(n, phase)
     idx = jnp.arange(n, dtype=jnp.int32)
@@ -118,4 +122,4 @@ def swap_permutation(
     pair_accept = accept_at_lower[lower] & (partner != idx)
     perm = jnp.where(pair_accept, partner, idx)
     prob_at_lower = jnp.where(is_lower, p, 0.0)
-    return perm, accept_at_lower, prob_at_lower
+    return perm, accept_at_lower, prob_at_lower, is_lower

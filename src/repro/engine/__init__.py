@@ -1,0 +1,36 @@
+"""Chunked streaming PT engine (DESIGN.md §1).
+
+The engine layer sits between the physics core (`repro.core`) and everything
+that runs long simulations (benchmarks, examples, launch, checkpointing):
+
+* `repro.engine.driver` — AOT-compiled chunked mega-step driver with an
+  ensemble (many-chain) axis and O(1) compile cost for arbitrarily long runs;
+* `repro.engine.stats`  — device-side online statistics (Welford moments,
+  swap-acceptance counters, round-trip tracking): O(R) state instead of the
+  O(intervals x R) trace;
+* `repro.engine.adapt`  — in-loop adaptive temperature ladders fed by the
+  measured acceptance between chunks.
+"""
+from repro.engine.adapt import AdaptConfig
+from repro.engine.driver import Engine, EngineConfig, EngineState, RunResult, StepSpec
+from repro.engine.stats import (
+    OnlineStats,
+    combine_chains,
+    init_stats,
+    summarize,
+    update_stats,
+)
+
+__all__ = [
+    "AdaptConfig",
+    "Engine",
+    "EngineConfig",
+    "EngineState",
+    "OnlineStats",
+    "RunResult",
+    "StepSpec",
+    "combine_chains",
+    "init_stats",
+    "summarize",
+    "update_stats",
+]

@@ -1,0 +1,107 @@
+"""In-loop adaptive temperature ladders (DESIGN.md §1).
+
+The seed only exposed `ladder.tune_ladder` as an offline utility: run, fetch
+the whole trace, measure acceptance, retune, recompile, rerun.  The engine
+closes the loop *during* a run: between compiled chunks it reads the O(R)
+device-side swap counters (`repro.engine.stats`), computes the per-pair
+acceptance over the window since the last retune, and feeds it to
+`ladder.tune_ladder` (Kofke-style acceptance equalization; Earl & Deem,
+physics/0508111, survey the family).  Because the engine treats betas as a
+*traced* input of the mega-step — not a static config field — retuning re-uses
+the already-compiled executable: zero recompiles per adaptation.
+
+Acceptance is pooled across the ensemble axis when present (all chains share
+one ladder), which multiplies the feedback signal per wall-clock chunk.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import ladder as ladder_lib
+
+__all__ = ["AdaptConfig", "AdaptState", "maybe_adapt"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptConfig:
+    """Feedback-loop configuration.
+
+    Attributes:
+      target: desired uniform per-pair swap acceptance.
+      rate: feedback gain in log-spacing space (see `ladder.tune_ladder`).
+      min_attempts_per_pair: don't retune until every adjacent pair has at
+        least this many attempts in the current window (pooled over chains) —
+        low-count acceptance estimates are too noisy to act on.
+      max_rounds: stop adapting after this many retunes, cumulative over the
+        engine's lifetime — repeated/resumed ``run()`` calls share the cap
+        (None = never stop).
+
+    The cold/hot endpoints of the ladder are always pinned: feedback only
+    redistributes the interior rungs (`ladder.tune_ladder` rescales to the
+    endpoints unconditionally, so the temperature *range* is a modelling
+    choice made at `Engine.init`, not something the feedback loop drifts).
+    """
+
+    target: float = 0.23
+    rate: float = 0.5
+    min_attempts_per_pair: int = 20
+    max_rounds: int | None = None
+
+
+@dataclasses.dataclass
+class AdaptState:
+    """Host-side bookkeeping between chunks (window baselines + history)."""
+
+    attempts_base: np.ndarray  # (R,) counter snapshot at the last retune
+    accepts_base: np.ndarray
+    rounds: int = 0
+
+    @classmethod
+    def fresh(cls, n_replicas: int) -> "AdaptState":
+        z = np.zeros((n_replicas,), np.float64)
+        return cls(attempts_base=z, accepts_base=z.copy())
+
+
+def maybe_adapt(
+    temps: np.ndarray,
+    attempts: np.ndarray,
+    accepts: np.ndarray,
+    adapt: AdaptConfig,
+    st: AdaptState,
+):
+    """One feedback step if the window has enough signal.
+
+    Args:
+      temps: current ladder (R,), cold->hot.
+      attempts/accepts: *cumulative* per-rung counters (chain-pooled: callers
+        sum the ensemble axis first), lower-rung convention.
+      adapt: feedback configuration.
+      st: mutable window bookkeeping (updated in place on retune).
+
+    Returns:
+      (new_temps, window_acceptance) — both None when the window was too
+      thin or ``max_rounds`` was reached.
+    """
+    if adapt.max_rounds is not None and st.rounds >= adapt.max_rounds:
+        return None, None
+    attempts = np.asarray(attempts, np.float64)
+    accepts = np.asarray(accepts, np.float64)
+    w_att = (attempts - st.attempts_base)[:-1]  # last rung is never "lower"
+    w_acc = (accepts - st.accepts_base)[:-1]
+    if w_att.min() < adapt.min_attempts_per_pair:
+        return None, None
+    acceptance = w_acc / np.maximum(w_att, 1.0)
+    new_temps = ladder_lib.tune_ladder(
+        np.asarray(temps),
+        acceptance,
+        target=adapt.target,
+        rate=adapt.rate,
+        t_min=float(temps[0]),
+        t_max=float(temps[-1]),
+    )
+    st.attempts_base = attempts
+    st.accepts_base = accepts
+    st.rounds += 1
+    return new_temps, acceptance

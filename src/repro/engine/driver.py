@@ -1,0 +1,582 @@
+"""Chunked streaming PT driver: AOT mega-steps, online stats, ensembles.
+
+The seed driver (`repro.core.pt._run_jit`) compiled one XLA program per
+``n_sweeps`` value and materialized the whole O(intervals x R) trace on
+device.  This engine keeps the paper's device-residency insight but
+restructures the execution for unbounded runs (DESIGN.md §1):
+
+* **chunked driver** — one "mega-step" (``chunk_intervals`` intervals of
+  sweeps + swap phase + stats update) is AOT-lowered once with donated state
+  buffers and called from a host loop.  Compile cost is O(1) in run length
+  (at most two executables: the steady chunk and a remainder chunk) and the
+  state is updated in place on device;
+* **streaming statistics** — `repro.engine.stats` accumulators ride inside
+  the scan, so a 10k-sweep run carries O(R) diagnostic state instead of an
+  O(intervals x R) trace.  The full trace remains available as an opt-in
+  (``record_trace=True``) and is streamed to host per chunk, bounding device
+  memory by O(chunk_intervals x R);
+* **in-loop adaptation** — betas are a *traced* engine input (a leaf of
+  `EngineState`, not a static config field), so `repro.engine.adapt` can
+  retune the ladder between chunks with zero recompiles;
+* **ensemble axis** — the mega-step `vmap`s over ``n_chains`` independent
+  chains ``(C, R, ...)``; chain ``c`` draws its PRNG stream from
+  ``fold_in(key, c)`` so its results are invariant to the ensemble size.
+  ``shard`` composes with the axis by moving up one level: with one chain it
+  pins the replica axis (`repro.core.distributed.replica_sharding`); with an
+  ensemble it pins the leading *chain* axis — each device owns whole chains,
+  the embarrassingly parallel layout that saturates a mesh from one launch
+  with zero cross-chain communication.
+
+PRNG streams are identical to the seed driver (keys derive from the state's
+global sweep counter), so a fixed-ladder chunked run is bit-equal to the
+monolithic `repro.core.pt.run` — chunk boundaries are invisible to the chain.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import swap as swap_lib
+from repro.core.pt import PTState, init_replicas as pt_init_replicas
+from repro.core.systems import System
+from repro.engine import stats as stats_lib
+from repro.engine.adapt import AdaptConfig, AdaptState, maybe_adapt
+
+__all__ = [
+    "StepSpec",
+    "EngineConfig",
+    "EngineState",
+    "RunResult",
+    "Engine",
+    "make_interval_step",
+]
+
+
+# -- interval step: the shared physics core -----------------------------------
+#
+# This is the single source of truth for "one PT interval" — the monolithic
+# compatibility path (`repro.core.pt.run`) and the chunked engine both build
+# on it, which is what makes them bit-equal.
+
+
+@dataclasses.dataclass(frozen=True)
+class StepSpec:
+    """Hashable static shape of one PT interval (jit-static).
+
+    ``sweeps_per_interval`` sweeps, then one swap phase (if ``do_swap``).
+    """
+
+    n_replicas: int
+    sweeps_per_interval: int
+    do_swap: bool = True
+    criterion: str = "logistic"
+    swap_mode: str = "temp"
+
+    def __post_init__(self):
+        if self.sweeps_per_interval < 1:
+            raise ValueError("sweeps_per_interval must be >= 1")
+        if self.swap_mode not in ("temp", "state"):
+            raise ValueError(f"bad swap_mode {self.swap_mode!r}")
+
+
+def _batched_step(system: System):
+    """System step batched over replicas (kernel fast-path if provided)."""
+    fn = getattr(system, "batched_mcmc_step", None)
+    if fn is not None:
+        return fn
+    return jax.vmap(system.mcmc_step)
+
+
+def _sweep_once(system, spec: StepSpec, betas, st: PTState, shard=None) -> PTState:
+    """One parallel sweep of every replica at its current temperature."""
+    r = spec.n_replicas
+    # 2t/2t+1 split keeps sweep and swap key streams disjoint for any R.
+    keys = jax.vmap(jax.random.fold_in, (None, 0))(
+        jax.random.fold_in(st.key, 2 * st.t), jnp.arange(r, dtype=jnp.uint32)
+    )
+    if shard is not None:
+        # pin the per-replica key axis: the per-replica random lattices then
+        # generate shard-local (otherwise the partitioner replicates the
+        # whole PRNG stream — measured 16x redundant HBM traffic)
+        keys = jax.lax.with_sharding_constraint(keys, shard)
+    betas_slot = betas[st.rung]
+    states, de, _ = _batched_step(system)(keys, st.states, betas_slot)
+    return dataclasses.replace(
+        st,
+        states=states,
+        energy=st.energy + de.astype(jnp.float32),
+        t=st.t + 1,
+    )
+
+
+def _swap_phase(spec: StepSpec, betas, st: PTState):
+    """One parallel swap iteration; returns (state, diagnostics)."""
+    r = spec.n_replicas
+    k_swap = jax.random.fold_in(st.key, 2 * st.t + 1)
+    inv = jnp.argsort(st.rung)  # slot holding rung r
+    e_rung = st.energy[inv]
+    # Attempts are the structural pairing mask, NOT `prob > 0`: a badly
+    # spaced pair can underflow sigmoid to exactly 0 in f32 and would
+    # otherwise never register an attempt — starving the adaptive-ladder
+    # feedback in precisely the case it exists to fix.
+    perm, accept, prob, attempt = swap_lib.swap_permutation(
+        k_swap, st.phase, betas, e_rung, n=r, criterion=spec.criterion
+    )
+    if spec.swap_mode == "temp":
+        # Slot inv[r] now holds rung perm[r]; states stay in place.
+        new_rung = jnp.zeros((r,), jnp.int32).at[inv].set(perm)
+        st = dataclasses.replace(st, rung=new_rung)
+    else:
+        # Faithful mode: rung == slot identity; move the states themselves.
+        states = jax.tree_util.tree_map(lambda x: jnp.take(x, perm, axis=0), st.states)
+        st = dataclasses.replace(st, states=states, energy=st.energy[perm])
+    st = dataclasses.replace(st, phase=st.phase + 1)
+    return st, {"swap_accept": accept, "swap_prob": prob, "swap_attempt": attempt}
+
+
+def _observe(system, observables, st: PTState) -> Mapping[str, jax.Array]:
+    """Per-rung diagnostics (rung order, cold->hot)."""
+    inv = jnp.argsort(st.rung)
+    out = {"energy": st.energy[inv]}
+    for name, fn in (observables or {}).items():
+        vals = jax.vmap(fn)(st.states)
+        out[name] = vals[inv]
+    return out
+
+
+def make_interval_step(
+    system: System,
+    spec: StepSpec,
+    observables: Mapping[str, Callable] | None = None,
+    shard=None,
+):
+    """Build ``(PTState, betas) -> (PTState, record)`` for one interval.
+
+    ``record`` holds per-rung arrays: ``energy``, each observable, and
+    ``swap_accept``/``swap_prob`` at the lower rung of each attempted pair.
+    """
+    observables = dict(observables or {})
+
+    def constrain(st):
+        # keep the replica axis sharded through the loop — without this the
+        # partitioner may replicate the whole simulation (measured: 256x
+        # redundant compute on the production mesh; DESIGN.md §Perf)
+        if shard is None:
+            return st
+        from repro.core.distributed import shard_state
+
+        return shard_state(st, shard)
+
+    def interval_step(st: PTState, betas):
+        def sweep_body(s, _):
+            return constrain(_sweep_once(system, spec, betas, s, shard)), None
+
+        st, _ = jax.lax.scan(sweep_body, st, None, length=spec.sweeps_per_interval)
+        if spec.do_swap:
+            st, swap_diag = _swap_phase(spec, betas, st)
+        else:
+            z = jnp.zeros((spec.n_replicas,))
+            swap_diag = {
+                "swap_accept": z.astype(bool),
+                "swap_prob": z,
+                "swap_attempt": z.astype(bool),
+            }
+        rec = dict(_observe(system, observables, st))
+        rec.update(swap_diag)
+        return constrain(st), rec
+
+    return interval_step
+
+
+# -- engine configuration and state -------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static engine configuration (ladder *values* live in `EngineState`).
+
+    Attributes:
+      n_replicas: |R| rungs per chain.
+      swap_interval: sweeps between swap phases (0 disables swaps).
+      criterion: "logistic" (paper) | "metropolis".
+      swap_mode: "temp" (optimized) | "state" (faithful).
+      chunk_intervals: intervals fused into one compiled mega-step — the
+        device-memory bound for opt-in trace recording and the host-loop
+        cadence for adaptation/checkpointing.
+      n_chains: ensemble axis C — independent chains run per launch.
+      record_trace: opt-in full per-interval trace, streamed to host each
+        chunk (the seed's always-on behaviour).
+      track_stats: update the O(R) online statistics inside the mega-step.
+      measure_interval: record/stats cadence (sweeps) when swaps are off.
+      donate: donate the state buffers to the mega-step (in-place device
+        update).  Disable to re-run the same `EngineState` several times,
+        e.g. benchmark timing loops.
+    """
+
+    n_replicas: int
+    swap_interval: int = 100
+    criterion: str = "logistic"
+    swap_mode: str = "temp"
+    chunk_intervals: int = 8
+    n_chains: int = 1
+    record_trace: bool = False
+    track_stats: bool = True
+    measure_interval: int = 100
+    donate: bool = True
+
+    def __post_init__(self):
+        if self.chunk_intervals < 1:
+            raise ValueError("chunk_intervals must be >= 1")
+        if self.n_chains < 1:
+            raise ValueError("n_chains must be >= 1")
+
+    @property
+    def spec(self) -> StepSpec:
+        interval = self.swap_interval if self.swap_interval > 0 else self.measure_interval
+        return StepSpec(
+            n_replicas=self.n_replicas,
+            sweeps_per_interval=interval,
+            do_swap=self.swap_interval > 0,
+            criterion=self.criterion,
+            swap_mode=self.swap_mode,
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EngineState:
+    """Donated device-resident engine state (checkpointable pytree).
+
+    ``pt`` leaves are ``(R, ...)`` for a single chain or ``(C, R, ...)`` with
+    the ensemble axis; ``betas`` is the *shared* ladder ``(R,)`` — a traced
+    input, so retuning it never recompiles the mega-step.
+    """
+
+    pt: Any  # PTState
+    stats: Any  # stats_lib.OnlineStats
+    betas: jax.Array  # (R,) f32, rung order cold->hot
+
+
+@dataclasses.dataclass
+class RunResult:
+    """Host-side outcome of `Engine.run`.
+
+    Attributes:
+      summary: `stats.summarize` of the final accumulators (per chain when
+        C > 1; see `stats.combine_chains` for the pooled view).  In an
+        adaptive run the moment accumulators restart at every retune, so
+        ``mean_*``/``var_*`` estimate the *final* ladder only — never a pool
+        of samples drawn at different temperatures.
+      trace: concatenated per-interval trace (numpy, interval axis first for
+        C == 1, chain-first ``(C, T, R)`` otherwise) or None.
+      ladder_history: (n_retunes + 1, R) temperatures, initial ladder first.
+      n_sweeps: sweeps advanced by this call (per chain).
+    """
+
+    summary: dict[str, np.ndarray]
+    trace: dict[str, np.ndarray] | None
+    ladder_history: np.ndarray
+    n_sweeps: int
+
+
+# -- the engine ---------------------------------------------------------------
+
+
+class Engine:
+    """AOT-compiled chunked PT driver over a `System`.
+
+    One instance owns the compiled-executable cache; `init` builds fresh
+    state, `run` advances it.  The same instance can run many states (e.g.
+    checkpoint restarts) as long as shapes match.
+    """
+
+    def __init__(
+        self,
+        system: System,
+        config: EngineConfig,
+        observables: Mapping[str, Callable] | None = None,
+        shard=None,
+        adapt: AdaptConfig | None = None,
+    ):
+        if adapt is not None and not config.track_stats:
+            raise ValueError(
+                "adaptive ladders need the online swap counters: "
+                "EngineConfig(track_stats=True) is required with adapt"
+            )
+        self.system = system
+        self.config = config
+        self.observables = dict(observables or {})
+        self.shard = shard
+        self.adapt = adapt
+        self._names = ["energy"] + sorted(self.observables)
+        self._executables: dict[int, Any] = {}
+        # retune count for AdaptConfig.max_rounds — per Engine (i.e. per
+        # ladder lifetime), not per run() call, so repeated/resumed runs
+        # respect the cap cumulatively
+        self._adapt_rounds = 0
+
+    # -- state construction ----------------------------------------------------
+    def _init_single(self, key: jax.Array) -> PTState:
+        # one chain = seed init verbatim (keeps pt-vs-engine bit-equality)
+        shard = self.shard if self.config.n_chains == 1 else None
+        return pt_init_replicas(
+            self.system, self.config.n_replicas, key, shard=shard
+        )
+
+    def init(self, key: jax.Array, temps) -> EngineState:
+        """Fresh engine state on the given temperature ladder.
+
+        With an ensemble, chain ``c`` is seeded from ``fold_in(key, c)`` —
+        independent of ``n_chains``, so growing the ensemble never perturbs
+        existing chains.
+        """
+        temps = np.asarray(temps, np.float64)
+        if temps.shape != (self.config.n_replicas,):
+            raise ValueError(
+                f"ladder shape {temps.shape} != (n_replicas={self.config.n_replicas},)"
+            )
+        c = self.config.n_chains
+        if c == 1:
+            pt_st = self._init_single(key)
+        else:
+            keys = jax.vmap(jax.random.fold_in, (None, 0))(
+                key, jnp.arange(c, dtype=jnp.uint32)
+            )
+            pt_st = jax.vmap(self._init_single)(keys)
+            pt_st = self._constrain_chain_axis(pt_st)
+        stats = stats_lib.init_stats(
+            self.config.n_replicas, self._names, n_chains=0 if c == 1 else c
+        )
+        betas = jnp.asarray(1.0 / temps, jnp.float32)
+        return EngineState(pt=pt_st, stats=stats, betas=betas)
+
+    def reset_stats(self, state: EngineState) -> EngineState:
+        """Zero the online accumulators (e.g. after burn-in).
+
+        Flow labels (``direction``) are chain state, not statistics — they
+        survive the reset so replicas keep their up/down identity and
+        in-progress round trips complete in the new window.
+        """
+        c = self.config.n_chains
+        stats = stats_lib.init_stats(
+            self.config.n_replicas, self._names, n_chains=0 if c == 1 else c
+        )
+        stats = dataclasses.replace(stats, direction=state.stats.direction)
+        return dataclasses.replace(state, stats=stats)
+
+    def _constrain_chain_axis(self, tree):
+        """Pin the leading chain axis of every (C, ...) leaf to ``shard``.
+
+        With an ensemble, ``shard`` distributes whole chains over the mesh
+        (the replica-axis PartitionSpec applied one axis up); without a
+        shard this is a no-op.
+        """
+        if self.shard is None:
+            return tree
+
+        def con(x):
+            if getattr(x, "ndim", 0) >= 1:
+                return jax.lax.with_sharding_constraint(x, self.shard)
+            return x
+
+        return jax.tree_util.tree_map(con, tree)
+
+    # -- compiled mega-step ----------------------------------------------------
+    def _make_mega(self, chunk_len: int):
+        cfg = self.config
+        step = make_interval_step(
+            self.system,
+            cfg.spec,
+            self.observables,
+            self.shard if cfg.n_chains == 1 else None,
+        )
+
+        def mega(pt_st, stats, betas):
+            def body(carry, _):
+                pt_st, stats = carry
+                pt_st, rec = step(pt_st, betas)
+                if cfg.track_stats:
+                    stats = stats_lib.update_stats(stats, rec, pt_st.rung)
+                return (pt_st, stats), (rec if cfg.record_trace else None)
+
+            (pt_st, stats), trace = jax.lax.scan(
+                body, (pt_st, stats), None, length=chunk_len
+            )
+            return pt_st, stats, trace
+
+        if cfg.n_chains > 1:
+            vmega = jax.vmap(mega, in_axes=(0, 0, None))
+            if self.shard is None:
+                return vmega
+
+            def mega(pt_st, stats, betas):
+                # keep the chain axis pinned through the host loop — the
+                # constraint can't live inside the vmapped scan, but anchoring
+                # the program boundary stops the partitioner replicating the
+                # ensemble (same failure mode as the replica-axis note above)
+                pt_st, stats, trace = vmega(pt_st, stats, betas)
+                return (
+                    self._constrain_chain_axis(pt_st),
+                    self._constrain_chain_axis(stats),
+                    trace,
+                )
+
+        return mega
+
+    def _compiled(self, state: EngineState, chunk_len: int):
+        """AOT executable for a chunk of ``chunk_len`` intervals.
+
+        At most two entries ever exist per run length pattern (steady chunk +
+        remainder), so compile cost is O(1) in total sweeps.  State buffers
+        are donated: the engine updates in place, betas stay reusable.
+        """
+        exe = self._executables.get(chunk_len)
+        if exe is None:
+            sds = lambda tree: jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=getattr(x, "sharding", None)), tree
+            )
+            donate = (0, 1) if self.config.donate else ()
+            jitted = jax.jit(self._make_mega(chunk_len), donate_argnums=donate)
+            exe = jitted.lower(
+                sds(state.pt), sds(state.stats), sds(state.betas)
+            ).compile()
+            self._executables[chunk_len] = exe
+        return exe
+
+    # -- the host loop ---------------------------------------------------------
+    def run(
+        self,
+        state: EngineState,
+        n_sweeps: int,
+        *,
+        checkpoint=None,
+        checkpoint_every_chunks: int = 0,
+    ) -> tuple[EngineState, RunResult]:
+        """Advance ``n_sweeps`` sweeps (per chain) through compiled chunks.
+
+        Between chunks the host loop (a) streams the opt-in trace out,
+        (b) feeds measured swap acceptance to the ladder feedback when
+        ``adapt`` is configured (re-entering the same executable with retuned
+        betas), and (c) checkpoints the whole `EngineState` every
+        ``checkpoint_every_chunks`` chunks via ``checkpoint`` (a
+        `repro.checkpoint.manager.CheckpointManager`).
+
+        ``n_sweeps`` must be a multiple of the interval length
+        (``swap_interval``, or ``measure_interval`` when swaps are off).
+        """
+        spi = self.config.spec.sweeps_per_interval
+        if n_sweeps % spi != 0:
+            raise ValueError(
+                f"n_sweeps={n_sweeps} not a multiple of the interval ({spi} sweeps)"
+            )
+        n_intervals = n_sweeps // spi
+        many = self.config.n_chains > 1
+        temps = 1.0 / np.asarray(state.betas, np.float64)
+        ladder_history = [temps.astype(np.float32)]
+        adapt_st = AdaptState.fresh(self.config.n_replicas)
+        if self.adapt is not None:
+            # Window baselines start at the *current* counters, so resumed
+            # runs don't double-count pre-checkpoint attempts; the retune
+            # count carries across run() calls (max_rounds is per ladder).
+            adapt_st.attempts_base, adapt_st.accepts_base = self._pooled_counters(state)
+            adapt_st.rounds = self._adapt_rounds
+        chunks: list[dict[str, np.ndarray]] = []
+
+        done = 0
+        chunk_idx = 0
+        while done < n_intervals:
+            this = min(self.config.chunk_intervals, n_intervals - done)
+            pt_st, stats, trace = self._compiled(state, this)(
+                state.pt, state.stats, state.betas
+            )
+            state = EngineState(pt=pt_st, stats=stats, betas=state.betas)
+            done += this
+            chunk_idx += 1
+            if self.config.record_trace:
+                chunks.append(
+                    {k: np.asarray(v) for k, v in trace.items()}
+                )
+            if self.adapt is not None and done < n_intervals:
+                att, acc = self._pooled_counters(state)
+                new_temps, _ = maybe_adapt(temps, att, acc, self.adapt, adapt_st)
+                if new_temps is not None:
+                    temps = np.asarray(new_temps, np.float64)
+                    ladder_history.append(temps.astype(np.float32))
+                    self._adapt_rounds = adapt_st.rounds
+                    # Restart the moment accumulators: per-rung means/vars
+                    # must not pool samples drawn at two different ladders
+                    # (swap counters stay — the adapt window is baselined,
+                    # and flow/round-trip labels are chain state).
+                    zeros = lambda tree: jax.tree_util.tree_map(
+                        jnp.zeros_like, tree
+                    )
+                    stats = dataclasses.replace(
+                        state.stats,
+                        n_records=zeros(state.stats.n_records),
+                        mean=zeros(state.stats.mean),
+                        m2=zeros(state.stats.m2),
+                    )
+                    state = dataclasses.replace(
+                        state,
+                        stats=stats,
+                        betas=jnp.asarray(1.0 / temps, jnp.float32),
+                    )
+            if (
+                checkpoint is not None
+                and checkpoint_every_chunks > 0
+                and (chunk_idx % checkpoint_every_chunks == 0 or done == n_intervals)
+            ):
+                sweep = int(np.asarray(pt_st.t).reshape(-1)[0])
+                checkpoint.save(
+                    sweep, state, meta={"temps": [float(t) for t in temps]}
+                )
+
+        trace_out = None
+        if chunks:
+            axis = 1 if many else 0
+            trace_out = {
+                k: np.concatenate([c[k] for c in chunks], axis=axis)
+                for k in chunks[0]
+            }
+        result = RunResult(
+            summary=stats_lib.summarize(state.stats),
+            trace=trace_out,
+            ladder_history=np.stack(ladder_history),
+            n_sweeps=n_sweeps,
+        )
+        return state, result
+
+    def _pooled_counters(self, state: EngineState):
+        """Swap counters pooled over the ensemble axis (host numpy)."""
+        att = np.asarray(state.stats.swap_attempts, np.float64)
+        acc = np.asarray(state.stats.swap_accepts, np.float64)
+        if att.ndim == 2:
+            att, acc = att.sum(axis=0), acc.sum(axis=0)
+        return att, acc
+
+    # -- checkpoint integration ------------------------------------------------
+    def restore(self, checkpoint):
+        """Resume the latest engine checkpoint (or None if none exists).
+
+        The shape template is built abstractly (`eval_shape` — no system
+        init or energy evaluation runs) and every leaf is overwritten by the
+        restored arrays.  Returns ``(EngineState, meta)`` with betas exactly
+        as saved (including any mid-run adaptation).
+        """
+        temps = np.full((self.config.n_replicas,), 1.0, np.float32)
+        shapes = jax.eval_shape(lambda k: self.init(k, temps), jax.random.key(0))
+
+        def materialize(s):
+            if jax.dtypes.issubdtype(s.dtype, jax.dtypes.prng_key):
+                return jnp.broadcast_to(jax.random.key(0), s.shape)
+            return jnp.zeros(s.shape, s.dtype)
+
+        template = jax.tree_util.tree_map(materialize, shapes)
+        out = checkpoint.restore_latest(template)
+        if out is None:
+            return None
+        return out

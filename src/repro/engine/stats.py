@@ -1,0 +1,203 @@
+"""Device-side online statistics for streaming PT runs (DESIGN.md §1).
+
+The seed driver recorded a full per-interval trace — O(intervals x R) device
+memory, fetched to the host for post-hoc analysis (`repro.core.diagnostics`).
+At "run as long as the hardware allows" scale that trace dominates memory, so
+the engine keeps O(R) *online* accumulators on device instead and updates them
+inside the compiled mega-step:
+
+* **Welford moments** per rung (cold->hot order) for the energy and every
+  registered observable — numerically stable mean/variance with a single pass;
+* **swap counters** per adjacent rung pair — attempts and acceptances at the
+  lower rung of each pair (the same convention as
+  `diagnostics.swap_acceptance_rate`), which feed the in-loop ladder
+  adaptation (`repro.engine.adapt`);
+* **round-trip / flow tracking** per replica slot: a replica is labelled "up"
+  when it last touched the coldest rung and "down" when it last touched the
+  hottest; a round trip completes when a "down" replica returns to rung 0.
+  ``up_visits / labeled_visits`` per rung is the Katzgraber et al. flow
+  fraction f(T) used to judge ladder quality.  (Only meaningful in ``temp``
+  swap mode — in ``state`` mode rungs are pinned to slots.)
+
+All update math runs under `jit`/`vmap`; the summaries are host-side numpy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "OnlineStats",
+    "init_stats",
+    "update_stats",
+    "summarize",
+    "combine_chains",
+]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OnlineStats:
+    """O(R) accumulator pytree carried through the engine's scan.
+
+    Leaves are shaped ``(R,)`` for a single chain or ``(C, R)`` with the
+    ensemble axis; ``mean``/``m2`` are dicts keyed by series name ("energy"
+    plus observable names), in rung order (cold->hot).
+    """
+
+    n_records: jax.Array  # i32 scalar (per chain) — records accumulated
+    mean: Any  # dict[str, (R,) f32] running mean per rung
+    m2: Any  # dict[str, (R,) f32] running sum of squared deviations
+    swap_attempts: jax.Array  # (R,) f32 — attempts with rung r as lower member
+    swap_accepts: jax.Array  # (R,) f32 — acceptances, same convention
+    direction: jax.Array  # (R,) i8 per slot: +1 up (to hot), -1 down, 0 unlabelled
+    round_trips: jax.Array  # (R,) i32 per slot — completed 0 -> R-1 -> 0 cycles
+    up_visits: jax.Array  # (R,) f32 — records where rung r was held "up"
+    labeled_visits: jax.Array  # (R,) f32 — records where rung r was labelled
+
+
+def init_stats(
+    n_replicas: int, names: Sequence[str], n_chains: int = 0
+) -> OnlineStats:
+    """Zeroed accumulators; ``n_chains=0`` means no ensemble axis."""
+    shape = (n_replicas,) if n_chains == 0 else (n_chains, n_replicas)
+    scalar = () if n_chains == 0 else (n_chains,)
+    f = lambda: jnp.zeros(shape, jnp.float32)
+    return OnlineStats(
+        n_records=jnp.zeros(scalar, jnp.int32),
+        mean={k: f() for k in names},
+        m2={k: f() for k in names},
+        swap_attempts=f(),
+        swap_accepts=f(),
+        direction=jnp.zeros(shape, jnp.int8),
+        round_trips=jnp.zeros(shape, jnp.int32),
+        up_visits=f(),
+        labeled_visits=f(),
+    )
+
+
+def update_stats(stats: OnlineStats, rec, rung: jax.Array) -> OnlineStats:
+    """Fold one per-interval record into the accumulators (device-side).
+
+    Args:
+      stats: accumulators with un-batched ``(R,)`` leaves (the engine `vmap`s
+        this function over the chain axis).
+      rec: the interval record — per-rung series named in ``stats.mean`` plus
+        ``swap_accept``/``swap_attempt`` at the lower rung of attempted pairs.
+      rung: (R,) slot -> rung map after the interval (for flow tracking).
+    """
+    n = stats.n_records + 1
+    cnt = n.astype(jnp.float32)
+    mean, m2 = {}, {}
+    for k in stats.mean:
+        x = rec[k].astype(jnp.float32)
+        d = x - stats.mean[k]
+        m = stats.mean[k] + d / cnt
+        mean[k] = m
+        m2[k] = stats.m2[k] + d * (x - m)
+
+    # Attempts come from the structural pairing mask, not `prob > 0`: the
+    # acceptance probability can underflow to exactly 0 in f32 for badly
+    # spaced pairs, and those must still count as (rejected) attempts or the
+    # adaptive ladder would never see them.
+    attempt = rec["swap_attempt"].astype(jnp.float32)
+    accept = rec["swap_accept"].astype(jnp.float32)
+
+    r = stats.direction.shape[-1]
+    at_bottom = rung == 0
+    at_top = rung == r - 1
+    completed = at_bottom & (stats.direction == -1)
+    direction = jnp.where(
+        at_bottom, jnp.int8(1), jnp.where(at_top, jnp.int8(-1), stats.direction)
+    )
+    up = (direction == 1).astype(jnp.float32)
+    labeled = (direction != 0).astype(jnp.float32)
+    return OnlineStats(
+        n_records=n,
+        mean=mean,
+        m2=m2,
+        swap_attempts=stats.swap_attempts + attempt,
+        swap_accepts=stats.swap_accepts + accept,
+        direction=direction,
+        round_trips=stats.round_trips + completed.astype(jnp.int32),
+        up_visits=stats.up_visits.at[rung].add(up),
+        labeled_visits=stats.labeled_visits.at[rung].add(labeled),
+    )
+
+
+# -- host-side summaries -------------------------------------------------------
+
+
+def _assemble(n, means, m2s, attempts, accepts, round_trips, up, labeled):
+    """Shared summary assembly for the per-chain and chain-pooled views."""
+    out: dict[str, np.ndarray] = {"n_records": n}
+    denom = np.maximum(n - 1.0, 1.0)
+    denom = denom[..., None] if np.ndim(n) else denom  # broadcast over rungs
+    for k in means:
+        out[f"mean_{k}"] = means[k]
+        out[f"var_{k}"] = m2s[k] / denom
+    att, acc = attempts[..., :-1], accepts[..., :-1]
+    out["swap_attempts"] = att
+    out["swap_acceptance"] = np.where(att > 0, acc / np.maximum(att, 1.0), 0.0)
+    out["round_trips"] = round_trips
+    out["flow_up"] = np.where(labeled > 0, up / np.maximum(labeled, 1.0), 0.0)
+    return out
+
+
+def summarize(stats: OnlineStats) -> dict[str, np.ndarray]:
+    """Host-side summary of the accumulators (works for (R,) and (C, R)).
+
+    Returns ``mean_<k>``/``var_<k>`` per series (sample variance),
+    ``swap_acceptance`` per adjacent pair (shape (..., R-1)), ``round_trips``
+    per slot, and ``flow_up`` — the fraction of labelled visits at each rung
+    that were travelling cold->hot.
+    """
+    f64 = lambda x: np.asarray(x, np.float64)
+    return _assemble(
+        f64(stats.n_records),
+        {k: f64(v) for k, v in stats.mean.items()},
+        {k: f64(v) for k, v in stats.m2.items()},
+        f64(stats.swap_attempts),
+        f64(stats.swap_accepts),
+        np.asarray(stats.round_trips, np.int64),
+        f64(stats.up_visits),
+        f64(stats.labeled_visits),
+    )
+
+
+def combine_chains(stats: OnlineStats) -> dict[str, np.ndarray]:
+    """Merge the ensemble axis into one grand summary (host-side).
+
+    Welford states merge by Chan's parallel algorithm: counts add, means
+    combine weighted, and ``m2`` gains the between-chain spread term.  Swap
+    and round-trip counters simply sum (chains are independent simulations of
+    the same ladder).
+    """
+    n_c = np.asarray(stats.n_records, np.float64)  # (C,)
+    if n_c.ndim == 0:
+        return summarize(stats)
+    n = n_c.sum()
+    w = (n_c / max(n, 1.0))[:, None]  # (C, 1)
+    means, m2s = {}, {}
+    for k in stats.mean:
+        cm = np.asarray(stats.mean[k], np.float64)  # (C, R)
+        grand = (w * cm).sum(axis=0)
+        means[k] = grand
+        m2s[k] = np.asarray(stats.m2[k], np.float64).sum(axis=0) + (
+            n_c[:, None] * (cm - grand) ** 2
+        ).sum(axis=0)
+    pool = lambda x, dt=np.float64: np.asarray(x, dt).sum(axis=0)
+    return _assemble(
+        np.asarray(n),
+        means,
+        m2s,
+        pool(stats.swap_attempts),
+        pool(stats.swap_accepts),
+        pool(stats.round_trips, np.int64),
+        pool(stats.up_visits),
+        pool(stats.labeled_visits),
+    )

@@ -55,7 +55,7 @@ class Roofline:
     def dominant_analytic(self) -> str:
         """Dominant term with the analytic (TPU-fusion-realistic) memory
         model — the CPU backend barely fuses, so the HLO byte count is a
-        10-20x overestimate of TPU HBM traffic (EXPERIMENTS.md §Roofline)."""
+        10-20x overestimate of TPU HBM traffic (DESIGN.md §7)."""
         terms = {
             "compute": self.t_comp,
             "memory": self.t_mem_analytic,

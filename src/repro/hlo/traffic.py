@@ -3,7 +3,7 @@
 XLA's `cost_analysis()['bytes accessed']` is per-instruction (pre-fusion): it
 counts every producer/consumer pair even when the compiler fuses them into a
 single kernel, overestimating real HBM traffic ~10-20x (measured on this
-backend — EXPERIMENTS.md §Roofline notes).  This module walks only
+backend — DESIGN.md §7).  This module walks only
 **top-level** instructions (ENTRY, while bodies/conds, conditional branches —
 not fusion subcomputations): each one reads its operand buffers from and
 writes its result buffer to HBM, which is exactly the fusion-boundary

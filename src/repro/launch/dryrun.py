@@ -12,7 +12,7 @@ Per cell:
   * a full-config `lax.scan` lowering proves the production program compiles
     on the target mesh and yields `memory_analysis()` (does it fit?);
   * results land in results/dryrun/<arch>--<shape>--<mesh>[--variant].json,
-    consumed by benchmarks/roofline_report.py and EXPERIMENTS.md.
+    consumed by benchmarks/roofline_report.py (DESIGN.md §8).
 
 Usage:
   python -m repro.launch.dryrun --arch qwen3_32b --shape train_4k --mesh single

@@ -104,7 +104,7 @@ def param_shardings(mesh: Mesh, params_shapes: Any, fsdp: bool = False):
 
     fsdp=True additionally shards each weight's largest free dim over 'data'
     (train-time default: v5e HBM cannot hold a full f32 params+Adam copy per
-    data-parallel group for the larger assigned archs — see EXPERIMENTS.md).
+    data-parallel group for the larger assigned archs — see DESIGN.md §Perf).
     """
 
     def fn(path, leaf):

@@ -180,7 +180,7 @@ def decode_attention(p, cfg: ModelConfig, x, cache_k, cache_v, pos, *,
                      layer_window: int | None = None):
     """One-token self-attention against a cache.
 
-    Two cache layouts (DESIGN.md §4 / EXPERIMENTS.md §Perf):
+    Two cache layouts (DESIGN.md §4/§Perf):
       * full:  cache (B, KV, S, hd), write at `pos`, mask to causality (and
         the sliding window if any).
       * ring (``cfg.ring_cache``, windowed layers only): cache (B, KV, W, hd)

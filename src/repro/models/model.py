@@ -30,7 +30,7 @@ def prefill_logits(params, cfg: ModelConfig, batch):
     """Inference-prefill: full-sequence forward, last-position logits.
 
     (Cache emission during prefill is byte-traffic ≈ the KV cache size and is
-    accounted analytically in the roofline notes — see EXPERIMENTS.md.)
+    accounted analytically in the roofline notes — see DESIGN.md §7/§Perf.)
     """
     if cfg.family == "encdec":
         enc_out = whisper.encode(params, cfg, batch["frames"])

@@ -13,7 +13,7 @@ tokens (standard "dropping" MoE); the residual stream carries them unchanged.
 Sharding intent: experts over the 'model' axis (EP) when E % model == 0
 (qwen3-moe: 128/16), else intra-expert TP on F (mixtral: E=8 < 16).
 Token/capacity axes follow the data axis.  The argsort over T·k assignments
-is the main collective cost at scale — measured in EXPERIMENTS.md §Perf.
+is the main collective cost at scale — measured in DESIGN.md §Perf.
 """
 from __future__ import annotations
 

@@ -41,7 +41,7 @@ def make_train_step(cfg: ModelConfig, opt_cfg: opt_lib.AdamWConfig, *,
     weight is cast to bf16 and constrained to the given TP-only shardings,
     so the weight all-gather over 'data' happens ONCE per step *outside* the
     layer scan (a naive FSDP in_sharding makes GSPMD re-materialize inside
-    the scan body — measured catastrophic, see EXPERIMENTS.md §Perf).
+    the scan body — measured catastrophic, see DESIGN.md §Perf).
     Gradients flow back to the FSDP layout via GSPMD reduce-scatter.
     """
 

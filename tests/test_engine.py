@@ -1,0 +1,284 @@
+"""Chunked streaming engine correctness: chunked-vs-monolithic
+bit-equivalence, online-stats vs post-hoc diagnostics agreement, in-loop
+adaptive-ladder convergence, ensemble-axis independence, and mid-run
+checkpoint resume."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import diagnostics, gaussian, ising, ladder, pt
+from repro.engine import (
+    AdaptConfig,
+    Engine,
+    EngineConfig,
+    combine_chains,
+    init_stats,
+    summarize,
+    update_stats,
+)
+
+R, L = 6, 8
+TEMPS = np.asarray(ladder.linear_ladder(R, 1.0, 3.5))
+OBS = {"am": lambda s: jnp.abs(ising.magnetization(s))}
+
+
+def _engine(**kw):
+    system = ising.IsingSystem(length=L)
+    defaults = dict(n_replicas=R, swap_interval=5, chunk_intervals=3)
+    defaults.update({k: v for k, v in kw.items() if k in EngineConfig.__dataclass_fields__})
+    cfg = EngineConfig(**defaults)
+    adapt = kw.get("adapt")
+    return system, Engine(system, cfg, observables=OBS, adapt=adapt)
+
+
+# ---------- chunked == monolithic (same PRNG streams) ---------------------------
+@pytest.mark.parametrize("swap_mode", ["temp", "state"])
+@pytest.mark.parametrize("chunk_intervals", [1, 3, 16])
+def test_chunked_bit_equals_monolithic(swap_mode, chunk_intervals):
+    """Chunk boundaries must be invisible: the engine's streamed trace and
+    final state are bit-identical to the seed one-scan `pt.run`."""
+    sweeps = 60
+    system, eng = _engine(
+        swap_mode=swap_mode, chunk_intervals=chunk_intervals, record_trace=True
+    )
+    cfg = pt.PTConfig(
+        n_replicas=R,
+        temps=tuple(float(t) for t in TEMPS),
+        swap_interval=5,
+        swap_mode=swap_mode,
+    )
+    st = pt.init(system, cfg, jax.random.key(1))
+    st_mono, trace = pt.run(system, cfg, st, sweeps, observables=OBS)
+
+    est = eng.init(jax.random.key(1), TEMPS)
+    est, res = eng.run(est, sweeps)
+
+    for k in trace:
+        np.testing.assert_array_equal(np.asarray(trace[k]), res.trace[k], err_msg=k)
+    np.testing.assert_array_equal(np.asarray(st_mono.states), np.asarray(est.pt.states))
+    np.testing.assert_array_equal(np.asarray(st_mono.energy), np.asarray(est.pt.energy))
+    np.testing.assert_array_equal(np.asarray(st_mono.rung), np.asarray(est.pt.rung))
+
+
+def test_compile_cost_is_constant_in_run_length():
+    """Arbitrarily long runs reuse one executable (plus one remainder)."""
+    _, eng = _engine(chunk_intervals=4)
+    st = eng.init(jax.random.key(0), TEMPS)
+    st, _ = eng.run(st, 200)  # 40 intervals = 10 full chunks
+    st, _ = eng.run(st, 430)  # 86 intervals = 21 full + remainder of 2
+    assert set(eng._executables) == {4, 2}
+
+
+# ---------- online stats == post-hoc diagnostics --------------------------------
+def test_online_stats_match_posthoc_diagnostics():
+    sweeps = 100
+    _, eng = _engine(record_trace=True, chunk_intervals=4)
+    st = eng.init(jax.random.key(2), TEMPS)
+    st, res = eng.run(st, sweeps)
+    trace = res.trace
+
+    # Welford mean/var per rung == numpy over the full trace
+    for k in ("energy", "am"):
+        np.testing.assert_allclose(
+            res.summary[f"mean_{k}"], trace[k].mean(axis=0), rtol=1e-5, atol=1e-5
+        )
+        np.testing.assert_allclose(
+            res.summary[f"var_{k}"], trace[k].var(axis=0, ddof=1), rtol=1e-4, atol=1e-5
+        )
+    # swap counters == diagnostics.swap_acceptance_rate on the same trace
+    np.testing.assert_allclose(
+        res.summary["swap_acceptance"],
+        diagnostics.swap_acceptance_rate(trace),
+        rtol=1e-12,
+    )
+
+
+def test_round_trip_and_flow_tracking():
+    """On a 2-rung ladder every accepted swap pair completes half a cycle:
+    round trips must be counted and flow fractions must be in [0, 1]."""
+    system = gaussian.GaussianMixture(mus=(-1.0, 1.0), sigmas=(1.0, 1.0), step_size=1.0)
+    cfg = EngineConfig(n_replicas=2, swap_interval=1, chunk_intervals=50)
+    eng = Engine(system, cfg)
+    st = eng.init(jax.random.key(4), np.asarray([1.0, 2.0]))
+    st, res = eng.run(st, 200)
+    assert res.summary["round_trips"].sum() > 0
+    assert (res.summary["flow_up"] >= 0).all() and (res.summary["flow_up"] <= 1).all()
+    # reset_stats zeroes the counters but keeps the flow labels — direction
+    # is chain state, so in-progress round trips survive a measurement reset
+    st2 = eng.reset_stats(st)
+    np.testing.assert_array_equal(
+        np.asarray(st2.stats.direction), np.asarray(st.stats.direction)
+    )
+    assert int(np.asarray(st2.stats.n_records)) == 0
+    assert int(np.asarray(st2.stats.round_trips).sum()) == 0
+
+
+def test_welford_combine_chains_matches_concatenated_data(rng):
+    """Chan's merge over the chain axis == one-pass stats on pooled data."""
+    c, n, r = 3, 40, 5
+    data = rng.normal(size=(c, n, r)).astype(np.float32)
+    per_chain = []
+    for ci in range(c):
+        s = init_stats(r, ["energy"])
+        for t in range(n):
+            rec = {
+                "energy": jnp.asarray(data[ci, t]),
+                "swap_accept": jnp.zeros((r,), bool),
+                "swap_prob": jnp.zeros((r,)),
+                "swap_attempt": jnp.zeros((r,), bool),
+            }
+            s = update_stats(s, rec, jnp.arange(r, dtype=jnp.int32))
+        per_chain.append(s)
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_chain)
+    pooled = combine_chains(stacked)
+    flat = data.reshape(c * n, r).astype(np.float64)
+    np.testing.assert_allclose(pooled["mean_energy"], flat.mean(axis=0), rtol=1e-5)
+    np.testing.assert_allclose(
+        pooled["var_energy"], flat.var(axis=0, ddof=1), rtol=1e-4
+    )
+
+
+# ---------- in-loop adaptive ladders --------------------------------------------
+def test_adaptive_ladder_moves_acceptance_toward_target():
+    """Feedback between chunks should pull the measured per-pair acceptance
+    toward the target relative to the initial (deliberately skewed) ladder."""
+    system = ising.IsingSystem(length=L)
+    target = 0.4
+    temps0 = np.asarray(ladder.linear_ladder(R, 1.0, 4.0))
+    cfg = EngineConfig(
+        n_replicas=R, swap_interval=2, chunk_intervals=50, n_chains=4
+    )
+
+    def spread(adapt):
+        eng = Engine(system, cfg, adapt=adapt)
+        st = eng.init(jax.random.key(5), temps0)
+        st, _ = eng.run(st, 800)
+        # measure on a fresh window with the (possibly retuned) final ladder
+        st = eng.reset_stats(st)
+        st, _ = eng.run(st, 400)
+        acc = combine_chains(st.stats)["swap_acceptance"]
+        return float(np.abs(acc - target).mean()), eng
+
+    err_fixed, _ = spread(None)
+    err_adapted, eng = spread(
+        AdaptConfig(target=target, min_attempts_per_pair=20)
+    )
+    assert err_adapted < err_fixed, (err_adapted, err_fixed)
+
+
+def test_adapt_retunes_without_recompiling():
+    """Betas are traced: a retune must re-enter the same executable."""
+    system, eng = _engine(
+        swap_interval=2,
+        chunk_intervals=20,
+        adapt=AdaptConfig(target=0.4, min_attempts_per_pair=5),
+    )
+    st = eng.init(jax.random.key(6), TEMPS)
+    st, res = eng.run(st, 400)
+    assert len(res.ladder_history) > 1  # it did retune...
+    assert len(eng._executables) == 1  # ...with zero extra compiles
+    # endpoints stay pinned
+    np.testing.assert_allclose(res.ladder_history[-1][0], TEMPS[0], rtol=1e-5)
+    np.testing.assert_allclose(res.ladder_history[-1][-1], TEMPS[-1], rtol=1e-4)
+
+
+# ---------- ensemble axis --------------------------------------------------------
+def test_ensemble_chains_independent_of_ensemble_size():
+    """Chain c's stream derives from fold_in(key, c): its trajectory and
+    trace must be bit-identical whether it runs in a C=2 or C=4 ensemble."""
+    out = {}
+    for c in (2, 4):
+        _, eng = _engine(n_chains=c, record_trace=True)
+        st = eng.init(jax.random.key(7), TEMPS)
+        st, res = eng.run(st, 30)
+        out[c] = (np.asarray(st.pt.energy), np.asarray(st.pt.states), res.trace)
+    np.testing.assert_array_equal(out[2][0], out[4][0][:2])
+    np.testing.assert_array_equal(out[2][1], out[4][1][:2])
+    for k in out[2][2]:
+        np.testing.assert_array_equal(out[2][2][k], out[4][2][k][:2], err_msg=k)
+
+
+def test_ensemble_composes_with_sharding():
+    """With n_chains > 1 the shard pins the leading chain axis (whole chains
+    per device); the constraint must survive init -> mega-step -> results."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("x",))
+    shard = NamedSharding(mesh, P("x"))
+    system = ising.IsingSystem(length=L)
+    cfg = EngineConfig(n_replicas=R, swap_interval=5, chunk_intervals=2, n_chains=2)
+    eng = Engine(system, cfg, observables=OBS, shard=shard)
+    st = eng.init(jax.random.key(11), TEMPS)
+    assert st.pt.states.sharding.is_equivalent_to(shard, st.pt.states.ndim)
+    st, res = eng.run(st, 20)
+    assert np.asarray(st.pt.states).shape == (2, R, L, L)
+    assert st.pt.states.sharding.is_equivalent_to(shard, st.pt.states.ndim)
+    assert res.summary["mean_energy"].shape == (2, R)
+
+
+def test_ensemble_shapes_and_pooling():
+    c = 3
+    _, eng = _engine(n_chains=c)
+    st = eng.init(jax.random.key(8), TEMPS)
+    st, res = eng.run(st, 30)
+    assert np.asarray(st.pt.states).shape == (c, R, L, L)
+    assert res.summary["mean_energy"].shape == (c, R)
+    pooled = combine_chains(st.stats)
+    assert pooled["mean_energy"].shape == (R,)
+    assert pooled["n_records"] == c * 6
+
+
+# ---------- checkpoint: save/resume engine state mid-run -------------------------
+def test_checkpoint_resume_mid_run_bit_equal(tmp_path):
+    system, eng = _engine(chunk_intervals=2)
+    st0 = eng.init(jax.random.key(9), TEMPS)
+
+    # uninterrupted reference
+    ref, _ = eng.run(st0, 60)
+
+    # interrupted: save every chunk, "crash" after 40 sweeps, resume latest
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    st = eng.init(jax.random.key(9), TEMPS)
+    st, _ = eng.run(st, 40, checkpoint=mgr, checkpoint_every_chunks=1)
+    restored, meta = eng.restore(mgr)
+    assert meta["step"] == 40
+    resumed, _ = eng.run(restored, 20)
+
+    np.testing.assert_array_equal(np.asarray(ref.pt.states), np.asarray(resumed.pt.states))
+    np.testing.assert_array_equal(np.asarray(ref.pt.energy), np.asarray(resumed.pt.energy))
+    np.testing.assert_array_equal(np.asarray(ref.betas), np.asarray(resumed.betas))
+    # stats survive too: accumulators continue, not restart
+    assert int(np.asarray(resumed.stats.n_records)) == 12
+
+
+def test_checkpoint_preserves_adapted_ladder(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    system, eng = _engine(
+        swap_interval=2,
+        chunk_intervals=20,
+        adapt=AdaptConfig(target=0.4, min_attempts_per_pair=5),
+    )
+    st = eng.init(jax.random.key(10), TEMPS)
+    st, res = eng.run(st, 400, checkpoint=mgr, checkpoint_every_chunks=1)
+    assert len(res.ladder_history) > 1
+    restored, meta = eng.restore(mgr)
+    np.testing.assert_array_equal(np.asarray(st.betas), np.asarray(restored.betas))
+    np.testing.assert_allclose(1.0 / np.asarray(meta["temps"]), np.asarray(st.betas), rtol=1e-6)
+
+
+# ---------- guard rails -----------------------------------------------------------
+def test_run_rejects_non_interval_multiple():
+    _, eng = _engine(swap_interval=5)
+    st = eng.init(jax.random.key(0), TEMPS)
+    with pytest.raises(ValueError, match="multiple"):
+        eng.run(st, 17)
+
+
+def test_init_rejects_wrong_ladder_shape():
+    _, eng = _engine()
+    with pytest.raises(ValueError, match="ladder shape"):
+        eng.init(jax.random.key(0), np.ones(R + 1))

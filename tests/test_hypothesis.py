@@ -1,7 +1,14 @@
-"""Property-based tests (hypothesis) for system invariants."""
+"""Property-based tests (hypothesis) for system invariants.
+
+Skipped cleanly when `hypothesis` isn't installed (it's an optional test
+dependency — `pip install -e .[test]`), so a bare environment still runs the
+rest of the tier-1 suite."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ising, ladder, swap

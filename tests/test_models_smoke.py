@@ -13,6 +13,14 @@ from repro.train.train_step import init_state, make_train_step
 
 B, S = 2, 32
 
+# the two heaviest reduced configs on CPU (~20s/~13s per train-step test);
+# they run in the opt-in slow tier, the other eight keep tier-1 coverage
+_SLOW_ARCHS = {"recurrentgemma_9b", "llama32_vision_11b"}
+_ARCH_PARAMS = [
+    pytest.param(a, marks=pytest.mark.slow) if a in _SLOW_ARCHS else a
+    for a in ARCH_IDS
+]
+
 
 def _batch(cfg, key):
     ks = jax.random.split(key, 3)
@@ -27,7 +35,7 @@ def _batch(cfg, key):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", _ARCH_PARAMS)
 def test_forward_and_train_step(arch):
     cfg = get_config(arch, reduced=True)
     key = jax.random.key(0)
@@ -47,7 +55,7 @@ def test_forward_and_train_step(arch):
     assert np.isfinite(float(m3["loss"]))
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", _ARCH_PARAMS)
 def test_decode_step(arch):
     cfg = get_config(arch, reduced=True)
     params = model_lib.init_params(cfg, jax.random.key(0))

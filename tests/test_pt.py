@@ -69,7 +69,7 @@ def test_swap_permutation_is_permutation():
     for phase in (0, 1):
         for seed in range(5):
             e = jax.random.normal(jax.random.fold_in(key, seed), (n,)) * 10
-            perm, acc, prob = swap.swap_permutation(
+            perm, acc, prob, att = swap.swap_permutation(
                 jax.random.fold_in(key, 100 + seed), phase, betas, e, n=n
             )
             p = np.asarray(perm)
