@@ -5,6 +5,7 @@
   fig4/fig5     speedup.py          replica-parallel speed-up
   fig6          tile_sweep.py       block-size -> Pallas tile sweep
   fig7          swap_overhead.py    swap-interval cost + acceptance
+  zoo           systems_bench.py    per-system sweep throughput (system zoo)
   ptlm          ptlm_bench.py       paper technique on the LM pool
   roofline      roofline_report.py  §Roofline tables from the dry-run JSONs
 
@@ -22,13 +23,14 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import convergence, ptlm_bench, roofline_report, speedup
-    from benchmarks import swap_overhead, tile_sweep
+    from benchmarks import swap_overhead, systems_bench, tile_sweep
 
     suites = {
         "fig3": convergence.run,
         "fig45": speedup.run,
         "fig6": tile_sweep.run,
         "fig7": swap_overhead.run,
+        "zoo": systems_bench.run,
         "ptlm": ptlm_bench.run,
         "roofline": roofline_report.run,
     }

@@ -1,0 +1,76 @@
+"""System-zoo throughput: one row per PT-sampleable system (DESIGN.md §8).
+
+Times one engine mega-step per system at benchmark scale (larger than the
+validation-zoo instances, smaller than the paper's L=300 runs) and reports
+per-sweep cost plus the system-specific derived figure:
+
+  zoo_ising      checkerboard Pallas path (the paper's workload, reference row)
+  zoo_potts      q=3 Potts through the Pallas replica-tile kernel
+  zoo_ea         ±J Edwards-Anderson (pure-XLA disordered checkerboard)
+  zoo_hp         HP lattice protein (sequential-move chain, generic vmap path)
+  zoo_gaussian   1-D mixture (lower bound on driver overhead per sweep)
+
+Run: PYTHONPATH=src python -m benchmarks.run --only zoo
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import emit, time_call
+from repro.core import gaussian, hp, ising, ladder, potts, spin_glass
+from repro.engine import Engine, EngineConfig
+
+
+def _bench(name: str, system, temps, sweeps: int, derived: str):
+    r = len(temps)
+    cfg = EngineConfig(
+        n_replicas=r,
+        swap_interval=sweeps,
+        chunk_intervals=1,
+        donate=False,  # timing loop re-runs the same state
+    )
+    eng = Engine(system, cfg)
+    state = eng.init(jax.random.key(0), np.asarray(temps))
+    t = time_call(lambda st: eng.run(st, sweeps)[0].pt.energy, state, iters=3)
+    emit(f"zoo_{name}", t, f"sweeps={sweeps};R={r};us_per_sweep={t*1e6/sweeps:.1f};{derived}")
+
+
+def run(r: int = 16, length: int = 32, sweeps: int = 50):
+    temps = tuple(float(t) for t in ladder.paper_ladder(r))
+    _bench(
+        "ising",
+        ising.IsingSystem(length=length, use_pallas=True),
+        temps,
+        sweeps,
+        f"L={length};pallas=1",
+    )
+    _bench(
+        "potts",
+        potts.PottsSystem(shape=(length, length), q=3, use_pallas=True),
+        temps,
+        sweeps,
+        f"L={length};q=3;pallas=1",
+    )
+    _bench(
+        "ea",
+        spin_glass.EASpinGlass(shape=(length, length)),
+        temps,
+        sweeps,
+        f"L={length};xla_fallback=1",
+    )
+    _bench(
+        "hp",
+        hp.HPChain(sequence="HPHPPHHPHHPHPHHPPHPH"),
+        temps,
+        sweeps,
+        "N=20;moveset=end+corner",
+    )
+    _bench(
+        "gaussian",
+        gaussian.GaussianMixture(),
+        temps,
+        sweeps,
+        "modes=2",
+    )

@@ -1,0 +1,157 @@
+"""HP-model lattice protein: the paper's protein-folding motivation.
+
+The hydrophobic-polar model (Lau & Dill) folds a fixed H/P sequence as a
+self-avoiding chain on the 2-D square lattice; every non-bonded H-H contact
+(lattice-adjacent, not chain-adjacent) contributes ``-eps``::
+
+    E(conf) = -eps * #{ (i, j) : |i - j| > 1, ||p_i - p_j||_1 = 1, H_i H_j }
+
+Low temperature favours compact hydrophobic cores behind high entropic
+barriers — exactly the rugged landscape Hansmann used to introduce PT for
+biomolecules, and the workload the source paper names as PT's motivation.
+
+The state is the (N, 2) int32 coordinate chain on an unbounded lattice (the
+walk is translation-invariant; observables only use relative positions).
+This is the first *non-lattice-array* state through the PT stack: no
+checkerboard, no Pallas tile — it exercises the generic vmapped
+`System.mcmc_step` path and pytree handling through `engine.driver`.
+
+Move set (symmetric proposals => plain MH):
+
+* **end move** — a terminal monomer relocates to a uniformly drawn neighbour
+  of its chain neighbour;
+* **corner move** — an interior monomer at a right-angle corner flips to the
+  opposite corner of the square spanned by its chain neighbours.
+
+This Verdier-Stockmayer set is non-ergodic for long chains (frozen
+double-spiral traps) but provably ergodic at validation scale: the
+conformance suite BFS-checks the move graph against the full SAW enumeration
+for the registered chain (`repro.validate.exact.hp_move_graph_connected`,
+DESIGN.md §Validate) — ergodicity is an executable property here, not an
+assumption.  Pull moves (ergodic at every chain length, but with asymmetric
+proposal probabilities that need Hastings corrections) are the documented
+upgrade path when production chains outgrow the BFS-checkable regime.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["HPChain", "hp_energy", "radius_of_gyration_sq"]
+
+_DIRS = ((1, 0), (-1, 0), (0, 1), (0, -1))
+
+
+def _hmask(sequence: str) -> jnp.ndarray:
+    if not sequence or set(sequence) - {"H", "P"}:
+        raise ValueError(f"sequence must be a nonempty H/P string, got {sequence!r}")
+    return jnp.asarray([c == "H" for c in sequence], jnp.float32)
+
+
+def hp_energy(pos: jnp.ndarray, hmask: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """-eps * (number of non-bonded H-H lattice contacts); f32 scalar."""
+    n = pos.shape[0]
+    manh = jnp.sum(jnp.abs(pos[:, None, :] - pos[None, :, :]), axis=-1)
+    idx = jnp.arange(n)
+    nonbonded = jnp.abs(idx[:, None] - idx[None, :]) > 1
+    hh = hmask[:, None] * hmask[None, :]
+    contacts = jnp.sum(jnp.where((manh == 1) & nonbonded, hh, 0.0))
+    return -eps * contacts / 2.0  # each unordered pair counted twice above
+
+
+def radius_of_gyration_sq(pos: jnp.ndarray) -> jnp.ndarray:
+    """Squared radius of gyration (translation-invariant chain-size proxy)."""
+    p = pos.astype(jnp.float32)
+    c = jnp.mean(p, axis=0)
+    return jnp.mean(jnp.sum((p - c) ** 2, axis=-1))
+
+
+@dataclasses.dataclass(frozen=True)
+class HPChain:
+    """One replica of a 2-D HP lattice protein (System protocol).
+
+    Attributes:
+      sequence: H/P string; its length N fixes the chain length.
+      eps: H-H contact energy magnitude.
+      moves_per_step: attempted single-monomer moves fused into one
+        `mcmc_step` (defaults to N — one "sweep" per call — when 0).
+    """
+
+    sequence: str
+    eps: float = 1.0
+    moves_per_step: int = 0
+
+    def __post_init__(self):
+        _hmask(self.sequence)  # validate eagerly
+        if len(self.sequence) < 3:
+            raise ValueError("HP chain needs at least 3 monomers")
+
+    @property
+    def n_monomers(self) -> int:
+        return len(self.sequence)
+
+    def _n_moves(self) -> int:
+        return self.moves_per_step if self.moves_per_step > 0 else self.n_monomers
+
+    # -- System protocol ---------------------------------------------------
+    def init_state(self, key: jax.Array) -> jnp.ndarray:
+        """Straight rod along a random axis direction (always self-avoiding)."""
+        n = self.n_monomers
+        d = jnp.asarray(_DIRS, jnp.int32)[jax.random.randint(key, (), 0, 4)]
+        return jnp.arange(n, dtype=jnp.int32)[:, None] * d[None, :]
+
+    def energy(self, pos: jnp.ndarray) -> jnp.ndarray:
+        return hp_energy(pos, _hmask(self.sequence), self.eps)
+
+    def mcmc_step(self, key: jax.Array, pos: jnp.ndarray, beta: jnp.ndarray):
+        n = self.n_monomers
+        hmask = _hmask(self.sequence)
+        dirs = jnp.asarray(_DIRS, jnp.int32)
+        idx = jnp.arange(n)
+        nonbonded = jnp.abs(idx[:, None] - idx[None, :]) > 1  # (N, N)
+
+        def contacts_of(i, p, site):
+            """H-H contacts monomer i makes from ``site`` (|i-j| > 1 only)."""
+            manh = jnp.sum(jnp.abs(p - site[None, :]), axis=-1)
+            return jnp.sum(jnp.where((manh == 1) & nonbonded[i], hmask[i] * hmask, 0.0))
+
+        def body(_, carry):
+            pos, de_acc, n_acc, key = carry
+            key, k_site, k_dir, k_u = jax.random.split(key, 4)
+            i = jax.random.randint(k_site, (), 0, n)
+            is_end = (i == 0) | (i == n - 1)
+            # End move: uniform neighbour of the terminal's chain neighbour.
+            anchor = pos[jnp.where(i == 0, 1, n - 2)]
+            end_cand = anchor + dirs[jax.random.randint(k_dir, (), 0, 4)]
+            # Corner move: deterministic opposite corner (valid iff i-1, i+1
+            # span a right angle).  Clipped indices are junk for ends but the
+            # is_end select discards them.
+            a = pos[jnp.clip(i - 1, 0, n - 1)]
+            b = pos[jnp.clip(i + 1, 0, n - 1)]
+            corner_ok = (a[0] != b[0]) & (a[1] != b[1])
+            corner_cand = a + b - pos[i]
+            cand = jnp.where(is_end, end_cand, corner_cand)
+            movable = jnp.where(is_end, True, corner_ok)
+            moved = jnp.any(cand != pos[i])
+            occupied = jnp.any(jnp.all(pos == cand[None, :], axis=-1) & (idx != i))
+
+            de = -self.eps * (
+                contacts_of(i, pos, cand) - contacts_of(i, pos, pos[i])
+            )
+            accept = (
+                movable
+                & moved
+                & ~occupied
+                & (jax.random.uniform(k_u, ()) < jnp.exp(-beta * de))
+            )
+            pos = pos.at[i].set(jnp.where(accept, cand, pos[i]))
+            de_acc = de_acc + jnp.where(accept, de, 0.0)
+            n_acc = n_acc + accept.astype(jnp.int32)
+            return pos, de_acc, n_acc, key
+
+        pos, de, n_acc, _ = jax.lax.fori_loop(
+            0, self._n_moves(), body, (pos, jnp.float32(0), jnp.int32(0), key)
+        )
+        return pos, de, n_acc

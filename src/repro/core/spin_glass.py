@@ -1,0 +1,130 @@
+"""Edwards-Anderson ±J spin glass: quenched disorder carried in the state.
+
+The EA model is the canonical rugged-landscape PT workload (Earl & Deem;
+Katzgraber's feedback-optimized PT was developed on it)::
+
+    E(s) = - sum_<x,y> J_xy s_x s_y,     J_xy = ±J quenched (fixed per run)
+
+on an (H, W) periodic lattice.  Frustration (loops whose coupling product is
+negative) produces the many-valley landscape that motivates replica exchange
+in the first place — and makes it the natural stress test for the adaptive
+ladder (DESIGN.md §Validate).
+
+Architecturally this is the first system whose *state is a pytree carrying
+per-replica data beyond the lattice*: each replica's state bundles its spins
+with the coupling planes ``{"spins", "jr", "jd"}``.  Every replica of a run
+holds the *same* disorder realization (drawn deterministically from
+``disorder_seed``), as PT requires — replicas must sample one common target
+at different temperatures — but the couplings ride inside the state pytree,
+so `temp`-mode swaps, `state`-mode swaps (tree_map gather), checkpointing and
+the ensemble axis all exercise the generic pytree path through
+`engine.driver`.
+
+The update is the same simultaneous checkerboard MH as Ising (the EA lattice
+is bipartite; PBC needs even dims), in pure XLA — bond disorder breaks the
+single-J premise of the Ising Pallas kernel, so this system documents the
+XLA fallback path for inhomogeneous couplings.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import accept_prob
+
+__all__ = ["EASpinGlass", "ea_energy"]
+
+
+def ea_energy(state: dict, j_scale: float = 1.0) -> jnp.ndarray:
+    """E = -sum(jr * s * s_right) - sum(jd * s * s_down); PBC, f32.
+
+    ``jr[x, y]`` couples site (x, y) to its right neighbour (y+1 mod W);
+    ``jd`` to its down neighbour (x+1 mod H).  Each bond counted once.
+    """
+    s = state["spins"].astype(jnp.float32)
+    right = jnp.roll(s, -1, axis=-1)
+    down = jnp.roll(s, -1, axis=-2)
+    return -j_scale * (
+        jnp.sum(state["jr"] * s * right, axis=(-2, -1))
+        + jnp.sum(state["jd"] * s * down, axis=(-2, -1))
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class EASpinGlass:
+    """One replica of the 2-D ±J Edwards-Anderson model (System protocol).
+
+    Attributes:
+      shape: lattice (H, W), both even (checkerboard under PBC).
+      j: coupling magnitude (bonds are ±j with equal probability).
+      disorder_seed: seed of the quenched coupling draw — *every* replica
+        gets the same realization (the PT extended ensemble shares one
+        target), carried inside each replica's state pytree.
+      accept_rule: "metropolis" or "glauber" (see repro.kernels.ref).
+    """
+
+    shape: tuple
+    j: float = 1.0
+    disorder_seed: int = 0
+    accept_rule: str = "metropolis"
+
+    def __post_init__(self):
+        h, w = self.shape
+        if h % 2 != 0 or w % 2 != 0:
+            raise ValueError(
+                f"checkerboard EA needs even dims under PBC, got {self.shape}"
+            )
+
+    def disorder(self) -> tuple:
+        """The quenched ±j coupling planes (jr, jd) — deterministic."""
+        kr, kd = jax.random.split(jax.random.key(self.disorder_seed))
+        draw = lambda k: jnp.where(
+            jax.random.uniform(k, self.shape) < 0.5, self.j, -self.j
+        ).astype(jnp.float32)
+        return draw(kr), draw(kd)
+
+    # -- System protocol ---------------------------------------------------
+    def init_state(self, key: jax.Array) -> dict:
+        jr, jd = self.disorder()
+        u = jax.random.uniform(key, self.shape)
+        return {
+            "spins": jnp.where(u < 0.5, 1, -1).astype(jnp.int8),
+            "jr": jr,
+            "jd": jd,
+        }
+
+    def energy(self, state: dict) -> jnp.ndarray:
+        return ea_energy(state)
+
+    def mcmc_step(self, key: jax.Array, state: dict, beta: jnp.ndarray):
+        """One full checkerboard sweep (colour 0 then colour 1)."""
+        h, w = self.shape
+        s = state["spins"].astype(jnp.float32)
+        jr, jd = state["jr"], state["jd"]
+        ii = jax.lax.broadcasted_iota(jnp.int32, (h, w), 0)
+        jj = jax.lax.broadcasted_iota(jnp.int32, (h, w), 1)
+        parity = (ii + jj) % 2
+        u = jax.random.uniform(key, (2, h, w), jnp.float32)
+
+        de_total = jnp.float32(0.0)
+        n_acc = jnp.int32(0)
+        for color in (0, 1):
+            # Local field of each site through its 4 (disordered) bonds.
+            field = (
+                jr * jnp.roll(s, -1, axis=-1)
+                + jnp.roll(jr, 1, axis=-1) * jnp.roll(s, 1, axis=-1)
+                + jd * jnp.roll(s, -1, axis=-2)
+                + jnp.roll(jd, 1, axis=-2) * jnp.roll(s, 1, axis=-2)
+            )
+            de = 2.0 * s * field  # flip s -> -s changes E by +2 s h
+            accept = (u[color] < accept_prob(de, beta, self.accept_rule)) & (
+                parity == color
+            )
+            s = jnp.where(accept, -s, s)
+            de_total = de_total + jnp.sum(jnp.where(accept, de, 0.0))
+            n_acc = n_acc + jnp.sum(accept.astype(jnp.int32))
+        new = dict(state)
+        new["spins"] = s.astype(jnp.int8)
+        return new, de_total, n_acc

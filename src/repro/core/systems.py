@@ -8,10 +8,17 @@ first-class.
 All methods are written for a **single replica** and are `vmap`-ed by the PT
 driver over the replica axis (the paper's replica-level parallelism).  The
 state may be any pytree.
+
+`REGISTRY` holds the validation **system zoo**: one small exact-answerable
+instance per implemented system, with the observables and engine settings the
+statistical conformance suite (`tests/test_conformance.py`, backed by
+`repro.validate`) runs against ground truth.  Register new systems here and
+they are conformance-tested automatically (DESIGN.md §Validate).
 """
 from __future__ import annotations
 
-from typing import Any, Protocol, runtime_checkable
+import dataclasses
+from typing import Any, Callable, Mapping, Protocol, runtime_checkable
 
 import jax
 
@@ -60,3 +67,120 @@ def batched_energy(system: System, states: State) -> jax.Array:
     if fast is not None:
         return fast(states)
     return jax.vmap(system.energy)(states)
+
+
+# -- validation system zoo -----------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RegisteredSystem:
+    """One system-zoo entry: a small instance with an exact ground truth.
+
+    The conformance suite runs the chunked engine (adaptive ladder on,
+    ensemble axis on) on ``make()`` and checks every registered observable
+    against exact enumeration / analytic values within MCSE-derived
+    tolerances (`repro.validate.conformance`).
+
+    Attributes:
+      name: registry key; `repro.validate.conformance.EXACT` maps it to the
+        matching exact-reference function.
+      make: zero-arg factory for the validation-scale system instance.
+      observables: system -> {name: per-replica observable fn} (built lazily
+        so entries stay importable without constructing the system).
+      temps: initial ladder, cold->hot (the adaptive run retunes the
+        interior; exact references are evaluated at the *final* ladder).
+      swap_interval / n_chains / chunk_intervals: engine settings.
+      burn_sweeps: adaptation + equilibration sweeps discarded before
+        measurement (sized so `adapt_rounds` retunes all fire here).
+      n_batches / sweeps_per_batch: batch-means measurement schedule.
+      adapt_rounds: AdaptConfig.max_rounds for the validation run.
+      slow: exact reference costs > ~10 s -> conformance case runs in the
+        `slow` test tier, keeping tier-1 latency flat.
+    """
+
+    name: str
+    make: Callable[[], Any]
+    observables: Callable[[Any], Mapping[str, Callable]]
+    temps: tuple
+    swap_interval: int = 2
+    n_chains: int = 2
+    chunk_intervals: int = 25
+    burn_sweeps: int = 1200
+    n_batches: int = 8
+    sweeps_per_batch: int = 400
+    adapt_rounds: int = 2
+    slow: bool = False
+
+
+REGISTRY: dict[str, RegisteredSystem] = {}
+
+
+def register(entry: RegisteredSystem) -> RegisteredSystem:
+    if entry.name in REGISTRY:
+        raise ValueError(f"system {entry.name!r} already registered")
+    REGISTRY[entry.name] = entry
+    return entry
+
+
+def _register_zoo():
+    """Populate the default zoo.
+
+    System imports live inside this function (not at module top level)
+    because system modules import *this* module for the `System` protocol —
+    top-level imports here would be a cycle waiting to happen.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.gaussian import GaussianMixture
+    from repro.core.hp import HPChain, radius_of_gyration_sq
+    from repro.core.ising import IsingSystem, magnetization
+    from repro.core.potts import PottsSystem, potts_magnetization
+    from repro.core.spin_glass import EASpinGlass
+
+    # Glauber per-site acceptance everywhere checkerboard updates run:
+    # strictly stochastic flips keep the simultaneous update aperiodic on
+    # the tiny validation lattices (see repro.kernels.ref.accept_prob).
+    register(RegisteredSystem(
+        name="ising",
+        make=lambda: IsingSystem(length=4, accept_rule="glauber"),
+        observables=lambda s: {"absmag": lambda x: jnp.abs(magnetization(x))},
+        temps=(1.5, 2.0, 2.6, 3.4, 4.4),
+    ))
+    register(RegisteredSystem(
+        name="gaussian",
+        make=lambda: GaussianMixture(
+            mus=(-3.0, 3.0), sigmas=(0.8, 0.8), weights=(0.5, 0.5), step_size=1.0
+        ),
+        observables=lambda s: {"absx": jnp.abs},
+        temps=(1.0, 1.8, 3.2, 5.6, 10.0),
+    ))
+    register(RegisteredSystem(
+        name="potts",
+        make=lambda: PottsSystem(shape=(4, 4), q=3, accept_rule="glauber",
+                                 use_pallas=True),
+        observables=lambda s: {"pmag": lambda x: potts_magnetization(x, s.q)},
+        temps=(0.7, 1.0, 1.4, 2.0, 2.9),
+        slow=True,  # exact reference enumerates 3^16 ~ 43M states (~20 s)
+    ))
+    register(RegisteredSystem(
+        name="ea_spin_glass",
+        make=lambda: EASpinGlass(shape=(4, 4), disorder_seed=1,
+                                 accept_rule="glauber"),
+        observables=lambda s: {
+            "absmag": lambda x: jnp.abs(jnp.mean(x["spins"].astype(jnp.float32)))
+        },
+        temps=(0.8, 1.2, 1.8, 2.7, 4.0),
+    ))
+    register(RegisteredSystem(
+        name="hp_protein",
+        make=lambda: HPChain(sequence="HPHPPHHPHH"),
+        observables=lambda s: {"rg2": radius_of_gyration_sq},
+        temps=(0.6, 0.9, 1.4, 2.2, 3.4),
+        # chain moves are sequential fori_loop iterations — keep the
+        # measurement window lighter than the lattice systems'
+        sweeps_per_batch=300,
+        burn_sweeps=900,
+    ))
+
+
+_register_zoo()

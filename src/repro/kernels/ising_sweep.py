@@ -15,9 +15,11 @@ re-thought for the TPU memory hierarchy (DESIGN.md §2/§6):
   bit-exact with `ref.ising_sweep` (on hardware, `pltpu.prng_random_bits`
   in-kernel would remove that HBM stream — recorded as follow-up work).
 
-VMEM working set per grid step  ≈ r_blk · L² · (1 int8 + 2·4 u-f32 + 4 f32)
-≈ 13·r_blk·L² bytes; for the paper's L=300 and r_blk=8 that's ≈ 9.4 MB — just
-inside a v5e core's 16 MB of VMEM (checked by the tile sweep).
+VMEM working set per grid step ≈ r_blk · L² · (2 int8 in/out + 2·4 u-f32 +
+4 f32 widened + 4 f32 neighbour-sum) = 18·r_blk·L² bytes; for the paper's
+L=300 and r_blk=8 that's ≈ 12.4 MiB — just inside a v5e core's 16 MB of VMEM
+(`vmem_working_set_bytes`, pinned by tests/test_kernels.py and checked by the
+tile sweep).
 
 On hardware, the trailing lattice dim should be padded to a multiple of 128
 lanes for full VPU utilization (the wrapper in ops.py reports alignment).

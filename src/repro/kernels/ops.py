@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ising_sweep as _ising
+from repro.kernels import potts_sweep as _potts
 from repro.kernels import ref as _ref
 from repro.kernels import wkv6 as _wkv6
 
@@ -48,6 +49,41 @@ def ising_sweep(
     out, de, nacc = _ising.ising_sweep_pallas(
         spins, u, betas, j=j, b=b, rule=rule, r_blk=min(r_blk, spins.shape[0]),
         interpret=not _on_tpu(),
+    )
+    return out[:r], de[:r], nacc[:r]
+
+
+@partial(jax.jit, static_argnames=("q", "j", "rule", "r_blk", "use_pallas"))
+def potts_sweep(
+    states: jnp.ndarray,
+    u: jnp.ndarray,
+    betas: jnp.ndarray,
+    *,
+    q: int,
+    j: float = 1.0,
+    rule: str = "metropolis",
+    r_blk: int = 4,
+    use_pallas: bool = True,
+):
+    """Checkerboard Potts sweep; see `ref.potts_sweep` for the contract.
+
+    Pads the replica axis to a multiple of ``r_blk`` exactly like
+    `ising_sweep` (padded replicas run at beta=0 on junk lattices and are
+    dropped — grid shape stays static).  The default ``r_blk=4`` is the
+    documented v5e-VMEM-safe block for the paper's L=300 lattice (the Potts
+    working set is ~2.3x Ising's per cell; `potts_sweep.vmem_working_set_bytes`).
+    """
+    if not use_pallas:
+        return _ref.potts_sweep(states, u, betas, q=q, j=j, rule=rule)
+    r = states.shape[0]
+    pad = (-r) % r_blk
+    if pad:
+        states = jnp.concatenate([states, states[:pad]], axis=0)
+        u = jnp.concatenate([u, u[:pad]], axis=0)
+        betas = jnp.concatenate([betas, jnp.zeros((pad,), betas.dtype)], axis=0)
+    out, de, nacc = _potts.potts_sweep_pallas(
+        states, u, betas, q=q, j=j, rule=rule,
+        r_blk=min(r_blk, states.shape[0]), interpret=not _on_tpu(),
     )
     return out[:r], de[:r], nacc[:r]
 

@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: checkerboard sweep for the q-state Potts model.
+
+Same tile strategy as `repro.kernels.ising_sweep` (DESIGN.md §2/§6): one grid
+step holds a block of ``r_blk`` replicas with their full (H, W) lattices
+resident in VMEM, both colour half-sweeps run back-to-back in-kernel (one HBM
+round-trip of the colour block per sweep), colours are int8 in HBM and widened
+to int32 only inside VMEM.  The proposal randoms ride alongside the
+acceptance randoms as kernel inputs, so the CPU `interpret=True` path is
+bit-exact with `ref.potts_sweep`.
+
+VMEM working set per grid step ≈ r_blk · H · W · (2 int8 in/out + 4·4 u-f32 +
+2·4 i32 working copies + 4 de-f32) = 30·r_blk·H·W bytes — roughly 2.3× the
+Ising kernel's (the extra uniform plane pays for the colour proposal), still
+inside a v5e core's 16 MB for the paper's L=300 at r_blk=4 (~10.8 MB;
+`vmem_working_set_bytes`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _roll1(x: jnp.ndarray, shift: int, axis: int) -> jnp.ndarray:
+    """±1 circular shift via slice+concat (lowers on both Mosaic and CPU)."""
+    n = x.shape[axis]
+    if shift == 1:
+        a = jax.lax.slice_in_dim(x, n - 1, n, axis=axis)
+        b = jax.lax.slice_in_dim(x, 0, n - 1, axis=axis)
+    else:  # shift == -1
+        a = jax.lax.slice_in_dim(x, 1, n, axis=axis)
+        b = jax.lax.slice_in_dim(x, 0, 1, axis=axis)
+    return jnp.concatenate([a, b], axis=axis)
+
+
+def _accept_prob(de, beta, rule):
+    """Mirror of `ref.accept_prob` (kept local: kernel code is self-contained)."""
+    if rule == "metropolis":
+        return jnp.exp(-beta * de)
+    if rule == "glauber":
+        return jax.nn.sigmoid(-beta * de)
+    raise ValueError(rule)
+
+
+def _potts_sweep_kernel(
+    states_ref, u_ref, beta_ref, out_ref, de_ref, nacc_ref, *, q, j, rule
+):
+    """One full checkerboard sweep over an (r_blk, H, W) block."""
+    s = states_ref[...].astype(jnp.int32)  # widen in VMEM only
+    h, w = s.shape[-2], s.shape[-1]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (h, w), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (h, w), 1)
+    parity = (ii + jj) % 2
+    beta = beta_ref[...].astype(jnp.float32)[:, None, None]
+
+    de_total = jnp.zeros(s.shape[0], jnp.float32)
+    n_acc = jnp.zeros(s.shape[0], jnp.int32)
+    for color in (0, 1):  # static unroll: two half-sweeps, one HBM round-trip
+        d = 1 + jnp.floor(u_ref[:, color, 0] * (q - 1)).astype(jnp.int32)
+        trial = jax.lax.rem(s + d, q)
+        de = jnp.zeros(s.shape, jnp.float32)
+        for axis, shift in ((1, 1), (1, -1), (2, 1), (2, -1)):
+            nbr = _roll1(s, shift, axis)
+            de = de + j * (
+                (s == nbr).astype(jnp.float32) - (trial == nbr).astype(jnp.float32)
+            )
+        accept = (u_ref[:, color, 1] < _accept_prob(de, beta, rule)) & (
+            parity == color
+        )
+        s = jnp.where(accept, trial, s)
+        de_total = de_total + jnp.sum(jnp.where(accept, de, 0.0), axis=(1, 2))
+        n_acc = n_acc + jnp.sum(accept.astype(jnp.int32), axis=(1, 2))
+
+    out_ref[...] = s.astype(jnp.int8)
+    de_ref[...] = de_total
+    nacc_ref[...] = n_acc
+
+
+def potts_sweep_pallas(
+    states: jnp.ndarray,
+    u: jnp.ndarray,
+    betas: jnp.ndarray,
+    *,
+    q: int,
+    j: float = 1.0,
+    rule: str = "metropolis",
+    r_blk: int = 8,
+    interpret: bool = True,
+):
+    """pallas_call wrapper. See `repro.kernels.ref.potts_sweep` for semantics.
+
+    Args:
+      states: (R, H, W) int8 in {0..q-1}; R must be a multiple of ``r_blk``
+        (ops.py pads).
+      u: (R, 2, 2, H, W) f32 uniforms (colour x (proposal, accept)).
+      betas: (R,) f32.
+      q: number of colours (static).
+      r_blk: replicas per grid step (the Fig.-6 "block size" analogue).
+      interpret: True on CPU (bit-exact vs the oracle); False on real TPU.
+    """
+    r, h, w = states.shape
+    assert r % r_blk == 0, (r, r_blk)
+    grid = (r // r_blk,)
+    kernel = functools.partial(_potts_sweep_kernel, q=q, j=j, rule=rule)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r_blk, h, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((r_blk, 2, 2, h, w), lambda i: (i, 0, 0, 0, 0)),
+            pl.BlockSpec((r_blk,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((r_blk, h, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((r_blk,), lambda i: (i,)),
+            pl.BlockSpec((r_blk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, h, w), jnp.int8),
+            jax.ShapeDtypeStruct((r,), jnp.float32),
+            jax.ShapeDtypeStruct((r,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(states, u, betas)
+
+
+def vmem_working_set_bytes(r_blk: int, height: int, width: int) -> int:
+    """Static VMEM budget model (bytes per grid step; see module docstring)."""
+    cells = r_blk * height * width
+    states_in = cells  # int8
+    uniforms = cells * 4 * 4  # (2 colours) x (prop, acc) f32
+    widened = cells * 4  # i32 working copy
+    trial = cells * 4  # i32 proposal lattice
+    de = cells * 4  # f32 per-site energy delta
+    out = cells
+    return states_in + uniforms + widened + trial + de + out

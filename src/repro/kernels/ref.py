@@ -74,6 +74,62 @@ def ising_sweep(
     return s.astype(jnp.int8), de_total, n_acc
 
 
+def potts_sweep(
+    states: jnp.ndarray,
+    u: jnp.ndarray,
+    betas: jnp.ndarray,
+    *,
+    q: int,
+    j: float,
+    rule: str = "metropolis",
+):
+    """One full checkerboard sweep of the q-state Potts model, replica-batched.
+
+    The proposal at each site is a uniformly random *different* colour,
+    ``s' = (s + d) mod q`` with ``d = 1 + floor(u_prop * (q-1))`` — symmetric,
+    so plain MH acceptance applies.  Same two-colour scheme as the Ising
+    sweep: sites of one parity share no bonds (PBC needs even dims), so the
+    whole colour class updates simultaneously.
+
+    Args:
+      states: (R, H, W) int8 colours in {0..q-1}.
+      u: (R, 2, 2, H, W) float32 uniforms in [0, 1) — axis 1 is the colour
+        half-sweep, axis 2 is (proposal draw, acceptance draw).  Randoms are
+        inputs so the Pallas kernel and this oracle are bit-exact on CPU
+        (DESIGN.md §6).
+      betas: (R,) float32 inverse temperatures.
+      q: number of colours (static).
+      j: coupling; E = -j * sum_<xy> delta(s_x, s_y), each bond once.
+      rule: per-site acceptance rule (see `accept_prob`).
+
+    Returns:
+      (new_states (R,H,W) int8, delta_e (R,) f32, n_accepted (R,) i32).
+    """
+    h, w = states.shape[-2], states.shape[-1]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (h, w), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (h, w), 1)
+    parity = (ii + jj) % 2
+    beta = betas.astype(jnp.float32)[:, None, None]
+
+    s = states.astype(jnp.int32)
+    de_total = jnp.zeros(states.shape[0], jnp.float32)
+    n_acc = jnp.zeros(states.shape[0], jnp.int32)
+    for color in (0, 1):  # static unroll, exactly as the kernel does
+        d = 1 + jnp.floor(u[:, color, 0] * (q - 1)).astype(jnp.int32)
+        trial = jax.lax.rem(s + d, q)
+        de = jnp.zeros(s.shape, jnp.float32)
+        for axis, shift in ((-2, 1), (-2, -1), (-1, 1), (-1, -1)):
+            nbr = jnp.roll(s, shift, axis=axis)
+            de = de + j * (
+                (s == nbr).astype(jnp.float32) - (trial == nbr).astype(jnp.float32)
+            )
+        accept = (u[:, color, 1] < accept_prob(de, beta, rule)) & (parity == color)
+        s = jnp.where(accept, trial, s)
+        de_total = de_total + jnp.sum(jnp.where(accept, de, 0.0), axis=(-2, -1))
+        n_acc = n_acc + jnp.sum(accept.astype(jnp.int32), axis=(-2, -1))
+    return s.astype(jnp.int8), de_total, n_acc
+
+
 def wkv6(
     r: jnp.ndarray,
     k: jnp.ndarray,

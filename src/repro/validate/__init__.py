@@ -1,0 +1,26 @@
+"""Statistical validation: exact ground truth + MCSE machinery (DESIGN.md §Validate).
+
+Sampler correctness is an *executable property* here, not a visual benchmark:
+
+* `repro.validate.exact` — exact enumeration of Z/⟨E⟩/⟨order parameter⟩ for
+  small lattices (4x4 Ising/Potts/EA) and short HP chains, plus analytic /
+  quadrature moments for the Gaussian-mixture system;
+* `repro.validate.mcse` — effective sample size and Monte-Carlo standard
+  errors via batch means over the engine's Welford accumulators, and a
+  Geweke-style equality-in-distribution z-score;
+* `repro.validate.conformance` — drives the chunked engine (adaptive ladder
+  on, ensemble axis on) over a `repro.core.systems.REGISTRY` entry and
+  compares every observable to its exact reference within MCSE-derived
+  tolerances (`tests/test_conformance.py`).
+"""
+from repro.validate.conformance import ConformanceReport, assert_conforms, run_conformance
+from repro.validate.mcse import batch_mean_stats, effective_sample_size, geweke_z
+
+__all__ = [
+    "ConformanceReport",
+    "assert_conforms",
+    "batch_mean_stats",
+    "effective_sample_size",
+    "geweke_z",
+    "run_conformance",
+]

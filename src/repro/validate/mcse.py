@@ -1,0 +1,84 @@
+"""ESS / MCSE via batch means, on top of the engine's Welford accumulators.
+
+The streaming engine never materializes a sample trace, so classical
+autocorrelation-based error estimates don't apply directly.  Batch means
+recovers honest uncertainty from exactly what the engine *does* expose: run
+the measurement phase as ``B`` consecutive windows (resetting the O(R) moment
+accumulators between windows — `Engine.reset_stats`), treat each window's
+Welford mean as one draw of the batch-mean distribution, and estimate
+
+    MCSE(grand mean) = sd(batch means) / sqrt(M)
+
+over the ``M = B x n_chains`` windows (chains are independent, so each
+chain x window cell is its own batch).  When the batch length comfortably
+exceeds the integrated autocorrelation time the estimator is consistent —
+the conformance suite sizes windows in the hundreds of sweeps for chains
+whose IATs are a few sweeps.
+
+`effective_sample_size` inverts the same relation (ESS = pooled variance /
+MCSE²), and `geweke_z` turns the first-vs-last-window comparison into the
+classic equality-in-distribution drift check.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["batch_mean_stats", "effective_sample_size", "geweke_z"]
+
+
+def batch_mean_stats(batch_means: np.ndarray) -> tuple[np.ndarray, np.ndarray, int]:
+    """Grand mean and MCSE from per-batch means.
+
+    Args:
+      batch_means: (M, ...) — one row per batch (chain x window), trailing
+        axes arbitrary (typically the rung axis).
+
+    Returns:
+      (grand_mean (...,), mcse (...,), m) with
+      ``mcse = sd(batch means, ddof=1) / sqrt(M)``.
+    """
+    bm = np.asarray(batch_means, np.float64)
+    m = bm.shape[0]
+    if m < 2:
+        raise ValueError(f"batch means need M >= 2 batches, got {m}")
+    return bm.mean(axis=0), bm.std(axis=0, ddof=1) / np.sqrt(m), m
+
+
+def effective_sample_size(
+    pooled_var: np.ndarray, mcse: np.ndarray
+) -> np.ndarray:
+    """ESS implied by a variance and an MCSE: the n for which sd/sqrt(n)=MCSE.
+
+    ``pooled_var`` is the plain sample variance of the series (e.g. the mean
+    over batches of the engine's per-window `var_<k>`); dividing by the
+    squared batch-means MCSE yields the autocorrelation-discounted sample
+    count.  Zero-variance series (saturated observables) report ESS 0 —
+    treat as "no information", not "infinite precision".
+    """
+    v = np.asarray(pooled_var, np.float64)
+    se2 = np.asarray(mcse, np.float64) ** 2
+    return np.where(se2 > 0, v / np.maximum(se2, 1e-300), 0.0)
+
+
+def geweke_z(first: np.ndarray, second: np.ndarray) -> np.ndarray:
+    """Geweke-style drift z-score between two disjoint run segments.
+
+    Args:
+      first/second: (M1, ...) and (M2, ...) batch means from an early and a
+        late measurement window.
+
+    Returns ``(mean_1 - mean_2) / sqrt(se_1² + se_2²)`` — approximately
+    standard normal when both segments sample the same stationary law.
+    Degenerate segments (both errors 0) return 0 when the means agree and
+    ±inf when they don't.
+    """
+    m1, se1, _ = batch_mean_stats(first)
+    m2, se2, _ = batch_mean_stats(second)
+    denom = np.sqrt(se1**2 + se2**2)
+    diff = m1 - m2
+    with np.errstate(divide="ignore", invalid="ignore"):
+        z = np.where(
+            denom > 0, diff / np.maximum(denom, 1e-300),
+            np.where(diff == 0, 0.0, np.inf * np.sign(diff)),
+        )
+    return z

@@ -1,7 +1,14 @@
-"""Shared test configuration.
+"""Shared test configuration and property-test strategies.
 
 NOTE: tests run on the single real CPU device — the 512-device flag is set
 *only* inside `repro/launch/dryrun.py` (per DESIGN.md §7); never here.
+
+The bottom half defines the **shared hypothesis strategies** used by
+`test_hypothesis.py` and the conformance/property suites (ladders, lattice
+shapes, system configs), so individual test modules stop hand-rolling
+generators.  Everything hypothesis-dependent is guarded: a bare environment
+without the optional `hypothesis` dependency still runs the rest of tier-1
+(tests gate themselves with ``pytest.importorskip("hypothesis")``).
 """
 import os
 import sys
@@ -15,3 +22,68 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+# -- shared hypothesis strategies ----------------------------------------------
+try:
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only in bare environments
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def temp_ladders(draw, min_rungs=2, max_rungs=16):
+        """Strictly increasing cold->hot ladder as a float tuple.
+
+        Built from a cold endpoint plus positive log-gaps, which covers
+        linear-ish, geometric-ish and badly skewed ladders alike.
+        """
+        r = draw(st.integers(min_rungs, max_rungs))
+        t0 = draw(st.floats(0.3, 2.0, allow_nan=False, allow_infinity=False))
+        gaps = draw(
+            st.lists(st.floats(0.01, 0.8), min_size=r - 1, max_size=r - 1)
+        )
+        temps = np.exp(np.cumsum([np.log(t0)] + gaps))
+        return tuple(float(t) for t in temps)
+
+    @st.composite
+    def lattice_shapes(draw, even=True, min_side=2, max_side=12):
+        """(H, W) lattice shape; ``even=True`` keeps PBC 2-colourability."""
+        side = st.integers(min_side, max_side)
+        h, w = draw(side), draw(side)
+        if even:
+            h, w = 2 * ((h + 1) // 2), 2 * ((w + 1) // 2)
+        return (h, w)
+
+    @st.composite
+    def ising_systems(draw):
+        """Checkerboard-capable IsingSystem configs (construction deferred)."""
+        from repro.core.ising import IsingSystem
+
+        h, _ = draw(lattice_shapes(min_side=2, max_side=6))
+        return IsingSystem(
+            length=h,
+            j=draw(st.floats(-2, 2, allow_nan=False)),
+            b=draw(st.floats(-1, 1, allow_nan=False)),
+            accept_rule=draw(st.sampled_from(["metropolis", "glauber"])),
+        )
+
+    @st.composite
+    def potts_systems(draw):
+        from repro.core.potts import PottsSystem
+
+        return PottsSystem(
+            shape=draw(lattice_shapes(min_side=2, max_side=6)),
+            q=draw(st.integers(2, 5)),
+            j=draw(st.floats(-2, 2, allow_nan=False)),
+            accept_rule=draw(st.sampled_from(["metropolis", "glauber"])),
+        )
+
+    @st.composite
+    def rung_energies(draw, n):
+        """(n,) float32 energy vector with PT-realistic spread."""
+        vals = draw(st.lists(st.floats(-60, 60, width=32), min_size=n, max_size=n))
+        return np.asarray(vals, np.float32)

@@ -1,0 +1,120 @@
+"""Statistical conformance: the engine vs exact ground truth, per system.
+
+One parametrized case per `repro.core.systems.REGISTRY` entry — every system
+in the zoo (Ising, Gaussian, Potts, EA spin glass, HP protein) runs through
+the *production* path (chunked streaming engine, adaptive ladder ON,
+``n_chains > 1`` ensemble axis ON) and its sampled ⟨E⟩ + order-parameter
+means must match exact enumeration / analytic values within 4x the
+batch-means MCSE at every rung of the final adapted ladder
+(`repro.validate.conformance`, DESIGN.md §Validate).
+
+Entries whose exact reference costs > ~10 s (`entry.slow`) ride the `slow`
+tier so tier-1 latency stays flat; `pytest -m slow` runs them.
+"""
+import numpy as np
+import pytest
+
+from repro.core import systems
+from repro.validate import assert_conforms, run_conformance
+from repro.validate import exact as exact_lib
+from repro.validate.conformance import EXACT
+
+CASES = [
+    pytest.param(name, marks=pytest.mark.slow if entry.slow else [])
+    for name, entry in sorted(systems.REGISTRY.items())
+]
+
+
+def test_registry_covers_expected_zoo():
+    """The zoo the paper motivates: lattice benchmark (Ising), multimodal
+    toy (Gaussian), beyond-Ising lattice (Potts), disordered (EA), and the
+    protein-folding workload (HP) — each with an exact reference."""
+    assert set(systems.REGISTRY) == {
+        "ising",
+        "gaussian",
+        "potts",
+        "ea_spin_glass",
+        "hp_protein",
+    }
+    assert set(EXACT) == set(systems.REGISTRY)
+    for entry in systems.REGISTRY.values():
+        assert entry.n_chains > 1  # ensemble axis always exercised
+        assert entry.adapt_rounds > 0  # adaptive ladder always exercised
+
+
+@pytest.mark.parametrize("name", CASES)
+def test_engine_conforms_to_exact_reference(name):
+    entry = systems.REGISTRY[name]
+    report = run_conformance(entry, seed=0)
+    # The adaptive machinery must have actually fired during burn-in.
+    assert report.n_retunes == entry.adapt_rounds, report.n_retunes
+    # Endpoints stay pinned; interior rungs may move.
+    np.testing.assert_allclose(report.temps[0], entry.temps[0], rtol=1e-5)
+    np.testing.assert_allclose(report.temps[-1], entry.temps[-1], rtol=1e-4)
+    assert np.all(np.diff(report.temps) > 0)
+    assert_conforms(report, z_max=4.0, geweke_max=4.0)
+    # Batch-means machinery sanity: every series carries real information.
+    for k, ess in report.ess.items():
+        assert np.all(ess > 10), (k, ess)
+
+
+def test_hp_move_graph_ergodic_at_registered_length():
+    """The HP conformance answer is only exact if end+corner moves reach the
+    whole SAW space at the registered chain length — check it, don't assume."""
+    n = systems.REGISTRY["hp_protein"].make().n_monomers
+    assert exact_lib.hp_move_graph_connected(n)
+
+
+@pytest.mark.slow
+def test_hp_occupancy_chi_square_exact_distribution():
+    """Strongest equality-in-distribution check: thinned MH samples of a tiny
+    HP chain must occupy the *full* 100-conformation space with Boltzmann
+    frequencies (chi-square over every state, not just moment matching)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import hp
+    from repro.validate import exact as exact_mod
+
+    system = hp.HPChain(sequence="HHPHH", moves_per_step=50)  # 50 ~ >> IAT
+    saws = exact_mod.enumerate_saws(4)
+    key_of = {tuple(map(tuple, p)): i for i, p in enumerate(saws)}
+    e = np.asarray(jax.vmap(system.energy)(jnp.asarray(saws, jnp.int32)))
+    w = np.exp(-e / 1.0)
+    w /= w.sum()
+
+    walkers, records, burn = 128, 220, 20
+    pos = jax.vmap(system.init_state)(jax.random.split(jax.random.key(0), walkers))
+    beta = jnp.ones((walkers,))
+    step = jax.jit(jax.vmap(system.mcmc_step, in_axes=(0, 0, 0)))
+    counts = np.zeros(len(saws))
+    key = jax.random.key(1)
+    for t in range(records):
+        key, sub = jax.random.split(key)
+        pos, _, _ = step(jax.random.split(sub, walkers), pos, beta)
+        if t >= burn:
+            arr = np.asarray(pos)
+            arr = arr - arr[:, :1]  # normalize translation
+            for i in range(walkers):
+                counts[key_of[tuple(map(tuple, arr[i]))]] += 1
+    n = counts.sum()
+    assert np.all(counts > 0)  # ergodic: every conformation visited
+    chi2 = float(((counts - w * n) ** 2 / (w * n)).sum())
+    dof = len(saws) - 1
+    # ~1e-4 tail of chi2_99 with near-iid (thinned) samples
+    assert chi2 < 1.65 * dof, (chi2, dof)
+
+
+def test_conformance_catches_a_wrong_sampler():
+    """Negative control: a deliberately biased reference must fail the gate —
+    otherwise the 4xMCSE tolerance is too loose to mean anything."""
+    entry = systems.REGISTRY["ising"]
+
+    def biased_exact(system, temps):
+        out = exact_lib.ising_exact(system, temps)
+        out["energy"] = out["energy"] + 1.0  # ~ >> 4 MCSE at this run length
+        return out
+
+    report = run_conformance(entry, seed=0, exact_fn=biased_exact)
+    with pytest.raises(AssertionError, match="disagrees"):
+        assert_conforms(report)

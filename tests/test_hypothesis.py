@@ -1,5 +1,7 @@
-"""Property-based tests (hypothesis) for system invariants.
+"""Property-based tests (hypothesis) for system, swap and rebalance invariants.
 
+Generators come from the shared strategies in `conftest.py` (ladders, lattice
+shapes, system configs) — the same pool the conformance suite draws on.
 Skipped cleanly when `hypothesis` isn't installed (it's an optional test
 dependency — `pip install -e .[test]`), so a bare environment still runs the
 rest of the tier-1 suite."""
@@ -11,7 +13,16 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import ising, ladder, swap
+from conftest import (
+    ising_systems,
+    lattice_shapes,
+    potts_systems,
+    rung_energies,
+    temp_ladders,
+)
+from repro.core import distributed, ising, ladder, swap
+from repro.core.pt import PTState
+from repro.engine.driver import StepSpec, _swap_phase
 from repro.kernels import ref
 
 SETTINGS = dict(max_examples=25, deadline=None)
@@ -25,27 +36,47 @@ def test_pairing_involution_property(n, phase):
     assert np.all(np.abs(p - np.arange(n)) <= 1)
 
 
-@given(
-    l=st.integers(2, 6).map(lambda k: 2 * k),  # checkerboard needs even L (PBC)
-    seed=st.integers(0, 2**20),
-    j=st.floats(-2, 2, allow_nan=False),
-    b=st.floats(-1, 1, allow_nan=False),
-)
+@given(system=ising_systems(), seed=st.integers(0, 2**20))
 @settings(**SETTINGS)
-def test_sweep_energy_delta_property(l, seed, j, b):
+def test_sweep_energy_delta_property(system, seed):
     """For ANY even (L, J, B): incremental dE == recomputed energy difference
     and spins stay in {-1, +1}."""
+    l, j, b = system.length, system.j, system.b
     key = jax.random.key(seed)
     k1, k2, k3 = jax.random.split(key, 3)
     spins = jnp.where(jax.random.uniform(k1, (2, l, l)) < 0.5, 1, -1).astype(jnp.int8)
     u = jax.random.uniform(k2, (2, 2, l, l))
     betas = jax.random.uniform(k3, (2,), minval=0.05, maxval=2.0)
-    new, de, nacc = ref.ising_sweep(spins, u, betas, j=j, b=b)
+    new, de, nacc = ref.ising_sweep(spins, u, betas, j=j, b=b, rule=system.accept_rule)
     e0 = ising.lattice_energy(spins, j, b)
     e1 = ising.lattice_energy(new, j, b)
     np.testing.assert_allclose(np.asarray(e1 - e0), np.asarray(de), rtol=1e-4, atol=1e-2)
     assert set(np.unique(np.asarray(new))).issubset({-1, 1})
     assert (np.asarray(nacc) >= 0).all() and (np.asarray(nacc) <= 2 * l * l).all()
+
+
+@given(system=potts_systems(), seed=st.integers(0, 2**20))
+@settings(**SETTINGS)
+def test_potts_sweep_energy_delta_property(system, seed):
+    """Potts mirror of the Ising delta property: incremental dE is exact,
+    colours stay in {0..q-1}, and at q=2 the sweep is a valid Ising twin."""
+    h, w = system.shape
+    key = jax.random.key(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    states = jax.random.randint(k1, (2, h, w), 0, system.q).astype(jnp.int8)
+    u = jax.random.uniform(k2, (2, 2, 2, h, w))
+    betas = jax.random.uniform(k3, (2,), minval=0.05, maxval=2.0)
+    new, de, nacc = ref.potts_sweep(
+        states, u, betas, q=system.q, j=system.j, rule=system.accept_rule
+    )
+    from repro.core.potts import potts_energy
+
+    e0 = potts_energy(states, system.q, system.j)
+    e1 = potts_energy(new, system.q, system.j)
+    np.testing.assert_allclose(np.asarray(e1 - e0), np.asarray(de), rtol=1e-4, atol=1e-2)
+    got = set(np.unique(np.asarray(new)))
+    assert got.issubset(set(range(system.q)))
+    assert (np.asarray(nacc) >= 0).all() and (np.asarray(nacc) <= h * w).all()
 
 
 @given(seed=st.integers(0, 2**20), n=st.integers(2, 32))
@@ -65,6 +96,154 @@ def test_swap_probability_bounds_and_symmetry(seed, n):
     np.testing.assert_allclose(np.asarray(p + q2), 1.0, rtol=1e-5)
 
 
+# ---------- swap.py invariants through the driver's swap phase ------------------
+@given(
+    temps=temp_ladders(min_rungs=2, max_rungs=12),
+    data=st.data(),
+    seed=st.integers(0, 2**16),
+    phases=st.integers(1, 6),
+)
+@settings(**SETTINGS)
+def test_temp_mode_swap_conserves_energy_and_permutation(temps, data, seed, phases):
+    """For ANY ladder / energies / phase count: `temp`-mode swap phases only
+    relabel rungs — the rung vector stays a permutation, and the slot energy
+    and state vectors are bit-untouched (the O(R·L²) -> O(R) guarantee)."""
+    r = len(temps)
+    energies = data.draw(rung_energies(r))
+    betas = jnp.asarray(1.0 / np.asarray(temps), jnp.float32)
+    spec = StepSpec(n_replicas=r, sweeps_per_interval=1, swap_mode="temp")
+    st_pt = PTState(
+        states=jnp.arange(r, dtype=jnp.int32),  # sentinel payload per slot
+        energy=jnp.asarray(energies),
+        rung=jnp.arange(r, dtype=jnp.int32),
+        key=jax.random.key(seed),
+        phase=jnp.int32(0),
+        t=jnp.int32(1 + seed % 7),
+    )
+    for _ in range(phases):
+        st_pt, diag = _swap_phase(spec, betas, st_pt)
+        assert sorted(np.asarray(st_pt.rung).tolist()) == list(range(r))
+        np.testing.assert_array_equal(np.asarray(st_pt.states), np.arange(r))
+        np.testing.assert_array_equal(np.asarray(st_pt.energy), energies)
+        # diagnostics mask structure: attempts only at lower pair members
+        att = np.asarray(diag["swap_attempt"])
+        assert not att[-1]
+        assert np.asarray(diag["swap_accept"])[~att].sum() == 0
+
+
+@given(
+    temps=temp_ladders(min_rungs=2, max_rungs=12),
+    data=st.data(),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_state_mode_swap_permutes_payload_with_energy(temps, data, seed):
+    """`state`-mode swaps move states and energies with the SAME gather: the
+    (payload, energy) pairing per replica must survive any accepted swap."""
+    r = len(temps)
+    energies = data.draw(rung_energies(r))
+    betas = jnp.asarray(1.0 / np.asarray(temps), jnp.float32)
+    spec = StepSpec(n_replicas=r, sweeps_per_interval=1, swap_mode="state")
+    payload = jnp.asarray(energies)  # states mirror energies exactly
+    st_pt = PTState(
+        states=payload,
+        energy=jnp.asarray(energies),
+        rung=jnp.arange(r, dtype=jnp.int32),
+        key=jax.random.key(seed),
+        phase=jnp.int32(seed % 2),
+        t=jnp.int32(0),
+    )
+    st_pt, _ = _swap_phase(spec, betas, st_pt)
+    np.testing.assert_array_equal(np.asarray(st_pt.states), np.asarray(st_pt.energy))
+    # multiset of energies conserved; rung binding stays the identity
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(st_pt.energy)), np.sort(energies)
+    )
+    np.testing.assert_array_equal(np.asarray(st_pt.rung), np.arange(r))
+
+
+# ---------- elastic rebalance properties ----------------------------------------
+@given(temps=temp_ladders(min_rungs=2, max_rungs=24), new_r=st.integers(2, 40))
+@settings(**SETTINGS)
+def test_rebalance_ladder_properties(temps, new_r):
+    """Any resample preserves endpoints and strict cold->hot monotonicity."""
+    out = distributed.rebalance_ladder(np.asarray(temps), new_r)
+    assert out.shape == (new_r,)
+    np.testing.assert_allclose(out[0], temps[0], rtol=1e-5)
+    np.testing.assert_allclose(out[-1], temps[-1], rtol=1e-5)
+    assert np.all(np.diff(out) > 0)
+
+
+def _pt_state(r, perm_seed):
+    """Synthetic PTState with distinct payloads and a random rung permutation."""
+    rng_ = np.random.default_rng(perm_seed)
+    rung = rng_.permutation(r).astype(np.int32)
+    return PTState(
+        states=jnp.arange(r, dtype=jnp.float32) * 10.0,
+        energy=jnp.arange(r, dtype=jnp.float32),
+        rung=jnp.asarray(rung),
+        key=jax.random.key(0),
+        phase=jnp.int32(0),
+        t=jnp.int32(0),
+    )
+
+
+@given(
+    r_old=st.integers(2, 16),
+    new_r=st.integers(2, 16),
+    perm_seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_rebalance_state_shrink_grow_properties(r_old, new_r, perm_seed):
+    """Elastic resize invariants over the whole (r_old, new_r) domain:
+
+    * a no-op resize returns the state untouched (rung permutation intact);
+    * otherwise the result has ``new_r`` replicas with identity rungs;
+    * every (state, energy) pair comes from the source population intact;
+    * shrinking never duplicates a surviving replica (the tiny-ladder
+      duplicate guard in `distributed.rebalance_state`'s shrink path) and
+      keeps both ladder endpoints' replicas.
+    """
+    st_pt = _pt_state(r_old, perm_seed)
+    out = distributed.rebalance_state(st_pt, new_r)
+    if new_r == r_old:
+        assert out is st_pt
+        return
+    states = np.asarray(out.states)
+    energy = np.asarray(out.energy)
+    assert states.shape == (new_r,) and energy.shape == (new_r,)
+    np.testing.assert_array_equal(np.asarray(out.rung), np.arange(new_r))
+    # payload-energy binding survives the gather
+    np.testing.assert_allclose(states, energy * 10.0)
+    assert set(energy.tolist()) <= set(range(r_old))
+    if new_r < r_old:
+        # shrink path: no duplicates, endpoints preserved in rung order
+        assert len(set(energy.tolist())) == new_r
+        inv = np.argsort(np.asarray(st_pt.rung))
+        assert energy[0] == np.asarray(st_pt.energy)[inv[0]]
+        assert energy[-1] == np.asarray(st_pt.energy)[inv[r_old - 1]]
+
+
+@given(r_old=st.integers(2, 12), grow_to=st.integers(13, 32), perm_seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_rebalance_grow_then_shrink_round_trip(r_old, grow_to, perm_seed):
+    """Grow -> shrink back to r_old keeps population membership, count and
+    the duplicate-free guarantee (clones may replace originals, but every
+    survivor is a valid replica and the cold-end replica survives)."""
+    st_pt = _pt_state(r_old, perm_seed)
+    grown = distributed.rebalance_state(st_pt, grow_to)
+    assert np.asarray(grown.energy).shape == (grow_to,)
+    # growth tiles existing replicas: every clone is a source replica
+    np.testing.assert_array_equal(
+        np.asarray(grown.energy), np.arange(grow_to) % r_old
+    )
+    back = distributed.rebalance_state(grown, r_old)
+    energy = np.asarray(back.energy)
+    assert energy.shape == (r_old,)
+    assert set(energy.tolist()) <= set(range(r_old))
+    assert energy[0] == np.asarray(grown.energy)[0]  # cold endpoint preserved
+
+
 @given(n=st.integers(2, 40))
 @settings(**SETTINGS)
 def test_paper_ladder_property(n):
@@ -73,6 +252,14 @@ def test_paper_ladder_property(n):
     assert np.all(np.diff(t) > 0)
     np.testing.assert_allclose(np.diff(t), 3.0 / n, rtol=1e-5)
     assert t[-1] < 4.0  # paper's formula is exclusive at the hot end
+
+
+@given(shape=lattice_shapes(min_side=2, max_side=8), seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_lattice_shapes_strategy_is_checkerboardable(shape, seed):
+    """The shared shape strategy must only emit PBC-2-colourable lattices."""
+    h, w = shape
+    assert h % 2 == 0 and w % 2 == 0
 
 
 @given(seed=st.integers(0, 2**16))

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ising_sweep as isk
-from repro.kernels import ops, ref
+from repro.kernels import ops, potts_sweep as psk, ref
 
 
 def _rand_ising(key, r, l):
@@ -46,6 +46,86 @@ def test_ising_kernel_block_size_invariance():
 def test_ising_vmem_model_monotonic():
     assert isk.vmem_working_set_bytes(8, 300) > isk.vmem_working_set_bytes(4, 300)
     assert isk.vmem_working_set_bytes(8, 300) < 16 * 2**20  # fits v5e VMEM
+
+
+# ---------- replica-padding path regression (R not a multiple of r_blk) ---------
+@pytest.mark.parametrize("r", [1, 2, 3, 5, 7, 9, 11, 15, 17])
+def test_ising_padding_path_bit_equal(r):
+    """ops.ising_sweep pads R up to r_blk=8 with beta=0 junk replicas; every
+    non-multiple R must still be BIT-equal to the unpadded oracle."""
+    spins, u, betas = _rand_ising(jax.random.key(1000 + r), r, 6)
+    got = ops.ising_sweep(spins, u, betas, j=1.0, b=0.1, r_blk=8, use_pallas=True)
+    want = ref.ising_sweep(spins, u, betas, j=1.0, b=0.1)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(want[2]))
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]), rtol=1e-6, atol=1e-3)
+
+
+def test_vmem_working_set_documented_budget():
+    """The documented v5e budget for the paper's L=300 config must hold: the
+    Ising kernel's r_blk=8 working set is the 18 B/cell (~12.4 MiB) modelled
+    in its module docstring and stays inside a v5e core's 16 MB VMEM; the
+    Potts kernel (30 B/cell) fits the same budget at its documented
+    r_blk=4 default."""
+    ising_bytes = isk.vmem_working_set_bytes(8, 300)
+    assert ising_bytes == 18 * 8 * 300 * 300  # 18 bytes/cell model, ~12.4 MiB
+    assert ising_bytes < 16 * 2**20
+    potts_bytes = psk.vmem_working_set_bytes(4, 300, 300)
+    assert potts_bytes == 30 * 4 * 300 * 300  # 30 bytes/cell (module docstring)
+    assert potts_bytes < 16 * 2**20
+    # both models are monotone in every argument (sanity of the estimator)
+    assert psk.vmem_working_set_bytes(8, 300, 300) > potts_bytes
+    assert psk.vmem_working_set_bytes(4, 300, 302) > potts_bytes
+
+
+# ---------- Potts kernel vs oracle ----------------------------------------------
+def _rand_potts(key, r, h, w, q):
+    k1, k2, k3 = jax.random.split(key, 3)
+    states = jax.random.randint(k1, (r, h, w), 0, q).astype(jnp.int8)
+    u = jax.random.uniform(k2, (r, 2, 2, h, w), jnp.float32)
+    betas = jax.random.uniform(k3, (r,), minval=0.1, maxval=1.5)
+    return states, u, betas
+
+
+@pytest.mark.parametrize("r,h,w,r_blk,q", [
+    (1, 4, 4, 1, 3), (2, 8, 6, 2, 3), (8, 16, 16, 4, 4), (5, 12, 10, 2, 3),
+    (3, 7, 9, 4, 5),   # pad path AND odd lattice dims
+    (16, 30, 30, 8, 2),  # q=2 (Ising twin), non-128-aligned like the paper
+])
+@pytest.mark.parametrize("rule", ["metropolis", "glauber"])
+def test_potts_kernel_matches_oracle(r, h, w, r_blk, q, rule):
+    states, u, betas = _rand_potts(jax.random.key(r * 100 + h + q), r, h, w, q)
+    got = ops.potts_sweep(states, u, betas, q=q, j=0.8, rule=rule,
+                          r_blk=r_blk, use_pallas=True)
+    want = ref.potts_sweep(states, u, betas, q=q, j=0.8, rule=rule)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]), rtol=1e-6, atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(want[2]))
+
+
+def test_potts_kernel_block_size_invariance():
+    """Same Fig-6 invariant as Ising: the replica tile size must not change
+    the sweep's result."""
+    states, u, betas = _rand_potts(jax.random.key(0), 16, 8, 8, 3)
+    outs = [
+        ops.potts_sweep(states, u, betas, q=3, j=1.0, r_blk=rb, use_pallas=True)[0]
+        for rb in (1, 2, 4, 8, 16)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(o))
+
+
+def test_potts_proposals_never_propose_current_colour():
+    """d in {1..q-1} guarantees every proposal differs from the current
+    colour; with acceptance u=0 (always accept) every unmasked site of each
+    colour class must change."""
+    r, h, w, q = 2, 4, 4, 5
+    states = jnp.zeros((r, h, w), jnp.int8)
+    u = jnp.zeros((r, 2, 2, h, w), jnp.float32)
+    u = u.at[:, :, 0].set(jax.random.uniform(jax.random.key(3), (r, 2, h, w)))
+    new, _, nacc = ref.potts_sweep(states, u, jnp.ones((r,)), q=q, j=1.0)
+    assert np.all(np.asarray(new) != 0)  # every site flipped away from 0
+    assert np.all(np.asarray(nacc) == h * w)
 
 
 def _rand_wkv(key, bh, t, dk, dv, dtype=jnp.float32):

@@ -1,0 +1,164 @@
+"""Unit tests for the validation layer itself (`repro.validate`).
+
+The conformance suite trusts `validate.exact` as ground truth, so this file
+pins the ground truth against *independent* computations: tiny-lattice
+enumerations re-done in-test with the systems' own jax energy functions,
+closed-form limits (two-level systems, single-Gaussian moments, infinite-
+temperature averages), and known SAW counts.  The MCSE/ESS/Geweke machinery
+is checked on iid data where every answer is analytic.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gaussian, hp, ising, potts, spin_glass
+from repro.validate import exact as ex
+from repro.validate.mcse import batch_mean_stats, effective_sample_size, geweke_z
+
+TEMPS = np.asarray([0.8, 1.7, 3.1])
+
+
+# ---------- boltzmann_means ------------------------------------------------------
+def test_boltzmann_means_two_level_system():
+    """E in {0, d}: <E> = d / (1 + e^{d/T}) — textbook two-level formula."""
+    d = 1.3
+    got = ex.boltzmann_means(np.asarray([0.0, d]), {}, TEMPS)["energy"]
+    want = d / (1.0 + np.exp(d / TEMPS))
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+def test_boltzmann_means_observable_weighting():
+    e = np.asarray([0.0, 2.0])
+    obs = np.asarray([1.0, -1.0])
+    got = ex.boltzmann_means(e, {"o": obs}, TEMPS)
+    w = np.exp(-2.0 / TEMPS)
+    np.testing.assert_allclose(got["o"], (1.0 - w) / (1.0 + w), rtol=1e-12)
+
+
+# ---------- lattice enumerations vs the systems' own energy functions ------------
+def test_ising_exact_matches_jax_energy_enumeration():
+    system = ising.IsingSystem(length=2)
+    configs = ex._spin_configs(4).reshape(-1, 2, 2)
+    e = np.asarray(jax.vmap(system.energy)(jnp.asarray(configs)))
+    absm = np.abs(configs.reshape(-1, 4).mean(axis=1))
+    want = ex.boltzmann_means(e, {"absmag": absm}, TEMPS)
+    got = ex.ising_exact(system, TEMPS)
+    for k in want:
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-10, err_msg=k)
+
+
+def test_ea_exact_matches_jax_energy_enumeration():
+    system = spin_glass.EASpinGlass(shape=(2, 2), disorder_seed=3)
+    jr, jd = system.disorder()
+    configs = ex._spin_configs(4).reshape(-1, 2, 2)
+    states = {
+        "spins": jnp.asarray(configs),
+        "jr": jnp.broadcast_to(jr, (16, 2, 2)),
+        "jd": jnp.broadcast_to(jd, (16, 2, 2)),
+    }
+    e = np.asarray(jax.vmap(spin_glass.ea_energy)(states))
+    absm = np.abs(configs.reshape(-1, 4).mean(axis=1))
+    want = ex.boltzmann_means(e, {"absmag": absm}, TEMPS)
+    got = ex.ea_exact(system, TEMPS)
+    for k in want:
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-10, err_msg=k)
+
+
+def test_potts_exact_matches_jax_energy_enumeration():
+    system = potts.PottsSystem(shape=(2, 2), q=3)
+    configs = np.asarray(
+        list(itertools.product(range(3), repeat=4)), np.int8
+    ).reshape(-1, 2, 2)
+    e = np.asarray(jax.vmap(lambda s: system.energy(s))(jnp.asarray(configs)))
+    m = np.asarray(
+        jax.vmap(lambda s: potts.potts_magnetization(s, 3))(jnp.asarray(configs))
+    )
+    want = ex.boltzmann_means(e, {"pmag": m}, TEMPS)
+    got = ex.potts_exact(system, TEMPS)
+    np.testing.assert_allclose(got["energy"], want["energy"], rtol=1e-10)
+    np.testing.assert_allclose(got["pmag"], want["pmag"], rtol=1e-6)
+
+
+def test_potts_exact_chunking_invariant():
+    """Chunked enumeration must not depend on the chunk size."""
+    system = potts.PottsSystem(shape=(2, 2), q=3)
+    a = ex.potts_exact(system, TEMPS, chunk=7)
+    b = ex.potts_exact(system, TEMPS, chunk=81)
+    for k in a:
+        np.testing.assert_allclose(a[k], b[k], rtol=1e-12)
+
+
+# ---------- gaussian: quadrature vs closed form ----------------------------------
+def test_gaussian_exact_matches_single_component_analytics():
+    sig = 1.3
+    system = gaussian.GaussianMixture(mus=(0.0,), sigmas=(sig,), weights=(1.0,))
+    got = ex.gaussian_exact(system, TEMPS)
+    betas = 1.0 / TEMPS
+    want_e = 0.5 / betas + np.log(sig * np.sqrt(2 * np.pi))
+    want_absx = (sig / np.sqrt(betas)) * np.sqrt(2 / np.pi)
+    np.testing.assert_allclose(got["energy"], want_e, rtol=1e-6)
+    np.testing.assert_allclose(got["absx"], want_absx, rtol=1e-6)
+
+
+# ---------- HP: SAW enumeration, limits, ergodicity ------------------------------
+def test_enumerate_saws_known_counts():
+    for n_steps, count in [(1, 4), (2, 12), (3, 36), (4, 100), (5, 284)]:
+        assert len(ex.enumerate_saws(n_steps)) == count
+
+
+def test_hp_exact_infinite_temperature_is_uniform_average():
+    system = hp.HPChain(sequence="HPHPPH")
+    pos = ex.enumerate_saws(5)
+    e = np.asarray(jax.vmap(system.energy)(jnp.asarray(pos, jnp.int32)))
+    rg2 = np.asarray(
+        jax.vmap(hp.radius_of_gyration_sq)(jnp.asarray(pos, jnp.int32))
+    )
+    got = ex.hp_exact(system, np.asarray([1e8]))
+    np.testing.assert_allclose(got["energy"][0], e.mean(), rtol=1e-5)
+    np.testing.assert_allclose(got["rg2"][0], rg2.mean(), rtol=1e-5)
+
+
+def test_hp_exact_zero_temperature_reaches_ground_state():
+    system = hp.HPChain(sequence="HPHPPH")
+    pos = ex.enumerate_saws(5)
+    e = np.asarray(jax.vmap(system.energy)(jnp.asarray(pos, jnp.int32)))
+    got = ex.hp_exact(system, np.asarray([1e-3]))
+    np.testing.assert_allclose(got["energy"][0], e.min(), atol=1e-6)
+
+
+def test_hp_move_graph_connected_small_chain():
+    assert ex.hp_move_graph_connected(5)
+
+
+# ---------- MCSE / ESS / Geweke on iid data --------------------------------------
+def test_batch_mean_stats_iid(rng):
+    m, l = 64, 200
+    x = rng.normal(loc=2.0, scale=3.0, size=(m, l))
+    mean, mcse, n = batch_mean_stats(x.mean(axis=1))
+    assert n == m
+    np.testing.assert_allclose(mean, 2.0, atol=4 * 3.0 / np.sqrt(m * l))
+    np.testing.assert_allclose(mcse, 3.0 / np.sqrt(m * l), rtol=0.35)
+
+
+def test_effective_sample_size_iid(rng):
+    m, l = 64, 200
+    x = rng.normal(size=(m, l))
+    _, mcse, _ = batch_mean_stats(x.mean(axis=1))
+    ess = effective_sample_size(x.var(ddof=1), mcse)
+    assert 0.5 * m * l < float(ess) < 2.0 * m * l  # iid: ESS ~ sample count
+    assert float(effective_sample_size(0.0, 0.0)) == 0.0
+
+
+def test_batch_mean_stats_rejects_single_batch():
+    with pytest.raises(ValueError, match="M >= 2"):
+        batch_mean_stats(np.ones((1, 3)))
+
+
+def test_geweke_z_detects_drift(rng):
+    same = geweke_z(rng.normal(size=(40,)), rng.normal(size=(40,)))
+    drift = geweke_z(rng.normal(size=(40,)), rng.normal(loc=5.0, size=(40,)))
+    assert abs(float(same)) < 4.0
+    assert abs(float(drift)) > 10.0
