@@ -1,44 +1,49 @@
 """Paper Fig. 3a/3b analogues: magnetization vs temperature (phase
 transition) and iterations-to-converge vs lattice size (quadratic scaling).
 
-Fig. 3a runs purely on the engine's streaming statistics (burn-in, reset the
-O(R) accumulators, measure — no trace); Fig. 3b needs the time *series* and
-uses the engine's opt-in per-chunk trace streaming.
+Fig. 3a is a declarative `repro.api.RunSpec` (burn + measure schedule) run
+purely on the engine's streaming statistics; Fig. 3b needs the time *series*
+and uses the engine's opt-in per-chunk trace streaming, re-entering one
+spec-compiled engine across seeds.
 """
 from __future__ import annotations
 
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import emit, time_call
-from repro.core import diagnostics, ising, ladder
-from repro.engine import Engine, EngineConfig
+from repro.api import (
+    EngineSpec, LadderSpec, PhaseSpec, RunSpec, ScheduleSpec, Session,
+    SystemSpec,
+)
+from repro.core import diagnostics
 
 
 def fig3a(r: int = 16, length: int = 16, sweeps: int = 3000):
-    system = ising.IsingSystem(length=length)
-    temps = np.asarray(ladder.linear_ladder(r, 1.0, 4.0))
     interval = 10
     # engine runs advance whole intervals: round the budget so any `sweeps`
     # argument works and the burn/measure split stays interval-aligned
     n_int = max(2, round(sweeps / interval))
     sweeps = n_int * interval
     burn = (n_int // 2) * interval
-    cfg = EngineConfig(
-        n_replicas=r, swap_interval=interval, chunk_intervals=50, donate=False
+    spec = RunSpec(
+        system=SystemSpec("ising", {"length": length}),
+        ladder=LadderSpec(kind="linear", n_replicas=r, t_min=1.0, t_max=4.0),
+        engine=EngineSpec(swap_interval=interval, chunk_intervals=50, donate=False),
+        schedule=ScheduleSpec(phases=(
+            PhaseSpec(name="burn", n_sweeps=burn),
+            # the streaming analogue of trace-and-discard-half: zero the
+            # O(R) accumulators, then measure (same estimator, O(R) memory)
+            PhaseSpec(name="measure", n_sweeps=sweeps - burn, reset_stats=True),
+        )),
+        observables=("absmag",),
     )
-    obs = {"am": lambda s: jnp.abs(ising.magnetization(s))}
-    eng = Engine(system, cfg, observables=obs)
-    st = eng.init(jax.random.key(0), temps)
-    t = time_call(lambda s: eng.run(s, sweeps)[0].pt.energy, st, iters=1)
-    # burn-in, zero the accumulators, then measure: the streaming analogue of
-    # trace-and-discard-half (same estimator, O(R) memory)
-    st, _ = eng.run(st, burn)
-    st = eng.reset_stats(st)
-    _, res = eng.run(st, sweeps - burn)
-    m = res.summary["mean_am"]
+    session = Session(spec)
+    temps = spec.ladder.build()
+    st = session.init_state()
+    t = time_call(lambda s: session.engine.run(s, sweeps)[0].pt.energy, st, iters=1)
+    m = session.run().phases["measure"].summary["mean_absmag"]
     rows = ";".join(f"T{temps[i]:.2f}={m[i]*100:.0f}%" for i in range(0, r, 3))
     emit("fig3a_magnetization", t, rows + f";Tc~2.27_observed={'yes' if m[0]>0.8>m[-1] else 'no'}")
 
@@ -51,24 +56,29 @@ def fig3b(sizes=(8, 12, 16, 24), seeds=3, max_sweeps: int = 6000):
     lattices need orders more sweeps — the paper's Fig. 3b scaling)."""
     iters = []
     for L in sizes:
-        # one Engine per lattice size: its compiled mega-step is identical
-        # across seeds (only the PRNG key changes), so seeds share the cache
-        system = ising.IsingSystem(length=L)
+        # one spec-compiled Session per lattice size: its engine's mega-step
+        # is identical across seeds (only the PRNG key changes), so seeds
+        # share the compiled-executable cache
         r = 8
-        temps = np.asarray(ladder.linear_ladder(r, 1.0, 3.0))
-        cfg = EngineConfig(
-            n_replicas=r, swap_interval=2, chunk_intervals=250,
-            record_trace=True,
+        spec = RunSpec(
+            system=SystemSpec("ising", {"length": L}),
+            ladder=LadderSpec(kind="linear", n_replicas=r, t_min=1.0, t_max=3.0),
+            engine=EngineSpec(swap_interval=2, chunk_intervals=250,
+                              record_trace=True),
+            schedule=ScheduleSpec(phases=(
+                PhaseSpec(name="run", n_sweeps=max_sweeps),
+            )),
+            observables=("absmag",),
         )
-        obs = {"am": lambda s: jnp.abs(ising.magnetization(s))}
-        eng = Engine(system, cfg, observables=obs)
+        session = Session(spec)
+        temps = spec.ladder.build()
         per_seed = []
         for seed in range(seeds):
-            st = eng.init(jax.random.key(seed), temps)
-            _, res = eng.run(st, max_sweeps)
-            am = res.trace["am"][:, 0]  # cold rung
+            st = session.engine.init(jax.random.key(seed), temps)
+            _, res = session.engine.run(st, max_sweeps)
+            am = res.trace["absmag"][:, 0]  # cold rung
             it = diagnostics.iterations_to_converge(am, threshold=0.98, window=4)
-            per_seed.append(it * cfg.swap_interval if it >= 0 else max_sweeps)
+            per_seed.append(it * spec.engine.swap_interval if it >= 0 else max_sweeps)
         iters.append(float(np.median(per_seed)))
     sizes_a = np.asarray(sizes, float)
     its = np.asarray(iters, float)

@@ -1,5 +1,10 @@
 """PT-LM sampling benchmark (the paper's technique on the LM pool):
-single-chain MH vs parallel tempering on sequence NLL."""
+single-chain MH vs parallel tempering on sequence NLL.
+
+Runs through the chunked streaming engine (`repro.engine.Engine`) — the LM
+system binds live model params, so it is driven at the Engine layer rather
+than through a serializable `repro.api.RunSpec`.
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -8,8 +13,9 @@ import jax
 
 from benchmarks.common import emit, time_call
 from repro.configs import get_config
-from repro.core import ladder, pt
+from repro.core import ladder
 from repro.core.ptlm import LMSystem
+from repro.engine import Engine, EngineConfig
 from repro.models import model as model_lib
 
 
@@ -17,14 +23,16 @@ def run(r: int = 8, seq_len: int = 24, steps: int = 60):
     cfg = get_config("gemma_2b", reduced=True)
     params = model_lib.init_params(cfg, jax.random.key(0))
     system = LMSystem(cfg=cfg, seq_len=seq_len).bind(params)
-    temps = tuple(float(t) for t in ladder.geometric_ladder(r, 1.0, 8.0))
-    ptc = pt.PTConfig(n_replicas=r, temps=temps, swap_interval=5, swap_mode="temp")
-    st = pt.init(system, ptc, jax.random.key(1))
-    e0 = float(np.asarray(st.energy)[np.argsort(np.asarray(st.rung))][0])
-    fn = jax.jit(lambda s: pt.run(system, ptc, s, steps))
-    t = time_call(lambda s: fn(s)[0].energy, st, iters=1)
-    st2, trace = fn(st)
-    e_cold = float(np.asarray(trace["energy"])[-1, 0])
+    temps = np.asarray(ladder.geometric_ladder(r, 1.0, 8.0), np.float64)
+    eng = Engine(system, EngineConfig(
+        n_replicas=r, swap_interval=5, swap_mode="temp", chunk_intervals=12,
+        record_trace=True, donate=False,  # timing loop re-runs the same state
+    ))
+    st = eng.init(jax.random.key(1), temps)
+    e0 = float(np.asarray(st.pt.energy)[np.argsort(np.asarray(st.pt.rung))][0])
+    t = time_call(lambda s: eng.run(s, steps)[0].pt.energy, st, iters=1)
+    _, res = eng.run(st, steps)
+    e_cold = float(res.trace["energy"][-1, 0])
     emit(
         "ptlm_sampling", t / steps,
         f"steps={steps};R={r};cold_nll {e0:.1f}->{e_cold:.1f};improved={'yes' if e_cold < e0 else 'no'}",

@@ -10,67 +10,73 @@ per-sweep cost plus the system-specific derived figure:
   zoo_hp         HP lattice protein (sequential-move chain, generic vmap path)
   zoo_gaussian   1-D mixture (lower bound on driver overhead per sweep)
 
+Each row is a declarative `repro.api.RunSpec` (every system nameable through
+the constructor registry); `Session` compiles the spec and the timing loop
+re-enters its engine.
+
 Run: PYTHONPATH=src python -m benchmarks.run --only zoo
 """
 from __future__ import annotations
 
-import numpy as np
-
-import jax
-
 from benchmarks.common import emit, time_call
-from repro.core import gaussian, hp, ising, ladder, potts, spin_glass
-from repro.engine import Engine, EngineConfig
+from repro.api import (
+    EngineSpec, LadderSpec, PhaseSpec, RunSpec, ScheduleSpec, Session,
+    SystemSpec,
+)
 
 
-def _bench(name: str, system, temps, sweeps: int, derived: str):
-    r = len(temps)
-    cfg = EngineConfig(
-        n_replicas=r,
-        swap_interval=sweeps,
-        chunk_intervals=1,
-        donate=False,  # timing loop re-runs the same state
+def _bench(name: str, system_spec: SystemSpec, r: int, sweeps: int, derived: str):
+    spec = RunSpec(
+        system=system_spec,
+        ladder=LadderSpec(kind="paper", n_replicas=r),
+        engine=EngineSpec(
+            swap_interval=sweeps,
+            chunk_intervals=1,
+            donate=False,  # timing loop re-runs the same state
+        ),
+        schedule=ScheduleSpec(phases=(PhaseSpec(name="bench", n_sweeps=sweeps),)),
     )
-    eng = Engine(system, cfg)
-    state = eng.init(jax.random.key(0), np.asarray(temps))
-    t = time_call(lambda st: eng.run(st, sweeps)[0].pt.energy, state, iters=3)
+    session = Session(spec)
+    state = session.init_state()
+    t = time_call(
+        lambda st: session.engine.run(st, sweeps)[0].pt.energy, state, iters=3
+    )
     emit(f"zoo_{name}", t, f"sweeps={sweeps};R={r};us_per_sweep={t*1e6/sweeps:.1f};{derived}")
 
 
 def run(r: int = 16, length: int = 32, sweeps: int = 50):
-    temps = tuple(float(t) for t in ladder.paper_ladder(r))
     _bench(
         "ising",
-        ising.IsingSystem(length=length, use_pallas=True),
-        temps,
+        SystemSpec("ising", {"length": length, "use_pallas": True}),
+        r,
         sweeps,
         f"L={length};pallas=1",
     )
     _bench(
         "potts",
-        potts.PottsSystem(shape=(length, length), q=3, use_pallas=True),
-        temps,
+        SystemSpec("potts", {"shape": (length, length), "q": 3, "use_pallas": True}),
+        r,
         sweeps,
         f"L={length};q=3;pallas=1",
     )
     _bench(
         "ea",
-        spin_glass.EASpinGlass(shape=(length, length)),
-        temps,
+        SystemSpec("ea_spin_glass", {"shape": (length, length)}),
+        r,
         sweeps,
         f"L={length};xla_fallback=1",
     )
     _bench(
         "hp",
-        hp.HPChain(sequence="HPHPPHHPHHPHPHHPPHPH"),
-        temps,
+        SystemSpec("hp_protein", {"sequence": "HPHPPHHPHHPHPHHPPHPH"}),
+        r,
         sweeps,
         "N=20;moveset=end+corner",
     )
     _bench(
         "gaussian",
-        gaussian.GaussianMixture(),
-        temps,
+        SystemSpec("gaussian", {}),
+        r,
         sweeps,
         "modes=2",
     )

@@ -1,45 +1,49 @@
 """Reproduce the paper's Fig. 3a: |magnetization| vs temperature across the
 2-D Ising phase transition, via PT sampling (CSV output).
 
-Runs through the streaming engine with the **ensemble axis**: two independent
-chains `(C, R, L, L)` advance in one compiled program and their online
-statistics are pooled (`repro.engine.stats.combine_chains`) — half the sweeps
-per chain for the same sample count, and an error bar for free.
+A declarative `RunSpec` with the **ensemble axis**: two independent chains
+`(C, R, L, L)` advance in one compiled program and their online statistics
+are pooled (`repro.engine.stats.combine_chains`) — half the sweeps per chain
+for the same sample count, and an error bar for free.
 
-    PYTHONPATH=src python examples/ising_phase_diagram.py > phase.csv
+    python examples/ising_phase_diagram.py > phase.csv
 """
-import sys, os
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import sys
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ising, ladder
-from repro.engine import Engine, EngineConfig, combine_chains
+from repro.api import (
+    EngineSpec, LadderSpec, PhaseSpec, RunSpec, ScheduleSpec, Session,
+    SystemSpec,
+)
+from repro.engine import combine_chains
 
 T_C = 2.0 / np.log(1.0 + np.sqrt(2.0))  # Onsager: ~2.269
 
 
 def main():
-    R, L, C, sweeps = 24, 24, 2, 2000
-    system = ising.IsingSystem(length=L)
-    temps = np.asarray(ladder.linear_ladder(R, 1.0, 4.0))
-    cfg = EngineConfig(n_replicas=R, swap_interval=10, chunk_intervals=50, n_chains=C)
-    obs = {"am": lambda s: jnp.abs(ising.magnetization(s)),
-           "e": lambda s: system.energy(s) / (L * L)}
-    eng = Engine(system, cfg, observables=obs)
-    st = eng.init(jax.random.key(7), temps)
-    st, _ = eng.run(st, sweeps // 2)  # burn-in
-    st = eng.reset_stats(st)
-    st, _ = eng.run(st, sweeps - sweeps // 2)
-    pooled = combine_chains(st.stats)  # merge the ensemble axis (Chan)
-    per_chain = np.asarray(st.stats.mean["am"])  # (C, R)
+    r, length, chains, sweeps = 24, 24, 2, 2000
+    spec = RunSpec(
+        system=SystemSpec("ising", {"length": length}),
+        ladder=LadderSpec(kind="linear", n_replicas=r, t_min=1.0, t_max=4.0),
+        engine=EngineSpec(swap_interval=10, chunk_intervals=50, n_chains=chains),
+        schedule=ScheduleSpec(phases=(
+            PhaseSpec(name="burn", n_sweeps=sweeps // 2),
+            PhaseSpec(name="measure", n_sweeps=sweeps - sweeps // 2,
+                      reset_stats=True),
+        )),
+        observables=("absmag", "energy_per_site"),
+        seed=7,
+    )
+    temps = spec.ladder.build()
+    result = Session(spec).run()
+    pooled = combine_chains(result.state.stats)  # merge the ensemble axis (Chan)
+    per_chain = np.asarray(result.state.stats.mean["absmag"])  # (C, R)
     spread = (per_chain.max(axis=0) - per_chain.min(axis=0)) / 2.0
     print("temperature,abs_magnetization_pct,energy_per_spin,chain_spread_pct")
     for i, T in enumerate(temps):
-        print(f"{T:.3f},{100*pooled['mean_am'][i]:.1f},"
-              f"{pooled['mean_e'][i]:.4f},{100*spread[i]:.1f}")
+        print(f"{T:.3f},{100*pooled['mean_absmag'][i]:.1f},"
+              f"{pooled['mean_energy_per_site'][i]:.4f},{100*spread[i]:.1f}")
     print(f"# exact T_c = {T_C:.4f}; observed transition between the rungs "
           f"where |m| crosses 50%", file=sys.stderr)
 

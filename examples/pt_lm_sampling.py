@@ -5,17 +5,20 @@ Replicas hold token sequences; energy = sequence NLL; hot rungs explore token
 space, cold rungs sharpen toward high-likelihood sequences, and PT swaps move
 good continuations down the ladder.
 
-    PYTHONPATH=src python examples/pt_lm_sampling.py
-"""
-import sys, os
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+Runs through the chunked streaming engine (`repro.engine.Engine`) with the
+opt-in per-chunk trace.  The LM system binds live model params (not
+JSON-able), so it is driven at the Engine layer rather than through a
+serializable `repro.api.RunSpec`.
 
+    python examples/pt_lm_sampling.py    (pip install -e ., or PYTHONPATH=src)
+"""
 import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import ladder, pt
+from repro.core import ladder
 from repro.core.ptlm import LMSystem
+from repro.engine import Engine, EngineConfig
 from repro.models import model as model_lib
 
 
@@ -25,14 +28,17 @@ def main():
     params = model_lib.init_params(cfg, jax.random.key(0))
     system = LMSystem(cfg=cfg, seq_len=seq_len).bind(params)
 
-    temps = tuple(float(t) for t in ladder.geometric_ladder(R, 1.0, 10.0))
-    ptc = pt.PTConfig(n_replicas=R, temps=temps, swap_interval=5, swap_mode="temp")
-    state = pt.init(system, ptc, jax.random.key(1))
-    e_init = np.asarray(state.energy)[np.argsort(np.asarray(state.rung))]
+    temps = np.asarray(ladder.geometric_ladder(R, 1.0, 10.0), np.float64)
+    eng = Engine(system, EngineConfig(
+        n_replicas=R, swap_interval=5, swap_mode="temp", chunk_intervals=10,
+        record_trace=True,
+    ))
+    state = eng.init(jax.random.key(1), temps)
+    e_init = np.asarray(state.pt.energy)[np.argsort(np.asarray(state.pt.rung))]
 
-    state, trace = pt.run(system, ptc, state, steps)
-    e = np.asarray(trace["energy"])
-    acc = np.asarray(trace["swap_prob"])
+    state, res = eng.run(state, steps)
+    e = res.trace["energy"]
+    acc = res.trace["swap_prob"]
 
     print(f"PT-LM: {R} replicas x {steps} MH steps over {seq_len}-token sequences")
     print(f"cold-rung NLL: {e_init[0]:8.2f} -> {e[-1, 0]:8.2f}")

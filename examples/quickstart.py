@@ -1,53 +1,46 @@
 """Quickstart: sample a 2-D Ising model with Metropolis-Hastings + Parallel
-Tempering — the paper's core experiment at laptop scale, through the chunked
-streaming engine (`repro.engine`): one AOT-compiled mega-step re-used for the
-whole run, O(R) online statistics instead of a full trace, and an in-loop
-adaptive temperature ladder.
+Tempering — the paper's core experiment at laptop scale, described as a
+10-line declarative `RunSpec` and executed by `repro.api.Session` (the same
+spec runs identically via ``spec.to_json()`` + ``python -m repro run``).
 
-    PYTHONPATH=src python examples/quickstart.py
+    python examples/quickstart.py        (pip install -e ., or PYTHONPATH=src)
 """
-import sys, os
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ising, ladder
-from repro.engine import AdaptConfig, Engine, EngineConfig
+from repro.api import (
+    AdaptSpec, EngineSpec, LadderSpec, RunSpec, Session, SystemSpec,
+    simple_schedule,
+)
 
+R, L, SWEEPS = 16, 32, 2000
 
-def main():
-    R, L, sweeps = 16, 32, 2000
-    system = ising.IsingSystem(length=L, j=1.0, b=0.0)  # paper's J=1, B=0
-    temps = np.asarray(ladder.paper_ladder(R))  # T_i = 1 + 3i/R
-    cfg = EngineConfig(
-        n_replicas=R,
-        swap_interval=100,  # paper's interval family
-        criterion="logistic",  # paper's P_swap (Coluzza & Frenkel)
-        swap_mode="temp",  # O(1)-bytes optimized swaps (state mode also available)
-        chunk_intervals=5,  # one compiled mega-step = 5 intervals
-    )
-    print(f"PT: {R} replicas, {L}x{L} lattice, {sweeps} sweeps, "
-          f"T in [{temps[0]:.2f}, {temps[-1]:.2f}]")
-
-    eng = Engine(
-        system, cfg,
-        observables={"absmag": lambda s: jnp.abs(ising.magnetization(s))},
-        adapt=AdaptConfig(target=0.25, min_attempts_per_pair=2),
-    )
-    state = eng.init(jax.random.key(0), temps)
+SPEC = RunSpec(
+    system=SystemSpec("ising", {"length": L, "j": 1.0, "b": 0.0}),  # paper's J=1, B=0
+    ladder=LadderSpec(kind="paper", n_replicas=R),  # T_i = 1 + 3i/R
+    engine=EngineSpec(swap_interval=100,  # paper's interval family
+                      criterion="logistic",  # paper's P_swap (Coluzza & Frenkel)
+                      swap_mode="temp",  # O(1)-bytes optimized swaps
+                      chunk_intervals=5),  # one compiled mega-step = 5 intervals
+    adapt=AdaptSpec(target=0.25, min_attempts_per_pair=2),
     # burn-in (the adaptive ladder also settles here), then freeze the
     # ladder, reset the O(R) accumulators and measure — every sample in the
     # report is drawn at the printed temperatures; no trace ever materializes
-    state, burn = eng.run(state, sweeps // 2)
-    eng.adapt = None
-    state = eng.reset_stats(state)
-    state, res = eng.run(state, sweeps // 2)
+    schedule=simple_schedule(burn_sweeps=SWEEPS // 2, measure_sweeps=SWEEPS // 2),
+    observables=("absmag",),
+    seed=0,
+)
 
+
+def main():
+    temps0 = SPEC.ladder.build()
+    print(f"PT: {R} replicas, {L}x{L} lattice, {SWEEPS} sweeps, "
+          f"T in [{temps0[0]:.2f}, {temps0[-1]:.2f}]")
+    result = Session(SPEC).run()
+
+    burn, res = result.phases["burn"], result.phases["measure"]
     m = res.summary["mean_absmag"]
     acc = res.summary["swap_acceptance"]
-    final_temps = 1.0 / np.asarray(state.betas)
+    final_temps = 1.0 / np.asarray(result.state.betas)
     print("\n T      |m|    (phase transition at T_c ~ 2.27)")
     for T, mm in zip(final_temps, m):
         bar = "#" * int(mm * 40)
@@ -55,12 +48,12 @@ def main():
     print(f"\nmean swap acceptance: {np.mean(acc):.3f} "
           f"(glassy system -> low, as the paper observes; "
           f"ladder retuned {len(burn.ladder_history) - 1}x during burn-in)")
-    phases = (sweeps // 2) // cfg.swap_interval
+    phases = (SWEEPS // 2) // SPEC.engine.swap_interval
     print(f"round trips (cold->hot->cold): {int(res.summary['round_trips'].sum())} "
           f"(each needs >= 2(R-1) = {2 * (R - 1)} swap phases; "
           f"this window has {phases} — expect 0 at demo scale)")
-    energy = np.asarray(state.pt.energy)[np.argsort(np.asarray(state.pt.rung))]
-    print(f"cold-chain energy: {energy[0]:.1f} (ground state = {-2 * L * L})")
+    print(f"cold-chain energy: {result.final_energies()[0]:.1f} "
+          f"(ground state = {-2 * L * L})")
 
 
 if __name__ == "__main__":

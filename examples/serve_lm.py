@@ -1,11 +1,8 @@
 """Batched autoregressive serving with a KV cache (decode path used by the
 decode_32k / long_500k dry-run cells), on a reduced config.
 
-    PYTHONPATH=src python examples/serve_lm.py [--arch rwkv6_7b]
+    python examples/serve_lm.py [--arch rwkv6_7b]
 """
-import sys, os
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
 import argparse
 import time
 

@@ -6,15 +6,16 @@ the bimodal Gaussian mixture, the 4x4 ±J Edwards-Anderson spin glass and a
 10-monomer HP lattice protein — and prints the engine's per-rung estimates
 next to the exact enumeration / quadrature answers with batch-means error
 bars (`repro.validate`).  This is the conformance suite as a demo: the same
-harness `tests/test_conformance.py` gates on.
+harness `tests/test_conformance.py` gates on, driven by the declarative
+`RunSpec` each zoo entry compiles to (``python -m repro validate <system>``
+is this script for one system).
 
-    PYTHONPATH=src python examples/system_zoo.py [--all]
+    python examples/system_zoo.py [--all]
 
 ``--all`` includes the `slow`-tier entries (4x4 q=3 Potts: its exact
 reference enumerates 3^16 configurations, ~20 s).
 """
-import sys, os
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import sys
 
 import numpy as np
 

@@ -2,14 +2,11 @@
 the deterministic synthetic pipeline, with checkpoint/restart fault-tolerance
 demonstrated mid-run.
 
-    PYTHONPATH=src python examples/train_lm.py [--steps 200] [--arch gemma_2b]
+    python examples/train_lm.py [--steps 200] [--arch gemma_2b]
 
 The default is a reduced config sized for this CPU container; on a TPU mesh
 the same driver scales via repro.launch (--arch <id> full configs).
 """
-import sys, os
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
 import argparse
 import time
 

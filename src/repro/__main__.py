@@ -1,0 +1,5 @@
+"""``python -m repro`` — the CLI front door (see `repro.api.cli`)."""
+from repro.api.cli import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,61 @@
+"""Declarative run-description API: the single front door to the sampler.
+
+`RunSpec` (a serializable dataclass tree) describes a PT run — system,
+ladder, engine knobs, adaptation, phase schedule, named observables — and
+`Session` executes it through the chunked streaming engine with a composable
+`Callback` pipeline.  The same spec JSON runs identically from a script, a
+test, a benchmark, the conformance harness, or ``python -m repro``
+(DESIGN.md §API).
+
+    from repro.api import RunSpec, SystemSpec, LadderSpec, ScheduleSpec, \\
+        PhaseSpec, Session
+
+    spec = RunSpec(
+        system=SystemSpec("ising", {"length": 32}),
+        ladder=LadderSpec(kind="paper", n_replicas=16),
+        schedule=simple_schedule(burn_sweeps=1000, measure_sweeps=1000),
+        adapt=AdaptSpec(target=0.25),
+        observables=("absmag",),
+    )
+    result = Session(spec).run()
+    Path("run.json").write_text(spec.to_json())   # lossless round trip
+"""
+from repro.api.session import (
+    Callback,
+    CheckpointCallback,
+    EarlyStopCallback,
+    ProgressCallback,
+    Session,
+    SessionResult,
+    TraceWriterCallback,
+)
+from repro.api.spec import (
+    SPEC_VERSION,
+    AdaptSpec,
+    EngineSpec,
+    LadderSpec,
+    PhaseSpec,
+    RunSpec,
+    ScheduleSpec,
+    SystemSpec,
+    simple_schedule,
+)
+
+__all__ = [
+    "SPEC_VERSION",
+    "AdaptSpec",
+    "Callback",
+    "CheckpointCallback",
+    "EarlyStopCallback",
+    "EngineSpec",
+    "LadderSpec",
+    "PhaseSpec",
+    "ProgressCallback",
+    "RunSpec",
+    "ScheduleSpec",
+    "Session",
+    "SessionResult",
+    "SystemSpec",
+    "TraceWriterCallback",
+    "simple_schedule",
+]

@@ -1,0 +1,183 @@
+"""``python -m repro`` — run, resume and validate PT runs from spec JSONs.
+
+Subcommands (DESIGN.md §API):
+
+  run SPEC.json [--out DIR]     execute a `RunSpec` end-to-end; write
+                                ``manifest.json`` (+ spec copy, checkpoints)
+  resume DIR                    continue a checkpointed run from
+                                ``(spec.json, newest checkpoint)`` alone
+  validate SYSTEM [...]         conformance-run a system-zoo entry against
+                                its exact reference (exit 1 on failure)
+  list-systems                  registered systems, params and observables
+
+The CLI is a thin shell over `repro.api.Session` — a spec executes
+identically from here, a script, a test, or a benchmark.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+import numpy as np
+
+from repro.api.session import CheckpointCallback, ProgressCallback, Session
+from repro.api.spec import RunSpec
+
+__all__ = ["main"]
+
+
+def _cmd_run(args) -> int:
+    with open(args.spec) as f:
+        spec = RunSpec.from_json(f.read())
+    out = args.out or os.path.join(
+        "runs", os.path.splitext(os.path.basename(args.spec))[0]
+    )
+    os.makedirs(out, exist_ok=True)
+    callbacks = []
+    if not args.quiet:
+        callbacks.append(ProgressCallback(every=args.progress_every))
+    ckpt = CheckpointCallback(
+        os.path.join(out, "checkpoints"), every_chunks=args.checkpoint_every
+    )
+    callbacks.append(ckpt)
+    session = Session(spec, callbacks=callbacks)
+    result = session.run()
+    path = result.write_manifest(os.path.join(out, "manifest.json"))
+    if not args.quiet:
+        temps = 1.0 / np.asarray(result.state.betas, np.float64)
+        print(f"final ladder: {np.round(temps, 4).tolist()}", file=sys.stderr)
+    print(path)
+    return 0
+
+
+def _cmd_resume(args) -> int:
+    ckdir = os.path.join(args.dir, "checkpoints")
+    callbacks = [] if args.quiet else [ProgressCallback(every=args.progress_every)]
+    callbacks.append(
+        CheckpointCallback(ckdir, every_chunks=args.checkpoint_every)
+    )
+    session = Session.from_checkpoint(ckdir, callbacks=callbacks)
+    if session.remaining_sweeps == 0:
+        print(
+            f"nothing to resume: the checkpointed run already covers all "
+            f"{session.spec.schedule.total_sweeps} scheduled sweeps",
+            file=sys.stderr,
+        )
+        return 0
+    result = session.run()
+    path = result.write_manifest(os.path.join(args.dir, "manifest.json"))
+    print(path)
+    return 0
+
+
+def _cmd_validate(args) -> int:
+    # Lazy import: validate builds on the api layer (conformance compiles
+    # zoo entries to RunSpecs), so importing it at module scope would cycle.
+    from repro.core import systems
+    from repro.validate import assert_conforms, run_conformance
+
+    if args.system not in systems.REGISTRY:
+        print(
+            f"unknown system {args.system!r}; registered: "
+            f"{sorted(systems.REGISTRY)}",
+            file=sys.stderr,
+        )
+        return 2
+    entry = systems.REGISTRY[args.system]
+    report = run_conformance(entry, seed=args.seed)
+    worst_series, worst_z = report.worst()
+    print(
+        f"{args.system}: {report.n_batches} batch means, ladder retuned "
+        f"{report.n_retunes}x, worst |z| = {worst_z:.2f} ({worst_series})"
+    )
+    for k in sorted(report.means):
+        for r, t in enumerate(report.temps):
+            print(
+                f"  T={t:7.3f}  <{k}> = {report.means[k][r]: .5f} "
+                f"(exact {report.exact[k][r]: .5f}, |z|={abs(report.z[k][r]):.2f})"
+            )
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        path = os.path.join(args.out, f"validate_{args.system}.json")
+        payload = {"system": args.system, "seed": args.seed}
+        for f in dataclasses.fields(report):
+            v = getattr(report, f.name)
+            if isinstance(v, dict):
+                v = {k: np.asarray(a, np.float64).tolist() for k, a in v.items()}
+            elif isinstance(v, np.ndarray):
+                v = v.tolist()
+            payload[f.name] = v
+        with open(path, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+        print(path)
+    try:
+        assert_conforms(report)
+    except AssertionError as e:
+        print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    print("PASS: all observables within tolerance of the exact reference")
+    return 0
+
+
+def _cmd_list_systems(args) -> int:
+    from repro.core import systems
+
+    for name in sorted(systems.CONSTRUCTORS):
+        entry = systems.CONSTRUCTORS[name]
+        zoo = systems.REGISTRY.get(name)
+        obs = ", ".join(sorted(entry.observables)) or "-"
+        print(f"{name}")
+        print(f"  observables: {obs}")
+        if zoo is not None:
+            print(f"  validation instance: {dict(zoo.params)}")
+    return 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro",
+        description="Declarative PT runs: execute serializable RunSpec JSONs.",
+    )
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    p = sub.add_parser("run", help="execute a RunSpec JSON end-to-end")
+    p.add_argument("spec", help="path to the spec JSON")
+    p.add_argument("--out", default=None, help="output dir (default runs/<spec stem>)")
+    p.add_argument("--checkpoint-every", type=int, default=10,
+                   help="chunks between checkpoints")
+    p.add_argument("--progress-every", type=int, default=10,
+                   help="chunks between progress lines")
+    p.add_argument("--quiet", action="store_true")
+    p.set_defaults(fn=_cmd_run)
+
+    p = sub.add_parser("resume", help="continue a checkpointed run directory")
+    p.add_argument("dir", help="a previous `run` output dir")
+    p.add_argument("--checkpoint-every", type=int, default=10,
+                   help="chunks between checkpoints")
+    p.add_argument("--progress-every", type=int, default=10)
+    p.add_argument("--quiet", action="store_true")
+    p.set_defaults(fn=_cmd_resume)
+
+    p = sub.add_parser(
+        "validate", help="conformance-run a zoo system vs its exact reference"
+    )
+    p.add_argument("system", help="registry name (see list-systems)")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--out", default=None, help="also write the report JSON here")
+    p.set_defaults(fn=_cmd_validate)
+
+    p = sub.add_parser("list-systems", help="registered systems + observables")
+    p.set_defaults(fn=_cmd_list_systems)
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

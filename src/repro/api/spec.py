@@ -1,0 +1,360 @@
+"""The declarative `RunSpec` tree: one serializable description of a PT run.
+
+Every consumer of the sampler — scripts, tests, benchmarks, the conformance
+harness, the ``python -m repro`` CLI — describes a run as the same dataclass
+tree and executes it through `repro.api.Session` (DESIGN.md §API):
+
+    RunSpec
+    ├── SystemSpec    what to sample      (constructor registry name + params)
+    ├── LadderSpec    initial temperatures (paper/linear/geometric/custom)
+    ├── EngineSpec    how to execute      (wraps `repro.engine.EngineConfig`)
+    ├── AdaptSpec?    ladder feedback     (wraps `repro.engine.AdaptConfig`)
+    ├── ScheduleSpec  burn-in / measurement phases (tuple of PhaseSpec)
+    └── observables   named observables   (per-system observable registry)
+
+Design rules that make the tree a viable interchange format:
+
+* **lossless JSON round-trip** — ``RunSpec.from_json(spec.to_json()) ==
+  spec`` exactly: every field is a JSON scalar, a tuple of them, or a nested
+  spec; lists are canonicalized to tuples at construction so the dataclass
+  equality survives the JSON list/tuple collapse;
+* **no callables** — systems and observables are *names* resolved through
+  `repro.core.systems.CONSTRUCTORS` (the constructor + named-observable
+  registry), never lambdas;
+* **versioned** — ``spec_version`` is checked on load and unknown versions
+  are rejected, so persisted specs fail loudly instead of misexecuting;
+* **strict** — unknown keys anywhere in the tree are an error (typos in a
+  hand-written JSON spec must not silently fall back to defaults).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Mapping
+
+import numpy as np
+
+from repro.core import ladder as ladder_lib
+from repro.core import systems as systems_lib
+from repro.engine import AdaptConfig, EngineConfig
+
+__all__ = [
+    "SPEC_VERSION",
+    "SystemSpec",
+    "LadderSpec",
+    "EngineSpec",
+    "AdaptSpec",
+    "PhaseSpec",
+    "ScheduleSpec",
+    "RunSpec",
+    "simple_schedule",
+]
+
+SPEC_VERSION = 1
+
+
+# -- (de)serialization helpers -------------------------------------------------
+
+
+def _freeze(value):
+    """Canonicalize JSON-decoded values: lists -> tuples, recursively.
+
+    Tuples are what the system constructors expect (``shape``, ``mus`` — they
+    must be hashable for jit-static use) and what makes dataclass equality
+    hold across a JSON round trip.
+    """
+    if isinstance(value, (list, tuple)):
+        return tuple(_freeze(v) for v in value)
+    if isinstance(value, dict):
+        return {k: _freeze(v) for k, v in value.items()}
+    return value
+
+
+def _check_keys(data: Mapping, allowed, what: str):
+    unknown = set(data) - set(allowed)
+    if unknown:
+        raise ValueError(
+            f"unknown key(s) {sorted(unknown)} in {what}; allowed: {sorted(allowed)}"
+        )
+
+
+def _fields(cls):
+    return [f.name for f in dataclasses.fields(cls)]
+
+
+def _from_dict(cls, data: Mapping, what: str):
+    """Strict flat-dataclass construction (tuple canonicalization included)."""
+    if not isinstance(data, Mapping):
+        raise ValueError(f"{what} must be an object, got {type(data).__name__}")
+    _check_keys(data, _fields(cls), what)
+    return cls(**{k: _freeze(v) for k, v in data.items()})
+
+
+def _to_dict(obj):
+    """Dataclass tree -> plain JSON-able dict (tuples become lists in json)."""
+    if dataclasses.is_dataclass(obj):
+        return {f.name: _to_dict(getattr(obj, f.name)) for f in dataclasses.fields(obj)}
+    if isinstance(obj, (list, tuple)):
+        return [_to_dict(v) for v in obj]
+    if isinstance(obj, dict):
+        return {k: _to_dict(v) for k, v in obj.items()}
+    return obj
+
+
+# -- the spec tree -------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemSpec:
+    """A nameable system instance: constructor-registry name + params.
+
+    ``params`` must be JSON-representable (numbers, strings, bools, and
+    tuples of them) and are passed to the registered constructor verbatim —
+    ``SystemSpec("ising", {"length": 32})`` builds ``IsingSystem(length=32)``.
+    """
+
+    name: str
+    params: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        object.__setattr__(self, "params", _freeze(dict(self.params)))
+
+    def build(self):
+        return systems_lib.make_system(self.name, self.params)
+
+    def observables(self, system, names) -> dict:
+        return systems_lib.named_observables(self.name, system, names)
+
+
+@dataclasses.dataclass(frozen=True)
+class LadderSpec:
+    """The initial temperature ladder, cold->hot.
+
+    ``kind``: "paper" (``T_i = t_min + i*(t_max - t_min)/R``, hot end
+    exclusive — the paper's §3 ladder), "linear", "geometric", or "custom"
+    (explicit ``temps``).  Adaptation (see `AdaptSpec`) later moves interior
+    rungs; the endpoints of whatever this builds stay pinned.
+    """
+
+    kind: str = "paper"
+    n_replicas: int = 8
+    t_min: float = 1.0
+    t_max: float = 4.0
+    temps: tuple | None = None
+
+    def __post_init__(self):
+        if self.kind not in ("paper", "linear", "geometric", "custom"):
+            raise ValueError(f"bad ladder kind {self.kind!r}")
+        if self.temps is not None:
+            object.__setattr__(
+                self, "temps", tuple(float(t) for t in self.temps)
+            )
+        if self.kind == "custom":
+            if not self.temps:
+                raise ValueError("custom ladder needs explicit temps")
+            if len(self.temps) != self.n_replicas:
+                raise ValueError(
+                    f"custom ladder has {len(self.temps)} rungs "
+                    f"!= n_replicas={self.n_replicas}"
+                )
+        elif self.temps is not None:
+            raise ValueError(f"temps only valid with kind='custom', not {self.kind!r}")
+        if self.n_replicas < 1:
+            raise ValueError("n_replicas must be >= 1")
+
+    def build(self) -> np.ndarray:
+        if self.kind == "custom":
+            return np.asarray(self.temps, np.float64)
+        if self.kind == "paper":
+            return np.asarray(
+                ladder_lib.paper_ladder(
+                    self.n_replicas, self.t_min, self.t_max - self.t_min
+                ),
+                np.float64,
+            )
+        if self.kind == "linear":
+            return np.asarray(
+                ladder_lib.linear_ladder(self.n_replicas, self.t_min, self.t_max),
+                np.float64,
+            )
+        return np.asarray(
+            ladder_lib.geometric_ladder(self.n_replicas, self.t_min, self.t_max),
+            np.float64,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """Execution knobs — a serializable mirror of `repro.engine.EngineConfig`
+    (minus ``n_replicas``, which the ladder owns)."""
+
+    swap_interval: int = 100
+    criterion: str = "logistic"
+    swap_mode: str = "temp"
+    chunk_intervals: int = 8
+    n_chains: int = 1
+    record_trace: bool = False
+    track_stats: bool = True
+    measure_interval: int = 100
+    donate: bool = True
+
+    def build(self, n_replicas: int) -> EngineConfig:
+        return EngineConfig(n_replicas=n_replicas, **dataclasses.asdict(self))
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptSpec:
+    """Ladder-feedback knobs — serializable mirror of `repro.engine.AdaptConfig`."""
+
+    target: float = 0.23
+    rate: float = 0.5
+    min_attempts_per_pair: int = 20
+    max_rounds: int | None = None
+
+    def build(self) -> AdaptConfig:
+        return AdaptConfig(**dataclasses.asdict(self))
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseSpec:
+    """One schedule phase: ``n_sweeps`` sweeps with per-phase behaviour.
+
+    Attributes:
+      name: phase label (unique within a schedule; keys the results dict).
+      n_sweeps: sweep budget (must be a multiple of the engine interval).
+      adapt: ladder feedback active during this phase (needs `RunSpec.adapt`).
+      reset_stats: zero the O(R) online accumulators at phase start — the
+        streaming analogue of "discard the burn-in trace", and what makes a
+        phase a self-contained measurement window (batch means).
+    """
+
+    name: str
+    n_sweeps: int
+    adapt: bool = False
+    reset_stats: bool = False
+
+    def __post_init__(self):
+        if self.n_sweeps < 1:
+            raise ValueError(f"phase {self.name!r}: n_sweeps must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleSpec:
+    """Ordered phases executed back-to-back on one engine state."""
+
+    phases: tuple = ()
+
+    def __post_init__(self):
+        phases = tuple(
+            p if isinstance(p, PhaseSpec) else _from_dict(PhaseSpec, p, "phase")
+            for p in self.phases
+        )
+        object.__setattr__(self, "phases", phases)
+        names = [p.name for p in phases]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate phase names in schedule: {names}")
+        if not phases:
+            raise ValueError("schedule needs at least one phase")
+
+    @property
+    def total_sweeps(self) -> int:
+        return sum(p.n_sweeps for p in self.phases)
+
+
+def simple_schedule(burn_sweeps: int, measure_sweeps: int) -> ScheduleSpec:
+    """The canonical two-phase schedule: adapt+equilibrate, then measure."""
+    return ScheduleSpec(phases=(
+        PhaseSpec(name="burn", n_sweeps=burn_sweeps, adapt=True),
+        PhaseSpec(name="measure", n_sweeps=measure_sweeps, reset_stats=True),
+    ))
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """The complete, serializable description of one PT run.
+
+    ``Session(spec).run()`` executes it; ``spec.to_json()`` /
+    ``RunSpec.from_json(...)`` round-trip it losslessly; the ``python -m
+    repro`` CLI runs the JSON form end-to-end.  Same spec + same seed =
+    same run, bit-for-bit, from any entry point.
+    """
+
+    system: SystemSpec
+    ladder: LadderSpec
+    schedule: ScheduleSpec
+    engine: EngineSpec = EngineSpec()
+    adapt: AdaptSpec | None = None
+    observables: tuple = ()
+    seed: int = 0
+    spec_version: int = SPEC_VERSION
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "observables", tuple(str(o) for o in self.observables)
+        )
+        if self.spec_version != SPEC_VERSION:
+            raise ValueError(
+                f"unsupported spec_version {self.spec_version!r} "
+                f"(this build reads version {SPEC_VERSION})"
+            )
+        for phase in self.schedule.phases:
+            if phase.adapt and self.adapt is None:
+                raise ValueError(
+                    f"phase {phase.name!r} sets adapt=True but the spec has "
+                    "no AdaptSpec"
+                )
+            interval = (
+                self.engine.swap_interval
+                if self.engine.swap_interval > 0
+                else self.engine.measure_interval
+            )
+            if phase.n_sweeps % interval != 0:
+                raise ValueError(
+                    f"phase {phase.name!r}: n_sweeps={phase.n_sweeps} is not "
+                    f"a multiple of the engine interval ({interval} sweeps)"
+                )
+
+    # -- serialization ---------------------------------------------------------
+    def to_dict(self) -> dict:
+        return _to_dict(self)
+
+    def to_json(self, indent: int | None = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, data: Mapping) -> "RunSpec":
+        if not isinstance(data, Mapping):
+            raise ValueError(f"run spec must be an object, got {type(data).__name__}")
+        _check_keys(data, _fields(cls), "run spec")
+        version = data.get("spec_version", SPEC_VERSION)
+        if version != SPEC_VERSION:
+            raise ValueError(
+                f"unsupported spec_version {version!r} "
+                f"(this build reads version {SPEC_VERSION})"
+            )
+        if "system" not in data or "ladder" not in data or "schedule" not in data:
+            raise ValueError("run spec needs 'system', 'ladder' and 'schedule'")
+        sched = data["schedule"]
+        if not isinstance(sched, Mapping):
+            raise ValueError("'schedule' must be an object with a 'phases' list")
+        _check_keys(sched, _fields(ScheduleSpec), "schedule")
+        adapt = data.get("adapt")
+        return cls(
+            system=_from_dict(SystemSpec, data["system"], "system"),
+            ladder=_from_dict(LadderSpec, data["ladder"], "ladder"),
+            schedule=ScheduleSpec(phases=tuple(
+                _from_dict(PhaseSpec, p, "phase") for p in sched.get("phases", ())
+            )),
+            engine=_from_dict(EngineSpec, data.get("engine", {}), "engine"),
+            adapt=None if adapt is None else _from_dict(AdaptSpec, adapt, "adapt"),
+            observables=tuple(data.get("observables", ())),
+            seed=int(data.get("seed", 0)),
+            spec_version=int(version),
+        )
+
+    @classmethod
+    def from_json(cls, text: str | bytes | Mapping) -> "RunSpec":
+        """Parse a spec from a JSON string (or an already-decoded dict)."""
+        if isinstance(text, Mapping):
+            return cls.from_dict(text)
+        return cls.from_dict(json.loads(text))

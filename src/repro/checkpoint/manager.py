@@ -2,6 +2,7 @@
 corruption fallback.
 
 Layout:  <dir>/step_<N>/arrays.npz + meta.json   (+ .tmp staging dirs)
+         <dir>/spec.json — the declarative run description (`save_spec`)
 
 * **atomic**: written to `step_N.tmp/` then `os.replace`d — a crash mid-save
   never corrupts the latest checkpoint;
@@ -94,6 +95,30 @@ class CheckpointManager:
                 except ValueError:
                     pass
         return sorted(out)
+
+    # -- run description --------------------------------------------------------
+    def save_spec(self, spec: Any):
+        """Persist the declarative run description next to the checkpoints.
+
+        ``spec`` is a JSON string or a JSON-able dict (typically
+        `repro.api.RunSpec.to_json()`); with it, a run resumes from
+        ``(spec, latest checkpoint)`` alone — no Python driver state needed
+        (`repro.api.Session.from_checkpoint`).  Written atomically.
+        """
+        text = spec if isinstance(spec, str) else json.dumps(spec, indent=2)
+        json.loads(text)  # fail fast on non-JSON input
+        tmp = os.path.join(self.dir, "spec.json.tmp")
+        with open(tmp, "w") as f:
+            f.write(text)
+        os.replace(tmp, os.path.join(self.dir, "spec.json"))
+
+    def load_spec(self) -> dict | None:
+        """The saved run description as a dict, or None if never saved."""
+        path = os.path.join(self.dir, "spec.json")
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return json.load(f)
 
     # -- save ------------------------------------------------------------------
     def save(self, step: int, tree: Any, meta: dict | None = None, blocking: bool = True):

@@ -9,16 +9,26 @@ All methods are written for a **single replica** and are `vmap`-ed by the PT
 driver over the replica axis (the paper's replica-level parallelism).  The
 state may be any pytree.
 
-`REGISTRY` holds the validation **system zoo**: one small exact-answerable
-instance per implemented system, with the observables and engine settings the
-statistical conformance suite (`tests/test_conformance.py`, backed by
-`repro.validate`) runs against ground truth.  Register new systems here and
-they are conformance-tested automatically (DESIGN.md §Validate).
+Two registries live here (DESIGN.md §API, §Validate):
+
+* `CONSTRUCTORS` — the **constructor registry**: every in-tree system is
+  nameable (``make_system("ising", {"length": 32})``) and carries a
+  **named-observable registry** (``named_observables("ising", sys,
+  ["absmag"])``), so a run description can reference systems and observables
+  by string instead of un-serializable lambdas.  This is what
+  `repro.api.SystemSpec` resolves through.
+* `REGISTRY` — the validation **system zoo**: one small exact-answerable
+  instance per implemented system, with the observables and engine settings
+  the statistical conformance suite (`tests/test_conformance.py`, backed by
+  `repro.validate`) runs against ground truth.  Zoo entries are declared by
+  constructor params + observable names, so each entry compiles to a
+  `repro.api.RunSpec`.  Register new systems in both and they are
+  conformance-tested automatically.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Mapping, Protocol, runtime_checkable
+from typing import Any, Callable, Mapping, Protocol, Sequence, runtime_checkable
 
 import jax
 
@@ -69,6 +79,70 @@ def batched_energy(system: System, states: State) -> jax.Array:
     return jax.vmap(system.energy)(states)
 
 
+# -- constructor + named-observable registry -----------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemEntry:
+    """One nameable system family: constructor + named observables.
+
+    Attributes:
+      name: registry key (the `repro.api.SystemSpec.name` namespace).
+      build: constructor called as ``build(**params)``; params must stay
+        JSON-representable (numbers, strings, bools, tuples) so a
+        `SystemSpec` round-trips losslessly.
+      observables: observable name -> factory ``(system) -> per-replica fn``.
+        The factory closes over instance attributes (e.g. the Potts ``q``),
+        which is exactly what a bare lambda in an example used to do — but
+        here the closure is *reconstructible from the name*, so run
+        descriptions serialize.
+    """
+
+    name: str
+    build: Callable[..., Any]
+    observables: Mapping[str, Callable[[Any], Callable]]
+
+
+CONSTRUCTORS: dict[str, SystemEntry] = {}
+
+
+def register_constructor(
+    name: str,
+    build: Callable[..., Any],
+    observables: Mapping[str, Callable[[Any], Callable]] | None = None,
+) -> SystemEntry:
+    if name in CONSTRUCTORS:
+        raise ValueError(f"system constructor {name!r} already registered")
+    entry = SystemEntry(name=name, build=build, observables=dict(observables or {}))
+    CONSTRUCTORS[name] = entry
+    return entry
+
+
+def make_system(name: str, params: Mapping[str, Any] | None = None):
+    """Instantiate a registered system family from JSON-able params."""
+    if name not in CONSTRUCTORS:
+        raise KeyError(
+            f"unknown system {name!r}; registered: {sorted(CONSTRUCTORS)}"
+        )
+    return CONSTRUCTORS[name].build(**dict(params or {}))
+
+
+def named_observables(
+    name: str, system: Any, names: "Sequence[str]"
+) -> dict[str, Callable]:
+    """Resolve observable names to per-replica functions for ``system``."""
+    avail = CONSTRUCTORS[name].observables
+    out = {}
+    for obs in names:
+        if obs not in avail:
+            raise KeyError(
+                f"system {name!r} has no observable {obs!r}; "
+                f"registered: {sorted(avail)}"
+            )
+        out[obs] = avail[obs](system)
+    return out
+
+
 # -- validation system zoo -----------------------------------------------------
 
 
@@ -81,12 +155,16 @@ class RegisteredSystem:
     against exact enumeration / analytic values within MCSE-derived
     tolerances (`repro.validate.conformance`).
 
+    Entries are *declarative*: the instance is named by ``params`` through
+    the constructor registry and observables by ``observable_names`` through
+    the named-observable registry, so every entry compiles to a serializable
+    `repro.api.RunSpec` (`repro.validate.conformance.entry_runspec`).
+
     Attributes:
       name: registry key; `repro.validate.conformance.EXACT` maps it to the
-        matching exact-reference function.
-      make: zero-arg factory for the validation-scale system instance.
-      observables: system -> {name: per-replica observable fn} (built lazily
-        so entries stay importable without constructing the system).
+        matching exact-reference function, and `CONSTRUCTORS` to the builder.
+      params: constructor params of the validation-scale instance.
+      observable_names: named observables the conformance gate checks.
       temps: initial ladder, cold->hot (the adaptive run retunes the
         interior; exact references are evaluated at the *final* ladder).
       swap_interval / n_chains / chunk_intervals: engine settings.
@@ -99,8 +177,8 @@ class RegisteredSystem:
     """
 
     name: str
-    make: Callable[[], Any]
-    observables: Callable[[Any], Mapping[str, Callable]]
+    params: Mapping[str, Any]
+    observable_names: tuple
     temps: tuple
     swap_interval: int = 2
     n_chains: int = 2
@@ -110,6 +188,14 @@ class RegisteredSystem:
     sweeps_per_batch: int = 400
     adapt_rounds: int = 2
     slow: bool = False
+
+    def make(self) -> Any:
+        """The validation-scale system instance (via the constructor registry)."""
+        return make_system(self.name, self.params)
+
+    def observables(self, system: Any) -> dict[str, Callable]:
+        """Resolved per-replica observable fns for ``system``."""
+        return named_observables(self.name, system, self.observable_names)
 
 
 REGISTRY: dict[str, RegisteredSystem] = {}
@@ -123,7 +209,7 @@ def register(entry: RegisteredSystem) -> RegisteredSystem:
 
 
 def _register_zoo():
-    """Populate the default zoo.
+    """Populate the constructor registry and the default zoo.
 
     System imports live inside this function (not at module top level)
     because system modules import *this* module for the `System` protocol —
@@ -137,44 +223,83 @@ def _register_zoo():
     from repro.core.potts import PottsSystem, potts_magnetization
     from repro.core.spin_glass import EASpinGlass
 
+    register_constructor(
+        "ising",
+        IsingSystem,
+        observables={
+            "mag": lambda s: magnetization,
+            "absmag": lambda s: (lambda x: jnp.abs(magnetization(x))),
+            "energy_per_site": lambda s: (
+                lambda x: s.energy(x) / (s.length * s.length)
+            ),
+        },
+    )
+    register_constructor(
+        "gaussian",
+        GaussianMixture,
+        observables={
+            "x": lambda s: (lambda x: x),
+            "absx": lambda s: jnp.abs,
+        },
+    )
+    register_constructor(
+        "potts",
+        PottsSystem,
+        observables={
+            "pmag": lambda s: (lambda x: potts_magnetization(x, s.q)),
+        },
+    )
+    register_constructor(
+        "ea_spin_glass",
+        EASpinGlass,
+        observables={
+            "absmag": lambda s: (
+                lambda x: jnp.abs(jnp.mean(x["spins"].astype(jnp.float32)))
+            ),
+        },
+    )
+    register_constructor(
+        "hp_protein",
+        HPChain,
+        observables={
+            "rg2": lambda s: radius_of_gyration_sq,
+        },
+    )
+
     # Glauber per-site acceptance everywhere checkerboard updates run:
     # strictly stochastic flips keep the simultaneous update aperiodic on
     # the tiny validation lattices (see repro.kernels.ref.accept_prob).
     register(RegisteredSystem(
         name="ising",
-        make=lambda: IsingSystem(length=4, accept_rule="glauber"),
-        observables=lambda s: {"absmag": lambda x: jnp.abs(magnetization(x))},
+        params={"length": 4, "accept_rule": "glauber"},
+        observable_names=("absmag",),
         temps=(1.5, 2.0, 2.6, 3.4, 4.4),
     ))
     register(RegisteredSystem(
         name="gaussian",
-        make=lambda: GaussianMixture(
-            mus=(-3.0, 3.0), sigmas=(0.8, 0.8), weights=(0.5, 0.5), step_size=1.0
-        ),
-        observables=lambda s: {"absx": jnp.abs},
+        params={"mus": (-3.0, 3.0), "sigmas": (0.8, 0.8),
+                "weights": (0.5, 0.5), "step_size": 1.0},
+        observable_names=("absx",),
         temps=(1.0, 1.8, 3.2, 5.6, 10.0),
     ))
     register(RegisteredSystem(
         name="potts",
-        make=lambda: PottsSystem(shape=(4, 4), q=3, accept_rule="glauber",
-                                 use_pallas=True),
-        observables=lambda s: {"pmag": lambda x: potts_magnetization(x, s.q)},
+        params={"shape": (4, 4), "q": 3, "accept_rule": "glauber",
+                "use_pallas": True},
+        observable_names=("pmag",),
         temps=(0.7, 1.0, 1.4, 2.0, 2.9),
         slow=True,  # exact reference enumerates 3^16 ~ 43M states (~20 s)
     ))
     register(RegisteredSystem(
         name="ea_spin_glass",
-        make=lambda: EASpinGlass(shape=(4, 4), disorder_seed=1,
-                                 accept_rule="glauber"),
-        observables=lambda s: {
-            "absmag": lambda x: jnp.abs(jnp.mean(x["spins"].astype(jnp.float32)))
-        },
+        params={"shape": (4, 4), "disorder_seed": 1, "accept_rule": "glauber"},
+        observable_names=("absmag",),
         temps=(0.8, 1.2, 1.8, 2.7, 4.0),
     ))
     register(RegisteredSystem(
         name="hp_protein",
-        make=lambda: HPChain(sequence="HPHPPHHPHH"),
-        observables=lambda s: {"rg2": radius_of_gyration_sq},
+        params={"sequence": "HPHPPHHPHH"},
+        observable_names=("rg2",),
         temps=(0.6, 0.9, 1.4, 2.2, 3.4),
         # chain moves are sequential fori_loop iterations — keep the
         # measurement window lighter than the lattice systems'

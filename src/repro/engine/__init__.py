@@ -12,7 +12,15 @@ that runs long simulations (benchmarks, examples, launch, checkpointing):
   measured acceptance between chunks.
 """
 from repro.engine.adapt import AdaptConfig
-from repro.engine.driver import Engine, EngineConfig, EngineState, RunResult, StepSpec
+from repro.engine.driver import (
+    AdaptInfo,
+    ChunkInfo,
+    Engine,
+    EngineConfig,
+    EngineState,
+    RunResult,
+    StepSpec,
+)
 from repro.engine.stats import (
     OnlineStats,
     combine_chains,
@@ -23,6 +31,8 @@ from repro.engine.stats import (
 
 __all__ = [
     "AdaptConfig",
+    "AdaptInfo",
+    "ChunkInfo",
     "Engine",
     "EngineConfig",
     "EngineState",

@@ -51,6 +51,8 @@ __all__ = [
     "EngineConfig",
     "EngineState",
     "RunResult",
+    "ChunkInfo",
+    "AdaptInfo",
     "Engine",
     "make_interval_step",
 ]
@@ -274,13 +276,56 @@ class RunResult:
       trace: concatenated per-interval trace (numpy, interval axis first for
         C == 1, chain-first ``(C, T, R)`` otherwise) or None.
       ladder_history: (n_retunes + 1, R) temperatures, initial ladder first.
-      n_sweeps: sweeps advanced by this call (per chain).
+      n_sweeps: sweeps advanced by this call (per chain).  Less than the
+        requested budget when an ``on_chunk`` hook stopped the run early.
+      stopped_early: an ``on_chunk`` hook returned truthy — also set when
+        the request landed on the final chunk (``n_sweeps`` then equals the
+        full budget, but callers must still see the stop to skip later
+        work).
     """
 
     summary: dict[str, np.ndarray]
     trace: dict[str, np.ndarray] | None
     ladder_history: np.ndarray
     n_sweeps: int
+    stopped_early: bool = False
+
+
+@dataclasses.dataclass
+class ChunkInfo:
+    """Payload handed to the ``on_chunk`` hook after each compiled chunk.
+
+    Attributes:
+      index: chunk ordinal within this `Engine.run` call (1-based).
+      sweeps_done: sweeps advanced so far in this call (per chain).
+      n_sweeps: the call's total sweep budget.
+      state: the live `EngineState` after this chunk (device arrays).
+      trace: this chunk's streamed per-interval trace (numpy) when
+        ``record_trace`` is on, else None — the streaming hook point.
+    """
+
+    index: int
+    sweeps_done: int
+    n_sweeps: int
+    state: EngineState
+    trace: dict[str, np.ndarray] | None
+
+
+@dataclasses.dataclass
+class AdaptInfo:
+    """Payload handed to the ``on_adapt`` hook after a ladder retune.
+
+    Attributes:
+      round: cumulative retune count for this engine (1-based).
+      temps: the new ladder (R,), cold->hot.
+      acceptance: measured per-pair window acceptance (R-1,) that drove it.
+      sweeps_done: sweeps advanced in this call when the retune fired.
+    """
+
+    round: int
+    temps: np.ndarray
+    acceptance: np.ndarray
+    sweeps_done: int
 
 
 # -- the engine ---------------------------------------------------------------
@@ -318,6 +363,18 @@ class Engine:
         # ladder lifetime), not per run() call, so repeated/resumed runs
         # respect the cap cumulatively
         self._adapt_rounds = 0
+        # live adaptation window (counter baselines at the last retune) —
+        # persists across run() calls so the feedback window spans chunk and
+        # phase boundaries, and is exported/restored through checkpoint meta
+        # (repro.api.session) so a resumed run is bit-equal to an
+        # uninterrupted one even mid-adapt-phase
+        self._adapt_state: AdaptState | None = None
+        # float64 ladder behind the f32 betas in the state: f32(1/T) is not
+        # exactly invertible, so re-deriving temps from betas at run() entry
+        # would feed a retune ulp-different inputs than the uninterrupted
+        # host loop saw — track the authoritative f64 temps here instead
+        # (restored from checkpoint meta on resume)
+        self._temps: np.ndarray | None = None
 
     # -- state construction ----------------------------------------------------
     def _init_single(self, key: jax.Array) -> PTState:
@@ -351,6 +408,10 @@ class Engine:
         stats = stats_lib.init_stats(
             self.config.n_replicas, self._names, n_chains=0 if c == 1 else c
         )
+        self._temps = temps.copy()
+        # a fresh state restarts the swap counters at zero — stale window
+        # baselines from a previous state would starve the feedback loop
+        self._adapt_state = None
         betas = jnp.asarray(1.0 / temps, jnp.float32)
         return EngineState(pt=pt_st, stats=stats, betas=betas)
 
@@ -366,6 +427,13 @@ class Engine:
             self.config.n_replicas, self._names, n_chains=0 if c == 1 else c
         )
         stats = dataclasses.replace(stats, direction=state.stats.direction)
+        if self._adapt_state is not None:
+            # the swap counters just went back to zero — re-zero the adapt
+            # window baselines with them or the window goes negative and the
+            # feedback loop starves forever
+            z = np.zeros_like(self._adapt_state.attempts_base)
+            self._adapt_state.attempts_base = z
+            self._adapt_state.accepts_base = z.copy()
         return dataclasses.replace(state, stats=stats)
 
     def _constrain_chain_axis(self, tree):
@@ -455,6 +523,9 @@ class Engine:
         *,
         checkpoint=None,
         checkpoint_every_chunks: int = 0,
+        on_chunk: Callable[[ChunkInfo], Any] | None = None,
+        on_adapt: Callable[[AdaptInfo], Any] | None = None,
+        keep_trace: bool = True,
     ) -> tuple[EngineState, RunResult]:
         """Advance ``n_sweeps`` sweeps (per chain) through compiled chunks.
 
@@ -464,6 +535,17 @@ class Engine:
         betas), and (c) checkpoints the whole `EngineState` every
         ``checkpoint_every_chunks`` chunks via ``checkpoint`` (a
         `repro.checkpoint.manager.CheckpointManager`).
+
+        ``on_chunk`` / ``on_adapt`` are the host-loop hook points the
+        `repro.api.Session` callback pipeline rides on: ``on_chunk(info)``
+        fires after every compiled chunk (checkpoint included) and may return
+        truthy to stop the run early (``RunResult.stopped_early``);
+        ``on_adapt(info)`` fires after each ladder retune.
+
+        ``keep_trace=False`` (with ``record_trace`` on) hands each chunk's
+        trace to ``on_chunk`` but does *not* accumulate it for
+        ``RunResult.trace`` — host memory stays O(chunk) when a streaming
+        consumer (e.g. `repro.api.TraceWriterCallback`) owns the trace.
 
         ``n_sweeps`` must be a multiple of the interval length
         (``swap_interval``, or ``measure_interval`` when swaps are off).
@@ -475,19 +557,36 @@ class Engine:
             )
         n_intervals = n_sweeps // spi
         many = self.config.n_chains > 1
-        temps = 1.0 / np.asarray(state.betas, np.float64)
+        temps = self._temps
+        if temps is None or not np.array_equal(
+            np.asarray(state.betas), (1.0 / temps).astype(np.float32)
+        ):
+            # unknown or different state (e.g. a fresh init on this engine):
+            # fall back to inverting the f32 betas
+            temps = 1.0 / np.asarray(state.betas, np.float64)
         ladder_history = [temps.astype(np.float32)]
-        adapt_st = AdaptState.fresh(self.config.n_replicas)
+        adapt_st = self._adapt_state
+        if adapt_st is None:
+            adapt_st = AdaptState.fresh(self.config.n_replicas)
+            if self.adapt is not None:
+                # First adaptive window of this engine: baselines start at
+                # the *current* counters, so a raw restored state doesn't
+                # double-count pre-checkpoint attempts.  From then on the
+                # window persists across run() calls (baselines move only at
+                # retunes / stats resets).
+                adapt_st.attempts_base, adapt_st.accepts_base = (
+                    self._pooled_counters(state)
+                )
+        # the retune count carries across run() calls (max_rounds is per
+        # ladder lifetime)
+        adapt_st.rounds = self._adapt_rounds
         if self.adapt is not None:
-            # Window baselines start at the *current* counters, so resumed
-            # runs don't double-count pre-checkpoint attempts; the retune
-            # count carries across run() calls (max_rounds is per ladder).
-            adapt_st.attempts_base, adapt_st.accepts_base = self._pooled_counters(state)
-            adapt_st.rounds = self._adapt_rounds
+            self._adapt_state = adapt_st
         chunks: list[dict[str, np.ndarray]] = []
 
         done = 0
         chunk_idx = 0
+        stopped = False
         while done < n_intervals:
             this = min(self.config.chunk_intervals, n_intervals - done)
             pt_st, stats, trace = self._compiled(state, this)(
@@ -496,15 +595,19 @@ class Engine:
             state = EngineState(pt=pt_st, stats=stats, betas=state.betas)
             done += this
             chunk_idx += 1
+            chunk_np = None
             if self.config.record_trace:
-                chunks.append(
-                    {k: np.asarray(v) for k, v in trace.items()}
-                )
+                chunk_np = {k: np.asarray(v) for k, v in trace.items()}
+                if keep_trace:
+                    chunks.append(chunk_np)
             if self.adapt is not None and done < n_intervals:
                 att, acc = self._pooled_counters(state)
-                new_temps, _ = maybe_adapt(temps, att, acc, self.adapt, adapt_st)
+                new_temps, acceptance = maybe_adapt(
+                    temps, att, acc, self.adapt, adapt_st
+                )
                 if new_temps is not None:
                     temps = np.asarray(new_temps, np.float64)
+                    self._temps = temps
                     ladder_history.append(temps.astype(np.float32))
                     self._adapt_rounds = adapt_st.rounds
                     # Restart the moment accumulators: per-rung means/vars
@@ -525,15 +628,47 @@ class Engine:
                         stats=stats,
                         betas=jnp.asarray(1.0 / temps, jnp.float32),
                     )
+                    if on_adapt is not None:
+                        on_adapt(AdaptInfo(
+                            round=adapt_st.rounds,
+                            temps=temps.astype(np.float32).copy(),
+                            acceptance=np.asarray(acceptance, np.float64),
+                            sweeps_done=done * spi,
+                        ))
             if (
                 checkpoint is not None
                 and checkpoint_every_chunks > 0
                 and (chunk_idx % checkpoint_every_chunks == 0 or done == n_intervals)
             ):
                 sweep = int(np.asarray(pt_st.t).reshape(-1)[0])
-                checkpoint.save(
-                    sweep, state, meta={"temps": [float(t) for t in temps]}
+                # same meta contract as repro.api.CheckpointCallback: the
+                # exact f64 ladder plus the adaptation bookkeeping, so
+                # either checkpoint path resumes bit-equal
+                meta = {
+                    "temps": [float(t) for t in temps],
+                    "adapt_rounds": self._adapt_rounds,
+                }
+                if self._adapt_state is not None:
+                    meta["adapt_attempts_base"] = (
+                        self._adapt_state.attempts_base.tolist()
+                    )
+                    meta["adapt_accepts_base"] = (
+                        self._adapt_state.accepts_base.tolist()
+                    )
+                checkpoint.save(sweep, state, meta=meta)
+            if on_chunk is not None:
+                info = ChunkInfo(
+                    index=chunk_idx,
+                    sweeps_done=done * spi,
+                    n_sweeps=n_sweeps,
+                    state=state,
+                    trace=chunk_np,
                 )
+                if on_chunk(info):
+                    # a stop request on the final chunk still counts: the
+                    # caller (e.g. Session) must see it to skip later phases
+                    stopped = True
+                    break
 
         trace_out = None
         if chunks:
@@ -546,7 +681,8 @@ class Engine:
             summary=stats_lib.summarize(state.stats),
             trace=trace_out,
             ladder_history=np.stack(ladder_history),
-            n_sweeps=n_sweeps,
+            n_sweeps=done * spi,
+            stopped_early=stopped,
         )
         return state, result
 

@@ -1,21 +1,22 @@
 """Engine-vs-ground-truth conformance harness (DESIGN.md §Validate).
 
-`run_conformance` drives one `repro.core.systems.REGISTRY` entry through the
-*production* sampling path — the chunked streaming engine with the adaptive
-ladder enabled and the ensemble axis on — and compares every registered
-observable (plus the energy) at every rung against the system's exact
-reference, evaluated at the **final adapted ladder** (adaptation pins the
-endpoints but moves interior rungs; exact answers are a function of
-temperature, so the reference simply follows).
+`run_conformance` compiles one `repro.core.systems.REGISTRY` entry to a
+declarative `repro.api.RunSpec` (`entry_runspec`) and executes it through
+the *production* sampling path — `repro.api.Session` over the chunked
+streaming engine with the adaptive ladder enabled and the ensemble axis on —
+then compares every registered observable (plus the energy) at every rung
+against the system's exact reference, evaluated at the **final adapted
+ladder** (adaptation pins the endpoints but moves interior rungs; exact
+answers are a function of temperature, so the reference simply follows).
 
-Protocol per entry:
+Schedule per entry (one `ScheduleSpec`):
 
-1. burn-in: ``burn_sweeps`` with `AdaptConfig(max_rounds=adapt_rounds)` —
-   all retunes fire here; the run *uses* the adaptive machinery rather than
-   bypassing it;
-2. measurement: ``n_batches`` windows of ``sweeps_per_batch`` sweeps, the
-   O(R) moment accumulators reset between windows; each chain x window
-   Welford mean is one batch mean (`repro.validate.mcse`);
+1. burn-in phase: ``burn_sweeps`` with ``adapt=True`` and
+   `AdaptSpec(max_rounds=adapt_rounds)` — all retunes fire here; the run
+   *uses* the adaptive machinery rather than bypassing it;
+2. measurement phases: ``n_batches`` windows of ``sweeps_per_batch`` sweeps,
+   each with ``reset_stats=True`` so the O(R) moment accumulators restart;
+   each chain x window Welford mean is one batch mean (`repro.validate.mcse`);
 3. verdict: ``z = (grand mean - exact) / MCSE`` per series per rung, plus a
    first-half vs second-half Geweke drift score.  A ladder retune during
    measurement would invalidate the reference and raises instead.
@@ -28,15 +29,30 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
 import numpy as np
 
+from repro.api import (
+    AdaptSpec,
+    Callback,
+    EngineSpec,
+    LadderSpec,
+    PhaseSpec,
+    RunSpec,
+    ScheduleSpec,
+    Session,
+    SystemSpec,
+)
 from repro.core.systems import RegisteredSystem
-from repro.engine import AdaptConfig, Engine, EngineConfig
 from repro.validate import exact as exact_lib
 from repro.validate.mcse import batch_mean_stats, effective_sample_size, geweke_z
 
-__all__ = ["EXACT", "ConformanceReport", "run_conformance", "assert_conforms"]
+__all__ = [
+    "EXACT",
+    "ConformanceReport",
+    "entry_runspec",
+    "run_conformance",
+    "assert_conforms",
+]
 
 
 # Registry name -> exact-reference function (system, temps) -> {series: (R,)}.
@@ -74,48 +90,83 @@ class ConformanceReport:
         return name, val
 
 
+def entry_runspec(entry: RegisteredSystem, seed: int = 0) -> RunSpec:
+    """Compile a zoo entry to the declarative `RunSpec` conformance executes.
+
+    One burn-in phase with the ladder feedback on, then ``n_batches``
+    measurement phases whose ``reset_stats`` makes each a self-contained
+    batch-means window.  The spec is fully serializable — ``python -m repro
+    run`` on its JSON form performs the identical simulation.
+    """
+    if entry.n_chains < 2:
+        raise ValueError("conformance requires the ensemble axis (n_chains >= 2)")
+    phases = [PhaseSpec(name="burn", n_sweeps=entry.burn_sweeps, adapt=True)]
+    for b in range(entry.n_batches):
+        # adapt stays ON during measurement on purpose: with a well-sized
+        # burn all `adapt_rounds` retunes already fired (max_rounds makes
+        # further retunes a no-op, bit-identical trajectory), but a too-thin
+        # burn lets a leftover retune fire here and trip the frozen-ladder
+        # guard in run_conformance instead of silently skewing the reference.
+        phases.append(PhaseSpec(
+            name=f"batch{b:02d}", n_sweeps=entry.sweeps_per_batch,
+            adapt=True, reset_stats=True,
+        ))
+    return RunSpec(
+        system=SystemSpec(name=entry.name, params=dict(entry.params)),
+        ladder=LadderSpec(
+            kind="custom", n_replicas=len(entry.temps), temps=entry.temps
+        ),
+        engine=EngineSpec(
+            swap_interval=entry.swap_interval,
+            chunk_intervals=entry.chunk_intervals,
+            n_chains=entry.n_chains,
+        ),
+        adapt=AdaptSpec(
+            target=0.3, min_attempts_per_pair=10, max_rounds=entry.adapt_rounds
+        ),
+        schedule=ScheduleSpec(phases=tuple(phases)),
+        observables=entry.observable_names,
+        seed=seed,
+    )
+
+
 def run_conformance(
     entry: RegisteredSystem, seed: int = 0, exact_fn=None
 ) -> ConformanceReport:
-    """Run one zoo entry through the adaptive ensemble engine vs ground truth."""
+    """Run one zoo entry through the adaptive ensemble Session vs ground truth."""
     if exact_fn is None:
         exact_fn = EXACT[entry.name]
-    system = entry.make()
-    r = len(entry.temps)
-    cfg = EngineConfig(
-        n_replicas=r,
-        swap_interval=entry.swap_interval,
-        chunk_intervals=entry.chunk_intervals,
-        n_chains=entry.n_chains,
-    )
-    if entry.n_chains < 2:
-        raise ValueError("conformance requires the ensemble axis (n_chains >= 2)")
-    eng = Engine(
-        system,
-        cfg,
-        observables=entry.observables(system),
-        adapt=AdaptConfig(
-            target=0.3, min_attempts_per_pair=10, max_rounds=entry.adapt_rounds
-        ),
-    )
-    state = eng.init(jax.random.key(seed), np.asarray(entry.temps))
+    spec = entry_runspec(entry, seed=seed)
+
+    # A tiny callback freezes the post-burn ladder so the measurement phases
+    # can be audited against it — the callback pipeline replacing what used
+    # to be hand-rolled driver code between engine calls.
+    frozen: dict[str, np.ndarray] = {}
+
+    class _FreezeLadder(Callback):
+        def on_phase_end(self, session, phase, result):
+            if phase.name == "burn":
+                frozen["betas"] = np.asarray(session.state.betas).copy()
+
+    session = Session(spec, callbacks=[_FreezeLadder()])
+    outcome = session.run()
+    system = session.system
 
     # 1. burn-in — equilibration plus every allowed ladder retune.
-    state, burn = eng.run(state, entry.burn_sweeps)
-    betas_frozen = np.asarray(state.betas).copy()
+    burn = outcome.phases["burn"]
+    betas_frozen = frozen["betas"]
     temps = 1.0 / betas_frozen.astype(np.float64)
 
     # 2. measurement — batch means over chain x window cells.
-    series = ["energy"] + sorted(entry.observables(system))
+    series = ["energy"] + sorted(entry.observable_names)
     bm = {k: [] for k in series}  # per-window (C, R) means
     pv = {k: [] for k in series}  # per-window (C, R) variances
-    for _ in range(entry.n_batches):
-        state = eng.reset_stats(state)
-        state, res = eng.run(state, entry.sweeps_per_batch)
+    for phase in spec.schedule.phases[1:]:
+        res = outcome.phases[phase.name]
         for k in series:
             bm[k].append(np.atleast_2d(res.summary[f"mean_{k}"]))
             pv[k].append(np.atleast_2d(res.summary[f"var_{k}"]))
-    if not np.array_equal(np.asarray(state.betas), betas_frozen):
+    if not np.array_equal(np.asarray(outcome.state.betas), betas_frozen):
         raise RuntimeError(
             f"{entry.name}: ladder retuned during measurement — increase "
             "burn_sweeps so all adapt_rounds fire before the batches start"
