@@ -1,9 +1,22 @@
-"""Shared benchmark utilities (timing, CSV emission)."""
+"""Shared benchmark utilities: timing, CSV rows, machine-readable records.
+
+``emit`` keeps the human-readable ``name,us_per_call,derived`` CSV contract
+every suite prints, and — when a ``group`` is given — also accumulates the
+row as a structured record.  ``write_bench_json`` then lands the group as
+``BENCH_<group>.json`` (name, seconds, derived string, parsed metrics, jax
+backend/version), which is what lets the perf trajectory accumulate across
+PRs: CI runs the suites at smoke sizes and uploads the JSONs as artifacts.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
+
+# group -> list of record dicts, accumulated by `emit(..., group=...)`
+_RECORDS: dict[str, list] = {}
 
 
 def time_call(fn, *args, warmup: int = 1, iters: int = 3):
@@ -19,6 +32,48 @@ def time_call(fn, *args, warmup: int = 1, iters: int = 3):
     return times[len(times) // 2]
 
 
-def emit(name: str, seconds: float, derived: str = ""):
-    """One CSV row: name,us_per_call,derived."""
+def emit(
+    name: str,
+    seconds: float,
+    derived: str = "",
+    group: str | None = None,
+    metrics: dict | None = None,
+):
+    """One CSV row: name,us_per_call,derived.
+
+    With ``group``, the row is also accumulated as a machine-readable record
+    (plus any ``metrics`` — numeric derived values that would otherwise only
+    exist inside the ``derived`` display string) for `write_bench_json`.
+    """
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+    if group is not None:
+        record = {"name": name, "seconds": seconds, "derived": derived}
+        if metrics:
+            record["metrics"] = {k: float(v) for k, v in metrics.items()}
+        _RECORDS.setdefault(group, []).append(record)
+
+
+def write_bench_json(group: str, out_dir: str | None = None) -> str:
+    """Write the group's accumulated records to ``BENCH_<group>.json``.
+
+    ``out_dir`` defaults to ``$BENCH_OUT_DIR`` or the working directory.
+    Returns the written path; the write is atomic (tmp + rename) so a
+    crashed suite never leaves a truncated record file behind.  Writing
+    drains the group's accumulator, so a suite run twice in one process
+    produces two clean files instead of one with duplicated records.
+    """
+    out_dir = out_dir or os.environ.get("BENCH_OUT_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    payload = {
+        "group": group,
+        "jax_backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "created_unix": time.time(),
+        "records": _RECORDS.pop(group, []),
+    }
+    path = os.path.join(out_dir, f"BENCH_{group}.json")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    os.replace(tmp, path)
+    return path

@@ -21,9 +21,11 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, time_call, write_bench_json
 from repro.core import ising, ladder
 from repro.engine import Engine, EngineConfig
+
+GROUP = "speedup"
 
 
 def _engine(system, r: int, sweeps: int, n_chains: int = 1) -> Engine:
@@ -39,7 +41,7 @@ def _engine(system, r: int, sweeps: int, n_chains: int = 1) -> Engine:
     return Engine(system, cfg)
 
 
-def run(sweeps: int = 50, length: int = 32):
+def run(sweeps: int = 50, length: int = 32, out_dir=None):
     system = ising.IsingSystem(length=length)
 
     for r in (16, 64, 256):
@@ -66,6 +68,9 @@ def run(sweeps: int = 50, length: int = 32):
         emit(
             f"fig45_speedup_R{r}", t_vec,
             f"seq_us={t_seq*1e6:.0f};speedup={t_seq / t_vec:.1f}x;sweeps={sweeps}",
+            group=GROUP,
+            metrics={"seq_seconds": t_seq, "speedup": t_seq / t_vec,
+                     "sweeps": sweeps, "n_replicas": r},
         )
 
     # ensemble axis: many chains per launch (per-chain cost should stay flat
@@ -79,6 +84,9 @@ def run(sweeps: int = 50, length: int = 32):
         emit(
             f"engine_ensemble_C{c}xR{r}", t,
             f"per_chain_us={t/c*1e6:.0f};sweeps={sweeps}",
+            group=GROUP,
+            metrics={"per_chain_seconds": t / c, "n_chains": c,
+                     "sweeps": sweeps, "n_replicas": r},
         )
 
     # streaming-stats memory vs the seed's full trace, 10k-sweep run
@@ -95,4 +103,8 @@ def run(sweeps: int = 50, length: int = 32):
         "engine_stream_mem", 0.0,
         f"stats_bytes={stats_bytes};trace_bytes_10k={trace_bytes};"
         f"ratio={trace_bytes/max(stats_bytes,1):.0f}x",
+        group=GROUP,
+        metrics={"stats_bytes": stats_bytes, "trace_bytes_10k": trace_bytes},
     )
+    path = write_bench_json(GROUP, out_dir)
+    print(f"# wrote {path}", flush=True)

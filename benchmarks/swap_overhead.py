@@ -1,13 +1,19 @@
-"""Paper Fig. 7 analogue: swap-interval effect on runtime.
+"""Paper Fig. 7 analogue: swap-interval effect on runtime + exchange strategies.
 
 The paper's observation: swap cost is negligible at any interval because the
 Ising system is glassy (low swap acceptance) and the swap itself is cheap
 relative to an interval of sweeps.  We reproduce both the runtime comparison
-and the acceptance-rate observation, and additionally compare the faithful
-``state`` swap mode against the optimized ``temp`` mode (DESIGN.md §2).
+and the acceptance-rate observation, compare the faithful ``state`` swap
+mode against the optimized ``temp`` mode (DESIGN.md §2), and benchmark the
+pluggable exchange strategies (DESIGN.md §Exchange): per-strategy wall-clock
+vs *round-trip rate* — round trips per second is the accuracy-per-FLOP
+currency exchange strategies compete on, and exactly what the raw
+swap-overhead numbers can't show.
 
-Runs through the chunked engine; the acceptance column comes from the O(R)
-online swap counters (`repro.engine.stats`) — no trace is materialized.
+Runs through the chunked engine; acceptance and round-trip columns come from
+the O(R) online counters (`repro.engine.stats`) — no trace is materialized.
+Rows land in ``BENCH_swap.json`` via `benchmarks.common.write_bench_json`
+(the perf-trajectory record CI uploads on every PR).
 """
 from __future__ import annotations
 
@@ -15,12 +21,16 @@ import numpy as np
 
 import jax
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, time_call, write_bench_json
 from repro.core import ising, ladder
 from repro.engine import Engine, EngineConfig
+from repro.exchange import available_strategies
+
+GROUP = "swap"
 
 
-def run(r: int = 64, length: int = 32, sweeps: int = 1000):
+def run_intervals(r: int = 64, length: int = 32, sweeps: int = 1000):
+    """Fig. 7: per-sweep overhead of the swap phase vs swap interval."""
     system = ising.IsingSystem(length=length)
     temps = np.asarray(ladder.paper_ladder(r))
 
@@ -45,13 +55,80 @@ def run(r: int = 64, length: int = 32, sweeps: int = 1000):
             per_sweep = t / n
             if interval == 0:
                 base_time = per_sweep
-                emit(f"fig7_noswap", t, f"sweeps={n};R={r}")
+                emit(
+                    "fig7_noswap", t, f"sweeps={n};R={r}", group=GROUP,
+                    metrics={"sweeps": n, "n_replicas": r,
+                             "us_per_sweep": per_sweep * 1e6},
+                )
                 continue
             # acceptance from the streaming counters (one O(R) readback)
             _, res = eng.run(state, n)
             acc = float(np.mean(res.summary["swap_acceptance"]))
+            overhead = 100 * (per_sweep - base_time) / base_time
             emit(
                 f"fig7_interval{interval}_{mode}", t,
-                f"sweeps={n};overhead={100*(per_sweep-base_time)/base_time:.1f}%"
-                f";swap_acc={acc:.3f}",
+                f"sweeps={n};overhead={overhead:.1f}%;swap_acc={acc:.3f}",
+                group=GROUP,
+                metrics={"sweeps": n, "overhead_pct": overhead,
+                         "swap_acceptance": acc,
+                         "us_per_sweep": per_sweep * 1e6},
             )
+
+
+def run_strategies(r: int = 16, length: int = 16, sweeps: int = 4000):
+    """Per-strategy round-trip rate vs wall-clock (DESIGN.md §Exchange).
+
+    Aggressive swap cadence (interval 2) on a ladder spanning the Ising
+    critical region, so replicas actually travel: the comparison is *round
+    trips per second* — wall-clock alone would call every strategy a tie.
+    """
+    system = ising.IsingSystem(length=length)
+    temps = np.asarray(ladder.geometric_ladder(r, 1.5, 4.5))
+    interval = 2
+    sweeps = interval * max(1, round(sweeps / interval))
+    for name in available_strategies():
+        cfg = EngineConfig(
+            n_replicas=r,
+            swap_interval=interval,
+            chunk_intervals=64,
+            donate=False,
+            exchange=name,
+        )
+        eng = Engine(system, cfg)
+        state = eng.init(jax.random.key(2), temps)
+        t = time_call(lambda st: eng.run(st, sweeps)[0].pt.energy, state, iters=3)
+        _, res = eng.run(state, sweeps)
+        trips = float(np.asarray(res.summary["round_trips"]).sum())
+        acc = float(np.mean(res.summary["swap_acceptance"]))
+        rate = trips / t if t > 0 else 0.0
+        emit(
+            f"strategy_{name}", t,
+            f"sweeps={sweeps};round_trips={trips:.0f};trips_per_s={rate:.1f}"
+            f";swap_acc={acc:.3f}",
+            group=GROUP,
+            metrics={"sweeps": sweeps, "n_replicas": r, "round_trips": trips,
+                     "trips_per_sec": rate, "swap_acceptance": acc},
+        )
+
+
+def run(r: int = 64, length: int = 32, sweeps: int = 1000, out_dir=None):
+    run_intervals(r=r, length=length, sweeps=sweeps)
+    # strategy rows scale off the same knobs so the CI smoke run stays tiny
+    run_strategies(r=max(4, r // 4), length=min(length, 16), sweeps=4 * sweeps)
+    path = write_bench_json(GROUP, out_dir)
+    print(f"# wrote {path}", flush=True)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--replicas", type=int, default=64)
+    ap.add_argument("--length", type=int, default=32)
+    ap.add_argument("--sweeps", type=int, default=1000)
+    ap.add_argument("--out-dir", default=None,
+                    help="where BENCH_swap.json lands (default: $BENCH_OUT_DIR or .)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(r=args.replicas, length=args.length, sweeps=args.sweeps,
+        out_dir=args.out_dir)

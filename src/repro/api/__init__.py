@@ -33,6 +33,7 @@ from repro.api.spec import (
     SPEC_VERSION,
     AdaptSpec,
     EngineSpec,
+    ExchangeSpec,
     LadderSpec,
     PhaseSpec,
     RunSpec,
@@ -48,6 +49,7 @@ __all__ = [
     "CheckpointCallback",
     "EarlyStopCallback",
     "EngineSpec",
+    "ExchangeSpec",
     "LadderSpec",
     "PhaseSpec",
     "ProgressCallback",

@@ -7,8 +7,10 @@ Subcommands (DESIGN.md §API):
   resume DIR                    continue a checkpointed run from
                                 ``(spec.json, newest checkpoint)`` alone
   validate SYSTEM [...]         conformance-run a system-zoo entry against
-                                its exact reference (exit 1 on failure)
+                                its exact reference (exit 1 on failure);
+                                --exchange gates a non-default strategy
   list-systems                  registered systems, params and observables
+  list-strategies               registered replica-exchange strategies
 
 The CLI is a thin shell over `repro.api.Session` — a spec executes
 identically from here, a script, a test, or a benchmark.
@@ -86,12 +88,22 @@ def _cmd_validate(args) -> int:
             file=sys.stderr,
         )
         return 2
+    from repro.exchange import available_strategies
+
+    if args.exchange not in available_strategies():
+        print(
+            f"unknown exchange strategy {args.exchange!r}; registered: "
+            f"{available_strategies()}",
+            file=sys.stderr,
+        )
+        return 2
     entry = systems.REGISTRY[args.system]
-    report = run_conformance(entry, seed=args.seed)
+    report = run_conformance(entry, seed=args.seed, exchange=args.exchange)
     worst_series, worst_z = report.worst()
     print(
-        f"{args.system}: {report.n_batches} batch means, ladder retuned "
-        f"{report.n_retunes}x, worst |z| = {worst_z:.2f} ({worst_series})"
+        f"{args.system} [{args.exchange}]: {report.n_batches} batch means, "
+        f"ladder retuned {report.n_retunes}x, "
+        f"worst |z| = {worst_z:.2f} ({worst_series})"
     )
     for k in sorted(report.means):
         for r, t in enumerate(report.temps):
@@ -102,7 +114,8 @@ def _cmd_validate(args) -> int:
     if args.out:
         os.makedirs(args.out, exist_ok=True)
         path = os.path.join(args.out, f"validate_{args.system}.json")
-        payload = {"system": args.system, "seed": args.seed}
+        payload = {"system": args.system, "seed": args.seed,
+                   "exchange": args.exchange}
         for f in dataclasses.fields(report):
             v = getattr(report, f.name)
             if isinstance(v, dict):
@@ -136,6 +149,15 @@ def _cmd_list_systems(args) -> int:
     return 0
 
 
+def _cmd_list_strategies(args) -> int:
+    from repro import exchange
+
+    for name in exchange.available_strategies():
+        print(f"{name}")
+        print(f"  {exchange.strategy_help(name)}")
+    return 0
+
+
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         prog="python -m repro",
@@ -166,11 +188,18 @@ def build_parser() -> argparse.ArgumentParser:
     )
     p.add_argument("system", help="registry name (see list-systems)")
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--exchange", default="deo",
+                   help="replica-exchange strategy (see list-strategies)")
     p.add_argument("--out", default=None, help="also write the report JSON here")
     p.set_defaults(fn=_cmd_validate)
 
     p = sub.add_parser("list-systems", help="registered systems + observables")
     p.set_defaults(fn=_cmd_list_systems)
+
+    p = sub.add_parser(
+        "list-strategies", help="registered replica-exchange strategies"
+    )
+    p.set_defaults(fn=_cmd_list_strategies)
     return ap
 
 

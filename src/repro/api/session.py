@@ -154,8 +154,7 @@ class CheckpointCallback(Callback):
                 "adapt_rounds": session.engine._adapt_rounds}
         adapt_st = session.engine._adapt_state
         if adapt_st is not None:
-            meta["adapt_attempts_base"] = adapt_st.attempts_base.tolist()
-            meta["adapt_accepts_base"] = adapt_st.accepts_base.tolist()
+            meta.update(adapt_st.to_meta())
         self.manager.save(sweep, state, meta=meta)
         session.dispatch("on_checkpoint", sweep)
 
@@ -303,7 +302,9 @@ class Session:
         self._adapt = spec.adapt.build() if spec.adapt is not None else None
         self.engine = Engine(
             self.system,
-            spec.engine.build(spec.ladder.n_replicas),
+            spec.engine.build(
+                spec.ladder.n_replicas, exchange=spec.exchange.build()
+            ),
             observables=self.observables,
             shard=shard,
             # Engine.adapt is toggled per phase; constructing with it also
@@ -361,12 +362,11 @@ class Session:
         if "temps" in meta:
             # the exact f64 ladder — f32 betas alone can't reproduce it
             session.engine._temps = np.asarray(meta["temps"], np.float64)
-        if "adapt_attempts_base" in meta:
-            session.engine._adapt_state = AdaptState(
-                attempts_base=np.asarray(meta["adapt_attempts_base"], np.float64),
-                accepts_base=np.asarray(meta["adapt_accepts_base"], np.float64),
-                rounds=session.engine._adapt_rounds,
-            )
+        restored_adapt = AdaptState.from_meta(
+            meta, rounds=session.engine._adapt_rounds
+        )
+        if restored_adapt is not None:
+            session.engine._adapt_state = restored_adapt
         if not any(isinstance(cb, CheckpointCallback) for cb in session.callbacks):
             session.callbacks.append(CheckpointCallback(manager))
         return session

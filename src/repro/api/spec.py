@@ -8,6 +8,7 @@ tree and executes it through `repro.api.Session` (DESIGN.md §API):
     ├── SystemSpec    what to sample      (constructor registry name + params)
     ├── LadderSpec    initial temperatures (paper/linear/geometric/custom)
     ├── EngineSpec    how to execute      (wraps `repro.engine.EngineConfig`)
+    ├── ExchangeSpec  replica-exchange strategy (resolved via `repro.exchange`)
     ├── AdaptSpec?    ladder feedback     (wraps `repro.engine.AdaptConfig`)
     ├── ScheduleSpec  burn-in / measurement phases (tuple of PhaseSpec)
     └── observables   named observables   (per-system observable registry)
@@ -24,7 +25,11 @@ Design rules that make the tree a viable interchange format:
 * **versioned** — ``spec_version`` is checked on load and unknown versions
   are rejected, so persisted specs fail loudly instead of misexecuting;
 * **strict** — unknown keys anywhere in the tree are an error (typos in a
-  hand-written JSON spec must not silently fall back to defaults).
+  hand-written JSON spec must not silently fall back to defaults), and
+  every enum-valued field (ladder ``kind``, engine ``criterion`` /
+  ``swap_mode``, exchange ``strategy``, adapt ``mode``) is validated at
+  construction — a bad value fails at parse time with the allowed values
+  named, never deep inside the first compiled chunk.
 """
 from __future__ import annotations
 
@@ -37,12 +42,15 @@ import numpy as np
 from repro.core import ladder as ladder_lib
 from repro.core import systems as systems_lib
 from repro.engine import AdaptConfig, EngineConfig
+from repro.engine.adapt import ADAPT_MODES
+from repro.exchange import available_strategies, make_strategy
 
 __all__ = [
     "SPEC_VERSION",
     "SystemSpec",
     "LadderSpec",
     "EngineSpec",
+    "ExchangeSpec",
     "AdaptSpec",
     "PhaseSpec",
     "ScheduleSpec",
@@ -186,7 +194,8 @@ class LadderSpec:
 @dataclasses.dataclass(frozen=True)
 class EngineSpec:
     """Execution knobs — a serializable mirror of `repro.engine.EngineConfig`
-    (minus ``n_replicas``, which the ladder owns)."""
+    (minus ``n_replicas``, which the ladder owns, and ``exchange``, which
+    `ExchangeSpec` owns)."""
 
     swap_interval: int = 100
     criterion: str = "logistic"
@@ -198,18 +207,74 @@ class EngineSpec:
     measure_interval: int = 100
     donate: bool = True
 
-    def build(self, n_replicas: int) -> EngineConfig:
-        return EngineConfig(n_replicas=n_replicas, **dataclasses.asdict(self))
+    def __post_init__(self):
+        if self.criterion not in ("logistic", "metropolis"):
+            raise ValueError(
+                f"unknown criterion {self.criterion!r}; "
+                "allowed: ['logistic', 'metropolis']"
+            )
+        if self.swap_mode not in ("temp", "state"):
+            raise ValueError(
+                f"unknown swap_mode {self.swap_mode!r}; "
+                "allowed: ['state', 'temp']"
+            )
+
+    def build(self, n_replicas: int, exchange=None) -> EngineConfig:
+        return EngineConfig(
+            n_replicas=n_replicas, exchange=exchange, **dataclasses.asdict(self)
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeSpec:
+    """The replica-exchange strategy, by registry name (DESIGN.md §Exchange).
+
+    ``strategy`` resolves through `repro.exchange.make_strategy`:
+    "deo" (paper even/odd; default), "seo" (stochastic even/odd),
+    "windowed" (random in-window matchings; ``window`` rungs per window),
+    "vmpt" (virtual-move PT with waste-recycled estimators).  ``window``
+    only applies to "windowed" (it is carried, but ignored, elsewhere so
+    sweeping strategies over one spec stays a one-field edit).
+    """
+
+    strategy: str = "deo"
+    window: int = 4
+
+    def __post_init__(self):
+        if self.strategy not in available_strategies():
+            raise ValueError(
+                f"unknown exchange strategy {self.strategy!r}; "
+                f"allowed: {available_strategies()}"
+            )
+        if self.window < 2:
+            raise ValueError(f"exchange window must be >= 2, got {self.window}")
+
+    def build(self):
+        params = {"window": self.window} if self.strategy == "windowed" else {}
+        return make_strategy(self.strategy, params)
 
 
 @dataclasses.dataclass(frozen=True)
 class AdaptSpec:
-    """Ladder-feedback knobs — serializable mirror of `repro.engine.AdaptConfig`."""
+    """Ladder-feedback knobs — serializable mirror of `repro.engine.AdaptConfig`.
+
+    ``mode``: "acceptance" (Kofke equalization, default) or "flow"
+    (Katzgraber feedback-optimized ladders driven by the round-trip flow
+    diagnostic; see `repro.engine.adapt`).
+    """
 
     target: float = 0.23
     rate: float = 0.5
     min_attempts_per_pair: int = 20
     max_rounds: int | None = None
+    mode: str = "acceptance"
+    flow_min_visits: int = 100
+
+    def __post_init__(self):
+        if self.mode not in ADAPT_MODES:
+            raise ValueError(
+                f"unknown adapt mode {self.mode!r}; allowed: {list(ADAPT_MODES)}"
+            )
 
     def build(self) -> AdaptConfig:
         return AdaptConfig(**dataclasses.asdict(self))
@@ -283,6 +348,7 @@ class RunSpec:
     ladder: LadderSpec
     schedule: ScheduleSpec
     engine: EngineSpec = EngineSpec()
+    exchange: ExchangeSpec = ExchangeSpec()
     adapt: AdaptSpec | None = None
     observables: tuple = ()
     seed: int = 0
@@ -346,6 +412,9 @@ class RunSpec:
                 _from_dict(PhaseSpec, p, "phase") for p in sched.get("phases", ())
             )),
             engine=_from_dict(EngineSpec, data.get("engine", {}), "engine"),
+            exchange=_from_dict(
+                ExchangeSpec, data.get("exchange", {}), "exchange"
+            ),
             adapt=None if adapt is None else _from_dict(AdaptSpec, adapt, "adapt"),
             observables=tuple(data.get("observables", ())),
             seed=int(data.get("seed", 0)),

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 __all__ = [
     "pair_partners",
     "swap_probability",
+    "accept_pairs",
     "swap_permutation",
 ]
 
@@ -78,21 +79,24 @@ def swap_probability(
     raise ValueError(f"unknown criterion {criterion!r}")
 
 
-@partial(jax.jit, static_argnames=("n", "criterion"))
-def swap_permutation(
+def accept_pairs(
     key: jax.Array,
-    phase: jax.Array,
+    partner: jnp.ndarray,
     betas: jnp.ndarray,
     energies: jnp.ndarray,
-    *,
-    n: int,
     criterion: Criterion = "logistic",
 ):
-    """Compute this swap iteration's rung permutation, fully in parallel.
+    """Accept/reject every proposed pair of an involution, in parallel.
+
+    The pairing itself is policy (`repro.exchange` strategies propose it);
+    this is the policy-independent acceptance core: one uniform per rung,
+    one decision per pair made at the *lower* member and broadcast to both.
 
     Args:
-      key: PRNG key for the iteration (one uniform per pair).
-      phase: alternating 0/1 pairing phase.
+      key: PRNG key for the iteration (one uniform per rung).
+      partner: (R,) involution — ``partner[i] = j`` iff ``{i, j}`` is a
+        proposed pair, ``partner[i] = i`` for unpaired rungs.  Pairs need
+        not be ladder-adjacent (windowed strategies propose distant rungs).
       betas: (R,) inverse temperatures *in rung order* (cold→hot).
       energies: (R,) energy of the replica currently holding each rung.
 
@@ -108,7 +112,7 @@ def swap_permutation(
         source of truth for what counts as an attempt (acceptance statistics
         and the adaptive-ladder feedback both normalize by it).
     """
-    partner = pair_partners(n, phase)
+    n = partner.shape[0]
     idx = jnp.arange(n, dtype=jnp.int32)
     lower = jnp.minimum(idx, partner)
     is_lower = (partner != idx) & (idx == lower)
@@ -123,3 +127,25 @@ def swap_permutation(
     perm = jnp.where(pair_accept, partner, idx)
     prob_at_lower = jnp.where(is_lower, p, 0.0)
     return perm, accept_at_lower, prob_at_lower, is_lower
+
+
+@partial(jax.jit, static_argnames=("n", "criterion"))
+def swap_permutation(
+    key: jax.Array,
+    phase: jax.Array,
+    betas: jnp.ndarray,
+    energies: jnp.ndarray,
+    *,
+    n: int,
+    criterion: Criterion = "logistic",
+):
+    """The paper's swap iteration: alternating even/odd pairing + `accept_pairs`.
+
+    Kept as the seed-compatible one-call form; the exchange-strategy layer
+    (`repro.exchange`) composes `pair_partners`-style proposals with
+    `accept_pairs` to express the same thing plus its generalizations.
+    Returns ``(perm, accept_pair, prob_pair, attempt_pair)`` — see
+    `accept_pairs` for the conventions.
+    """
+    partner = pair_partners(n, phase)
+    return accept_pairs(key, partner, betas, energies, criterion=criterion)

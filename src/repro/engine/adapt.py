@@ -3,15 +3,27 @@
 The seed only exposed `ladder.tune_ladder` as an offline utility: run, fetch
 the whole trace, measure acceptance, retune, recompile, rerun.  The engine
 closes the loop *during* a run: between compiled chunks it reads the O(R)
-device-side swap counters (`repro.engine.stats`), computes the per-pair
-acceptance over the window since the last retune, and feeds it to
-`ladder.tune_ladder` (Kofke-style acceptance equalization; Earl & Deem,
-physics/0508111, survey the family).  Because the engine treats betas as a
-*traced* input of the mega-step — not a static config field — retuning re-uses
-the already-compiled executable: zero recompiles per adaptation.
+device-side counters (`repro.engine.stats`), computes the feedback signal
+over the window since the last retune, and retunes.  Because the engine
+treats betas as a *traced* input of the mega-step — not a static config
+field — retuning re-uses the already-compiled executable: zero recompiles
+per adaptation.
 
-Acceptance is pooled across the ensemble axis when present (all chains share
-one ladder), which multiplies the feedback signal per wall-clock chunk.
+Two feedback modes:
+
+* ``acceptance`` (default) — Kofke-style acceptance equalization via
+  `ladder.tune_ladder`: per-pair swap acceptance is pushed toward a uniform
+  target (Earl & Deem, physics/0508111, survey the family).
+* ``flow`` — Katzgraber et al. feedback optimization: the ladder is
+  re-spaced from the measured replica *flow fraction* ``f(T)`` (the
+  ``flow_up`` diagnostic the stats layer has tracked all along — fraction of
+  labelled visits at each rung travelling cold→hot).  The optimal rung
+  density is ``η(T) ∝ sqrt(|df/dT|)``, which concentrates rungs at the
+  mixing bottleneck and maximizes the round-trip rate — the
+  accuracy-per-FLOP objective acceptance equalization only proxies.
+
+Feedback signals are pooled across the ensemble axis when present (all
+chains share one ladder), which multiplies the signal per wall-clock chunk.
 """
 from __future__ import annotations
 
@@ -21,7 +33,14 @@ import numpy as np
 
 from repro.core import ladder as ladder_lib
 
-__all__ = ["AdaptConfig", "AdaptState", "maybe_adapt"]
+__all__ = [
+    "AdaptConfig",
+    "AdaptState",
+    "flow_optimized_ladder",
+    "maybe_adapt",
+]
+
+ADAPT_MODES = ("acceptance", "flow")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,79 +48,197 @@ class AdaptConfig:
     """Feedback-loop configuration.
 
     Attributes:
-      target: desired uniform per-pair swap acceptance.
-      rate: feedback gain in log-spacing space (see `ladder.tune_ladder`).
+      target: desired uniform per-pair swap acceptance (``acceptance`` mode).
+      rate: feedback gain — log-spacing gain for ``acceptance`` (see
+        `ladder.tune_ladder`), log-space blend toward the flow-optimal
+        ladder for ``flow`` (1.0 = jump straight to it).
       min_attempts_per_pair: don't retune until every adjacent pair has at
         least this many attempts in the current window (pooled over chains) —
         low-count acceptance estimates are too noisy to act on.
       max_rounds: stop adapting after this many retunes, cumulative over the
         engine's lifetime — repeated/resumed ``run()`` calls share the cap
         (None = never stop).
+      mode: "acceptance" (Kofke equalization) | "flow" (Katzgraber
+        feedback-optimized; consumes the ``flow_up`` round-trip diagnostic,
+        so it needs ``swap_mode="temp"`` where rung flow is meaningful).
+      flow_min_visits: ``flow`` mode's window gate — every rung needs at
+        least this many *labelled* visits (pooled over chains) before the
+        measured f(T) is trusted.
 
     The cold/hot endpoints of the ladder are always pinned: feedback only
-    redistributes the interior rungs (`ladder.tune_ladder` rescales to the
-    endpoints unconditionally, so the temperature *range* is a modelling
-    choice made at `Engine.init`, not something the feedback loop drifts).
+    redistributes the interior rungs, so the temperature *range* is a
+    modelling choice made at `Engine.init`, not something the feedback loop
+    drifts.
     """
 
     target: float = 0.23
     rate: float = 0.5
     min_attempts_per_pair: int = 20
     max_rounds: int | None = None
+    mode: str = "acceptance"
+    flow_min_visits: int = 100
+
+    def __post_init__(self):
+        if self.mode not in ADAPT_MODES:
+            raise ValueError(
+                f"unknown adapt mode {self.mode!r}; allowed: {list(ADAPT_MODES)}"
+            )
 
 
 @dataclasses.dataclass
 class AdaptState:
-    """Host-side bookkeeping between chunks (window baselines + history)."""
+    """Host-side bookkeeping between chunks (window baselines + history).
+
+    Baselines snapshot the cumulative device counters at the last retune, so
+    each feedback step sees only its own window.  All four ride in the
+    checkpoint step meta so a resumed run re-enters the same window.
+    """
 
     attempts_base: np.ndarray  # (R,) counter snapshot at the last retune
     accepts_base: np.ndarray
+    up_base: np.ndarray  # (R,) flow-counter snapshots ("flow" mode window)
+    labeled_base: np.ndarray
     rounds: int = 0
 
     @classmethod
     def fresh(cls, n_replicas: int) -> "AdaptState":
         z = np.zeros((n_replicas,), np.float64)
-        return cls(attempts_base=z, accepts_base=z.copy())
+        return cls(
+            attempts_base=z,
+            accepts_base=z.copy(),
+            up_base=z.copy(),
+            labeled_base=z.copy(),
+        )
+
+    def rebase(self, counters: dict[str, np.ndarray]) -> None:
+        """Move every window baseline to the given cumulative counters."""
+        self.attempts_base = np.asarray(counters["attempts"], np.float64)
+        self.accepts_base = np.asarray(counters["accepts"], np.float64)
+        self.up_base = np.asarray(counters["up"], np.float64)
+        self.labeled_base = np.asarray(counters["labeled"], np.float64)
+
+    def to_meta(self) -> dict:
+        """JSON-able checkpoint form — the single serialization of the
+        window baselines, shared by every checkpoint writer."""
+        return {
+            "adapt_attempts_base": self.attempts_base.tolist(),
+            "adapt_accepts_base": self.accepts_base.tolist(),
+            "adapt_up_base": self.up_base.tolist(),
+            "adapt_labeled_base": self.labeled_base.tolist(),
+        }
+
+    @classmethod
+    def from_meta(cls, meta: dict, rounds: int = 0) -> "AdaptState | None":
+        """Rebuild from checkpoint meta (None when no baselines were saved).
+
+        Flow baselines default to zeros for pre-flow-mode checkpoints,
+        where zeros reproduce the old behaviour exactly.
+        """
+        if "adapt_attempts_base" not in meta:
+            return None
+        attempts = np.asarray(meta["adapt_attempts_base"], np.float64)
+        zeros = np.zeros_like(attempts)
+        return cls(
+            attempts_base=attempts,
+            accepts_base=np.asarray(meta["adapt_accepts_base"], np.float64),
+            up_base=np.asarray(meta.get("adapt_up_base", zeros), np.float64),
+            labeled_base=np.asarray(
+                meta.get("adapt_labeled_base", zeros), np.float64
+            ),
+            rounds=rounds,
+        )
+
+    def zero(self) -> None:
+        """Re-zero all baselines (after a stats reset zeroed the counters)."""
+        z = np.zeros_like(self.attempts_base)
+        self.attempts_base = z
+        self.accepts_base = z.copy()
+        self.up_base = z.copy()
+        self.labeled_base = z.copy()
+
+
+def flow_optimized_ladder(
+    temps: np.ndarray, flow_up: np.ndarray, rate: float = 1.0
+) -> np.ndarray:
+    """One Katzgraber feedback-optimization step from the measured flow f(T).
+
+    The measured fraction of "up"-labelled visits per rung is forced to the
+    boundary values (f = 1 cold, 0 hot) and monotonicity the method assumes,
+    the optimal rung density ``η ∝ sqrt(Δf/ΔT)`` is integrated, and the new
+    rungs are placed at equal quantiles of that integral — so temperatures
+    crowd where the flow drops fastest (the round-trip bottleneck).
+    ``rate`` blends old → optimal in log-temperature space; endpoints stay
+    pinned exactly.
+    """
+    temps = np.asarray(temps, np.float64)
+    f = np.asarray(flow_up, np.float64).copy()
+    r = temps.shape[0]
+    if f.shape != (r,):
+        raise ValueError(f"flow_up shape {f.shape} != temps shape {(r,)}")
+    f[0], f[-1] = 1.0, 0.0
+    f = np.minimum.accumulate(f)  # enforce the non-increasing profile
+    # per-gap drop, floored so η stays positive (flat windows would
+    # otherwise collapse rungs onto each other)
+    df = np.maximum(f[:-1] - f[1:], 1e-6)
+    d_t = np.diff(temps)
+    eta = np.sqrt(df / d_t)
+    cum = np.concatenate([[0.0], np.cumsum(eta * d_t)])
+    cum /= cum[-1]
+    optimal = np.interp(np.linspace(0.0, 1.0, r), cum, temps)
+    new = np.exp((1.0 - rate) * np.log(temps) + rate * np.log(optimal))
+    new[0], new[-1] = temps[0], temps[-1]
+    return new.astype(np.float32)
 
 
 def maybe_adapt(
     temps: np.ndarray,
-    attempts: np.ndarray,
-    accepts: np.ndarray,
+    counters: dict[str, np.ndarray],
     adapt: AdaptConfig,
     st: AdaptState,
 ):
-    """One feedback step if the window has enough signal.
+    """One feedback step if the current window has enough signal.
 
     Args:
       temps: current ladder (R,), cold->hot.
-      attempts/accepts: *cumulative* per-rung counters (chain-pooled: callers
-        sum the ensemble axis first), lower-rung convention.
-      adapt: feedback configuration.
-      st: mutable window bookkeeping (updated in place on retune).
+      counters: *cumulative* chain-pooled per-rung counters from the stats
+        layer — ``attempts``/``accepts`` (lower-rung convention) and
+        ``up``/``labeled`` (flow visits).  Callers sum the ensemble axis
+        first (`Engine._pooled_counters`).
+      adapt: feedback configuration (mode selects the signal consumed).
+      st: mutable window bookkeeping (rebased in place on retune).
 
     Returns:
-      (new_temps, window_acceptance) — both None when the window was too
-      thin or ``max_rounds`` was reached.
+      ``(new_temps, feedback)`` — ``feedback`` is the window's per-pair
+      acceptance (R-1,) in ``acceptance`` mode or the window's flow fraction
+      f(T) (R,) in ``flow`` mode; both are None when the window was too thin
+      or ``max_rounds`` was reached.
     """
     if adapt.max_rounds is not None and st.rounds >= adapt.max_rounds:
         return None, None
-    attempts = np.asarray(attempts, np.float64)
-    accepts = np.asarray(accepts, np.float64)
-    w_att = (attempts - st.attempts_base)[:-1]  # last rung is never "lower"
-    w_acc = (accepts - st.accepts_base)[:-1]
-    if w_att.min() < adapt.min_attempts_per_pair:
-        return None, None
-    acceptance = w_acc / np.maximum(w_att, 1.0)
-    new_temps = ladder_lib.tune_ladder(
-        np.asarray(temps),
-        acceptance,
-        target=adapt.target,
-        rate=adapt.rate,
-        t_min=float(temps[0]),
-        t_max=float(temps[-1]),
-    )
-    st.attempts_base = attempts
-    st.accepts_base = accepts
+    if adapt.mode == "flow":
+        up = np.asarray(counters["up"], np.float64)
+        labeled = np.asarray(counters["labeled"], np.float64)
+        w_lab = labeled - st.labeled_base
+        if w_lab.min() < adapt.flow_min_visits:
+            return None, None
+        feedback = (up - st.up_base) / np.maximum(w_lab, 1.0)
+        new_temps = flow_optimized_ladder(temps, feedback, rate=adapt.rate)
+    else:
+        attempts = np.asarray(counters["attempts"], np.float64)
+        accepts = np.asarray(counters["accepts"], np.float64)
+        w_att = (attempts - st.attempts_base)[:-1]  # last rung never "lower"
+        if w_att.min() < adapt.min_attempts_per_pair:
+            return None, None
+        w_acc = (accepts - st.accepts_base)[:-1]
+        feedback = w_acc / np.maximum(w_att, 1.0)
+        new_temps = ladder_lib.tune_ladder(
+            np.asarray(temps),
+            feedback,
+            target=adapt.target,
+            rate=adapt.rate,
+            t_min=float(temps[0]),
+            t_max=float(temps[-1]),
+        )
+    st.rebase(counters)
     st.rounds += 1
-    return new_temps, acceptance
+    return new_temps, feedback

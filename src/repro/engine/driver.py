@@ -40,11 +40,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import swap as swap_lib
 from repro.core.pt import PTState, init_replicas as pt_init_replicas
 from repro.core.systems import System
 from repro.engine import stats as stats_lib
 from repro.engine.adapt import AdaptConfig, AdaptState, maybe_adapt
+from repro.exchange import DEO, ExchangeStrategy, make_strategy
 
 __all__ = [
     "StepSpec",
@@ -69,7 +69,10 @@ __all__ = [
 class StepSpec:
     """Hashable static shape of one PT interval (jit-static).
 
-    ``sweeps_per_interval`` sweeps, then one swap phase (if ``do_swap``).
+    ``sweeps_per_interval`` sweeps, then one swap phase (if ``do_swap``)
+    executed through ``exchange`` — the pluggable replica-exchange strategy
+    (`repro.exchange`; the default `DEO` is the paper's even/odd scheme and
+    is bit-equal to the pre-strategy swap path).
     """
 
     n_replicas: int
@@ -77,12 +80,18 @@ class StepSpec:
     do_swap: bool = True
     criterion: str = "logistic"
     swap_mode: str = "temp"
+    exchange: ExchangeStrategy = DEO()
 
     def __post_init__(self):
         if self.sweeps_per_interval < 1:
             raise ValueError("sweeps_per_interval must be >= 1")
         if self.swap_mode not in ("temp", "state"):
             raise ValueError(f"bad swap_mode {self.swap_mode!r}")
+        if self.criterion not in ("logistic", "metropolis"):
+            raise ValueError(
+                f"unknown criterion {self.criterion!r}; "
+                "allowed: ['logistic', 'metropolis']"
+            )
 
 
 def _batched_step(system: System):
@@ -115,29 +124,48 @@ def _sweep_once(system, spec: StepSpec, betas, st: PTState, shard=None) -> PTSta
     )
 
 
-def _swap_phase(spec: StepSpec, betas, st: PTState):
-    """One parallel swap iteration; returns (state, diagnostics)."""
+def _swap_decision(spec: StepSpec, betas, st: PTState):
+    """Propose + accept this iteration's exchanges (no state mutation).
+
+    Returns ``(partner, perm, diagnostics)`` — ``partner`` is the proposed
+    pairing involution in rung space, ``perm`` the accepted rung permutation.
+    """
     r = spec.n_replicas
     k_swap = jax.random.fold_in(st.key, 2 * st.t + 1)
     inv = jnp.argsort(st.rung)  # slot holding rung r
     e_rung = st.energy[inv]
+    strat = spec.exchange
+    partner = strat.propose_pairs(k_swap, st.phase, r)
     # Attempts are the structural pairing mask, NOT `prob > 0`: a badly
     # spaced pair can underflow sigmoid to exactly 0 in f32 and would
     # otherwise never register an attempt — starving the adaptive-ladder
     # feedback in precisely the case it exists to fix.
-    perm, accept, prob, attempt = swap_lib.swap_permutation(
-        k_swap, st.phase, betas, e_rung, n=r, criterion=spec.criterion
+    perm, accept, prob, attempt = strat.accept(
+        k_swap, partner, betas, e_rung, criterion=spec.criterion
     )
+    diag = {"swap_accept": accept, "swap_prob": prob, "swap_attempt": attempt}
+    return partner, perm, diag
+
+
+def _apply_swap(spec: StepSpec, st: PTState, perm) -> PTState:
+    """Apply an accepted rung permutation and advance the phase counter."""
+    r = spec.n_replicas
     if spec.swap_mode == "temp":
         # Slot inv[r] now holds rung perm[r]; states stay in place.
+        inv = jnp.argsort(st.rung)
         new_rung = jnp.zeros((r,), jnp.int32).at[inv].set(perm)
         st = dataclasses.replace(st, rung=new_rung)
     else:
         # Faithful mode: rung == slot identity; move the states themselves.
         states = jax.tree_util.tree_map(lambda x: jnp.take(x, perm, axis=0), st.states)
         st = dataclasses.replace(st, states=states, energy=st.energy[perm])
-    st = dataclasses.replace(st, phase=st.phase + 1)
-    return st, {"swap_accept": accept, "swap_prob": prob, "swap_attempt": attempt}
+    return dataclasses.replace(st, phase=st.phase + 1)
+
+
+def _swap_phase(spec: StepSpec, betas, st: PTState):
+    """One parallel swap iteration; returns (state, diagnostics)."""
+    _, perm, diag = _swap_decision(spec, betas, st)
+    return _apply_swap(spec, st, perm), diag
 
 
 def _observe(system, observables, st: PTState) -> Mapping[str, jax.Array]:
@@ -160,8 +188,14 @@ def make_interval_step(
 
     ``record`` holds per-rung arrays: ``energy``, each observable, and
     ``swap_accept``/``swap_prob`` at the lower rung of each attempted pair.
+    With a waste-recycling exchange strategy (``spec.exchange.n_virtual >
+    1``, e.g. `repro.exchange.VMPT`) the series are recorded *pre-swap* as
+    stacked virtual outcomes ``(n_virtual, R)`` alongside an ``est_weight``
+    channel — `repro.engine.stats.update_stats` folds them in with West's
+    weighted Welford update.
     """
     observables = dict(observables or {})
+    recycle = spec.do_swap and spec.exchange.n_virtual > 1
 
     def constrain(st):
         # keep the replica axis sharded through the loop — without this the
@@ -178,16 +212,30 @@ def make_interval_step(
             return constrain(_sweep_once(system, spec, betas, s, shard)), None
 
         st, _ = jax.lax.scan(sweep_body, st, None, length=spec.sweeps_per_interval)
-        if spec.do_swap:
-            st, swap_diag = _swap_phase(spec, betas, st)
+        if recycle:
+            # Waste recycling: record BOTH virtual outcomes of every
+            # attempted exchange (pre-swap values, rung order), weighted by
+            # the acceptance probability, then apply the realized swap.
+            # The chain law is untouched — only the estimator changes.
+            partner, perm, swap_diag = _swap_decision(spec, betas, st)
+            weights = spec.exchange.estimator_weights(
+                partner, swap_diag["swap_prob"]
+            )
+            pre = _observe(system, observables, st)
+            rec = {k: jnp.stack([v, v[partner]]) for k, v in pre.items()}
+            rec["est_weight"] = weights
+            st = _apply_swap(spec, st, perm)
         else:
-            z = jnp.zeros((spec.n_replicas,))
-            swap_diag = {
-                "swap_accept": z.astype(bool),
-                "swap_prob": z,
-                "swap_attempt": z.astype(bool),
-            }
-        rec = dict(_observe(system, observables, st))
+            if spec.do_swap:
+                st, swap_diag = _swap_phase(spec, betas, st)
+            else:
+                z = jnp.zeros((spec.n_replicas,))
+                swap_diag = {
+                    "swap_accept": z.astype(bool),
+                    "swap_prob": z,
+                    "swap_attempt": z.astype(bool),
+                }
+            rec = dict(_observe(system, observables, st))
         rec.update(swap_diag)
         return constrain(st), rec
 
@@ -217,6 +265,10 @@ class EngineConfig:
       donate: donate the state buffers to the mega-step (in-place device
         update).  Disable to re-run the same `EngineState` several times,
         e.g. benchmark timing loops.
+      exchange: replica-exchange strategy — an `repro.exchange` strategy
+        instance, a registered strategy name ("deo"/"seo"/"windowed"/
+        "vmpt"), or None for the default `DEO` (the paper's scheme,
+        bit-equal to the pre-strategy swap path).
     """
 
     n_replicas: int
@@ -229,12 +281,16 @@ class EngineConfig:
     track_stats: bool = True
     measure_interval: int = 100
     donate: bool = True
+    exchange: Any = None
 
     def __post_init__(self):
         if self.chunk_intervals < 1:
             raise ValueError("chunk_intervals must be >= 1")
         if self.n_chains < 1:
             raise ValueError("n_chains must be >= 1")
+        # resolve names eagerly so a bad strategy fails at config time, not
+        # deep inside the first compiled chunk
+        object.__setattr__(self, "exchange", make_strategy(self.exchange))
 
     @property
     def spec(self) -> StepSpec:
@@ -245,6 +301,7 @@ class EngineConfig:
             do_swap=self.swap_interval > 0,
             criterion=self.criterion,
             swap_mode=self.swap_mode,
+            exchange=self.exchange,
         )
 
 
@@ -318,7 +375,9 @@ class AdaptInfo:
     Attributes:
       round: cumulative retune count for this engine (1-based).
       temps: the new ladder (R,), cold->hot.
-      acceptance: measured per-pair window acceptance (R-1,) that drove it.
+      acceptance: the window feedback signal that drove the retune — per-pair
+        acceptance (R-1,) in "acceptance" mode, per-rung flow fraction f(T)
+        (R,) in "flow" mode.
       sweeps_done: sweeps advanced in this call when the retune fired.
     """
 
@@ -351,6 +410,12 @@ class Engine:
             raise ValueError(
                 "adaptive ladders need the online swap counters: "
                 "EngineConfig(track_stats=True) is required with adapt"
+            )
+        if adapt is not None and adapt.mode == "flow" and config.swap_mode != "temp":
+            raise ValueError(
+                "flow-optimized ladders consume the rung-flow diagnostic, "
+                "which only exists in swap_mode='temp' (in 'state' mode "
+                "rungs are pinned to slots)"
             )
         self.system = system
         self.config = config
@@ -431,9 +496,7 @@ class Engine:
             # the swap counters just went back to zero — re-zero the adapt
             # window baselines with them or the window goes negative and the
             # feedback loop starves forever
-            z = np.zeros_like(self._adapt_state.attempts_base)
-            self._adapt_state.attempts_base = z
-            self._adapt_state.accepts_base = z.copy()
+            self._adapt_state.zero()
         return dataclasses.replace(state, stats=stats)
 
     def _constrain_chain_axis(self, tree):
@@ -574,9 +637,7 @@ class Engine:
                 # double-count pre-checkpoint attempts.  From then on the
                 # window persists across run() calls (baselines move only at
                 # retunes / stats resets).
-                adapt_st.attempts_base, adapt_st.accepts_base = (
-                    self._pooled_counters(state)
-                )
+                adapt_st.rebase(self._pooled_counters(state))
         # the retune count carries across run() calls (max_rounds is per
         # ladder lifetime)
         adapt_st.rounds = self._adapt_rounds
@@ -601,9 +662,8 @@ class Engine:
                 if keep_trace:
                     chunks.append(chunk_np)
             if self.adapt is not None and done < n_intervals:
-                att, acc = self._pooled_counters(state)
                 new_temps, acceptance = maybe_adapt(
-                    temps, att, acc, self.adapt, adapt_st
+                    temps, self._pooled_counters(state), self.adapt, adapt_st
                 )
                 if new_temps is not None:
                     temps = np.asarray(new_temps, np.float64)
@@ -613,13 +673,17 @@ class Engine:
                     # Restart the moment accumulators: per-rung means/vars
                     # must not pool samples drawn at two different ladders
                     # (swap counters stay — the adapt window is baselined,
-                    # and flow/round-trip labels are chain state).
+                    # and flow/round-trip labels are chain state).  The
+                    # weight totals are part of the moment state — a stale
+                    # weight_sum would deflate post-retune variances and
+                    # freeze the weighted (VMPT) mean updates.
                     zeros = lambda tree: jax.tree_util.tree_map(
                         jnp.zeros_like, tree
                     )
                     stats = dataclasses.replace(
                         state.stats,
                         n_records=zeros(state.stats.n_records),
+                        weight_sum=zeros(state.stats.weight_sum),
                         mean=zeros(state.stats.mean),
                         m2=zeros(state.stats.m2),
                     )
@@ -649,12 +713,7 @@ class Engine:
                     "adapt_rounds": self._adapt_rounds,
                 }
                 if self._adapt_state is not None:
-                    meta["adapt_attempts_base"] = (
-                        self._adapt_state.attempts_base.tolist()
-                    )
-                    meta["adapt_accepts_base"] = (
-                        self._adapt_state.accepts_base.tolist()
-                    )
+                    meta.update(self._adapt_state.to_meta())
                 checkpoint.save(sweep, state, meta=meta)
             if on_chunk is not None:
                 info = ChunkInfo(
@@ -686,13 +745,23 @@ class Engine:
         )
         return state, result
 
-    def _pooled_counters(self, state: EngineState):
-        """Swap counters pooled over the ensemble axis (host numpy)."""
-        att = np.asarray(state.stats.swap_attempts, np.float64)
-        acc = np.asarray(state.stats.swap_accepts, np.float64)
-        if att.ndim == 2:
-            att, acc = att.sum(axis=0), acc.sum(axis=0)
-        return att, acc
+    def _pooled_counters(self, state: EngineState) -> dict[str, np.ndarray]:
+        """Feedback counters pooled over the ensemble axis (host numpy).
+
+        Returns the cumulative per-rung ``attempts``/``accepts`` swap
+        counters and ``up``/``labeled`` flow-visit counters the two adapt
+        modes consume (`repro.engine.adapt.maybe_adapt`).
+        """
+        out = {}
+        for name, leaf in (
+            ("attempts", state.stats.swap_attempts),
+            ("accepts", state.stats.swap_accepts),
+            ("up", state.stats.up_visits),
+            ("labeled", state.stats.labeled_visits),
+        ):
+            arr = np.asarray(leaf, np.float64)
+            out[name] = arr.sum(axis=0) if arr.ndim == 2 else arr
+        return out
 
     # -- checkpoint integration ------------------------------------------------
     def restore(self, checkpoint):

@@ -7,7 +7,13 @@ the engine keeps O(R) *online* accumulators on device instead and updates them
 inside the compiled mega-step:
 
 * **Welford moments** per rung (cold->hot order) for the energy and every
-  registered observable — numerically stable mean/variance with a single pass;
+  registered observable — numerically stable mean/variance with a single pass.
+  Records may carry an **estimator-weight channel** (``rec["est_weight"]``,
+  shape ``(V, R)`` with the series values stacked ``(V, R)``): each of the
+  ``V`` virtual outcomes updates the accumulator with its weight (West's
+  weighted Welford).  This is how virtual-move PT (`repro.exchange.VMPT`)
+  waste-recycles rejected exchanges — both outcomes of every attempted swap
+  reach the estimator, weighted by the acceptance probability;
 * **swap counters** per adjacent rung pair — attempts and acceptances at the
   lower rung of each pair (the same convention as
   `diagnostics.swap_acceptance_rate`), which feed the in-loop ladder
@@ -50,7 +56,8 @@ class OnlineStats:
     """
 
     n_records: jax.Array  # i32 scalar (per chain) — records accumulated
-    mean: Any  # dict[str, (R,) f32] running mean per rung
+    weight_sum: jax.Array  # (R,) f32 — total estimator weight per rung
+    mean: Any  # dict[str, (R,) f32] running (weighted) mean per rung
     m2: Any  # dict[str, (R,) f32] running sum of squared deviations
     swap_attempts: jax.Array  # (R,) f32 — attempts with rung r as lower member
     swap_accepts: jax.Array  # (R,) f32 — acceptances, same convention
@@ -69,6 +76,7 @@ def init_stats(
     f = lambda: jnp.zeros(shape, jnp.float32)
     return OnlineStats(
         n_records=jnp.zeros(scalar, jnp.int32),
+        weight_sum=f(),
         mean={k: f() for k in names},
         m2={k: f() for k in names},
         swap_attempts=f(),
@@ -88,17 +96,43 @@ def update_stats(stats: OnlineStats, rec, rung: jax.Array) -> OnlineStats:
         this function over the chain axis).
       rec: the interval record — per-rung series named in ``stats.mean`` plus
         ``swap_accept``/``swap_attempt`` at the lower rung of attempted pairs.
+        When the record carries ``est_weight`` (shape ``(V, R)``), the series
+        are stacked virtual outcomes ``(V, R)`` and each outcome updates the
+        accumulators with its weight (the VMPT waste-recycling channel).
       rung: (R,) slot -> rung map after the interval (for flow tracking).
     """
     n = stats.n_records + 1
-    cnt = n.astype(jnp.float32)
     mean, m2 = {}, {}
-    for k in stats.mean:
-        x = rec[k].astype(jnp.float32)
-        d = x - stats.mean[k]
-        m = stats.mean[k] + d / cnt
-        mean[k] = m
-        m2[k] = stats.m2[k] + d * (x - m)
+    w_rec = rec.get("est_weight")
+    if w_rec is None:
+        # Unweighted fast path — kept textually identical to the
+        # pre-weight-channel update so classical runs stay bit-equal.
+        cnt = n.astype(jnp.float32)
+        for k in stats.mean:
+            x = rec[k].astype(jnp.float32)
+            d = x - stats.mean[k]
+            m = stats.mean[k] + d / cnt
+            mean[k] = m
+            m2[k] = stats.m2[k] + d * (x - m)
+        weight_sum = stats.weight_sum + 1.0
+    else:
+        # West's weighted Welford, one update per virtual outcome.  All
+        # series share the record's weights; per-rung weights may be zero
+        # (unpaired rungs), which must leave the accumulators untouched.
+        for k in stats.mean:
+            m_k, m2_k = stats.mean[k], stats.m2[k]
+            w_run = stats.weight_sum
+            for v in range(w_rec.shape[0]):
+                w = w_rec[v].astype(jnp.float32)
+                x = rec[k][v].astype(jnp.float32)
+                w_new = w_run + w
+                d = x - m_k
+                frac = jnp.where(w_new > 0, w / jnp.maximum(w_new, 1e-30), 0.0)
+                m_k = m_k + d * frac
+                m2_k = m2_k + w * d * (x - m_k)
+                w_run = w_new
+            mean[k], m2[k] = m_k, m2_k
+        weight_sum = stats.weight_sum + w_rec.sum(axis=0).astype(jnp.float32)
 
     # Attempts come from the structural pairing mask, not `prob > 0`: the
     # acceptance probability can underflow to exactly 0 in f32 for badly
@@ -118,6 +152,7 @@ def update_stats(stats: OnlineStats, rec, rung: jax.Array) -> OnlineStats:
     labeled = (direction != 0).astype(jnp.float32)
     return OnlineStats(
         n_records=n,
+        weight_sum=weight_sum,
         mean=mean,
         m2=m2,
         swap_attempts=stats.swap_attempts + attempt,
@@ -132,11 +167,13 @@ def update_stats(stats: OnlineStats, rec, rung: jax.Array) -> OnlineStats:
 # -- host-side summaries -------------------------------------------------------
 
 
-def _assemble(n, means, m2s, attempts, accepts, round_trips, up, labeled):
+def _assemble(n, wsum, means, m2s, attempts, accepts, round_trips, up, labeled):
     """Shared summary assembly for the per-chain and chain-pooled views."""
     out: dict[str, np.ndarray] = {"n_records": n}
-    denom = np.maximum(n - 1.0, 1.0)
-    denom = denom[..., None] if np.ndim(n) else denom  # broadcast over rungs
+    # Per-rung weight totals drive the variance denominator; for classical
+    # (unweighted) runs wsum == n at every rung, so this is the familiar
+    # n - 1.  VMPT weights sum to 1 per record, so the same identity holds.
+    denom = np.maximum(wsum - 1.0, 1.0)
     for k in means:
         out[f"mean_{k}"] = means[k]
         out[f"var_{k}"] = m2s[k] / denom
@@ -159,6 +196,7 @@ def summarize(stats: OnlineStats) -> dict[str, np.ndarray]:
     f64 = lambda x: np.asarray(x, np.float64)
     return _assemble(
         f64(stats.n_records),
+        f64(stats.weight_sum),
         {k: f64(v) for k, v in stats.mean.items()},
         {k: f64(v) for k, v in stats.m2.items()},
         f64(stats.swap_attempts),
@@ -181,18 +219,21 @@ def combine_chains(stats: OnlineStats) -> dict[str, np.ndarray]:
     if n_c.ndim == 0:
         return summarize(stats)
     n = n_c.sum()
-    w = (n_c / max(n, 1.0))[:, None]  # (C, 1)
+    ws_c = np.asarray(stats.weight_sum, np.float64)  # (C, R)
+    ws = ws_c.sum(axis=0)  # (R,)
+    w = ws_c / np.maximum(ws, 1.0)  # (C, R) per-rung chain weights
     means, m2s = {}, {}
     for k in stats.mean:
         cm = np.asarray(stats.mean[k], np.float64)  # (C, R)
         grand = (w * cm).sum(axis=0)
         means[k] = grand
         m2s[k] = np.asarray(stats.m2[k], np.float64).sum(axis=0) + (
-            n_c[:, None] * (cm - grand) ** 2
+            ws_c * (cm - grand) ** 2
         ).sum(axis=0)
     pool = lambda x, dt=np.float64: np.asarray(x, dt).sum(axis=0)
     return _assemble(
         np.asarray(n),
+        ws,
         means,
         m2s,
         pool(stats.swap_attempts),

@@ -1,0 +1,37 @@
+"""Pluggable replica-exchange strategies (DESIGN.md §Exchange).
+
+The swap phase of the PT mega-step delegates *which rungs exchange* and *how
+the estimator uses the attempt* to an `ExchangeStrategy` — a tiny frozen
+dataclass resolved by name through `make_strategy`:
+
+    from repro.exchange import make_strategy
+    strategy = make_strategy("vmpt")           # or "deo" / "seo" / "windowed"
+    cfg = EngineConfig(n_replicas=8, exchange=strategy)
+
+``deo`` is the default and is bit-equal to the pre-strategy swap path; the
+others trade proposal structure for mixing (see `repro.exchange.strategies`
+and the README strategy table).  `repro.api.ExchangeSpec` is the
+serializable form.
+"""
+from repro.exchange.base import (
+    STRATEGIES,
+    ExchangeStrategy,
+    available_strategies,
+    make_strategy,
+    register_strategy,
+    strategy_help,
+)
+from repro.exchange.strategies import DEO, SEO, VMPT, Windowed
+
+__all__ = [
+    "DEO",
+    "SEO",
+    "STRATEGIES",
+    "VMPT",
+    "Windowed",
+    "ExchangeStrategy",
+    "available_strategies",
+    "make_strategy",
+    "register_strategy",
+    "strategy_help",
+]

@@ -1,0 +1,152 @@
+"""The replica-exchange strategy protocol and registry (DESIGN.md §Exchange).
+
+The swap *phase* of a PT interval decomposes into three policy decisions:
+
+1. **propose_pairs** — which rungs attempt to exchange this iteration
+   (an involution over rung indices; ``partner[i] = i`` means unpaired);
+2. **accept** — accept/reject each proposed pair (shared acceptance core,
+   `repro.core.swap.accept_pairs`: logistic or Metropolis on ``Δβ·ΔE``);
+3. **estimator_weights** — optionally, per-rung weights over the *virtual*
+   outcomes of the swap, so rejected exchanges still inform the estimator
+   (waste recycling, Coluzza & Frenkel cond-mat/0503245 — paper ref [13]).
+
+Strategies are small frozen dataclasses: hashable (so they ride inside the
+jit-static `repro.engine.driver.StepSpec`), serializable by name + params
+(`repro.api.ExchangeSpec`), and fully traceable — every method is pure JAX,
+so each strategy runs *inside* the compiled mega-step with zero host
+round-trips per swap iteration.
+
+Register new strategies with `register_strategy`; `make_strategy` resolves
+the names the spec layer and the CLI use.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import swap as swap_lib
+
+__all__ = [
+    "ExchangeStrategy",
+    "STRATEGIES",
+    "register_strategy",
+    "make_strategy",
+    "available_strategies",
+    "strategy_help",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeStrategy:
+    """Base replica-exchange strategy (the deterministic even/odd default).
+
+    Subclasses override `propose_pairs` (and, for waste-recycling schemes,
+    `estimator_weights` + ``n_virtual``).  `accept` is shared: one uniform
+    per rung, one decision per proposed pair — identical acceptance math for
+    every pairing policy, which is what makes the strategies interchangeable
+    inside the engine's swap phase.
+
+    Attributes (class-level):
+      name: registry key (`repro.api.ExchangeSpec.strategy` namespace).
+      n_virtual: number of virtual outcomes each rung contributes to the
+        estimator record.  1 = record the realized post-swap state only
+        (the classical estimator); 2 = record both virtual outcomes of the
+        pair with `estimator_weights` (waste recycling).  Static, so the
+        record shape — and therefore the compiled mega-step — is fixed.
+    """
+
+    name = "deo"
+    n_virtual = 1
+
+    def propose_pairs(self, key: jax.Array, phase: jax.Array, n: int) -> jnp.ndarray:
+        """(R,) partner involution for this swap iteration.
+
+        Args:
+          key: the iteration's swap PRNG key (shared with `accept`; proposal
+            randomness must fold a distinct salt off it).
+          phase: the running swap-iteration counter (traced; drives the
+            even/odd alternation for deterministic schedules).
+          n: number of rungs (static).
+        """
+        return swap_lib.pair_partners(n, phase)
+
+    def accept(
+        self,
+        key: jax.Array,
+        partner: jnp.ndarray,
+        betas: jnp.ndarray,
+        energies: jnp.ndarray,
+        criterion: str = "logistic",
+    ):
+        """Shared acceptance core — see `repro.core.swap.accept_pairs`."""
+        return swap_lib.accept_pairs(key, partner, betas, energies, criterion=criterion)
+
+    def estimator_weights(
+        self, partner: jnp.ndarray, prob_pair: jnp.ndarray
+    ) -> jnp.ndarray | None:
+        """(n_virtual, R) estimator weights over virtual outcomes, or None.
+
+        ``None`` (the default) means the classical estimator: record the
+        realized post-swap configuration with weight 1.  Waste-recycling
+        strategies return per-rung weights over the ``n_virtual`` outcomes
+        (row ``v=0`` = keep, ``v=1`` = exchange with ``partner``); each
+        rung's weights must sum to 1.
+
+        Args:
+          partner: this iteration's (R,) pairing involution.
+          prob_pair: (R,) acceptance probability at the lower member of each
+            pair, 0 elsewhere (the `accept` diagnostic).
+        """
+        return None
+
+
+# -- registry -------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _Registered:
+    build: Callable[..., ExchangeStrategy]
+    help: str
+
+
+STRATEGIES: dict[str, _Registered] = {}
+
+
+def register_strategy(
+    name: str, build: Callable[..., ExchangeStrategy], help: str
+) -> None:
+    if name in STRATEGIES:
+        raise ValueError(f"exchange strategy {name!r} already registered")
+    STRATEGIES[name] = _Registered(build=build, help=help)
+
+
+def available_strategies() -> list[str]:
+    return sorted(STRATEGIES)
+
+
+def strategy_help(name: str) -> str:
+    return STRATEGIES[name].help
+
+
+def make_strategy(
+    name: str | ExchangeStrategy | None, params: Mapping[str, Any] | None = None
+) -> ExchangeStrategy:
+    """Resolve a strategy name (+ JSON-able params) to a strategy instance.
+
+    ``None`` resolves to the default (``deo``, the paper's scheme); an
+    already-built `ExchangeStrategy` passes through so engine-level callers
+    can hand instances around.
+    """
+    if name is None:
+        name = "deo"
+    if isinstance(name, ExchangeStrategy):
+        return name
+    if name not in STRATEGIES:
+        raise ValueError(
+            f"unknown exchange strategy {name!r}; "
+            f"allowed: {available_strategies()}"
+        )
+    return STRATEGIES[name].build(**dict(params or {}))

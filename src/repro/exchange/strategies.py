@@ -1,0 +1,159 @@
+"""The in-tree replica-exchange strategies (DESIGN.md §Exchange).
+
+* `DEO` — **d**eterministic **e**ven/**o**dd: the paper's §3 scheme and the
+  engine default.  Pairing alternates ``(0,1),(2,3),…`` / ``(1,2),(3,4),…``
+  with the swap-iteration counter, which gives ballistic (O(R)) rather than
+  diffusive (O(R²)) index flow on well-tuned ladders [Okabe et al.; Syed et
+  al. 2019 analyze exactly this DEO/SEO gap].  Bit-equal to the pre-strategy
+  swap path.
+* `SEO` — **s**tochastic even/odd: the phase is *drawn from the PRNG stream*
+  each swap iteration instead of alternating.  The classical randomized
+  scheme; kept as the reference point the DEO literature compares against.
+* `Windowed` — all-pairs exchange within rung windows: rungs are tiled into
+  windows of ``window`` rungs (the grid shifts by ``window // 2`` on odd
+  iterations so state can traverse the whole ladder) and each window draws a
+  uniform random perfect matching of its members — so *non-adjacent* rungs
+  can exchange directly, which helps when a mid-ladder bottleneck starves
+  neighbour-only schemes.
+* `VMPT` — virtual-move parallel tempering (Coluzza & Frenkel,
+  cond-mat/0503245 — paper ref [13]): DEO pairing for the chain itself, but
+  the *estimator* records both virtual outcomes of every attempted exchange,
+  weighted by the acceptance probability (waste recycling / Rao-
+  Blackwellization).  The chain law is identical to DEO; the per-rung
+  Welford accumulators consume the weighted record through the engine's
+  estimator-weight channel (`repro.engine.stats`).
+
+All proposal randomness folds distinct salts off the iteration's swap key,
+so the acceptance uniforms (drawn from the unfolded key, exactly as the
+pre-strategy path did) stay on a disjoint stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import swap as swap_lib
+from repro.exchange.base import ExchangeStrategy, register_strategy
+
+__all__ = ["DEO", "SEO", "Windowed", "VMPT"]
+
+# fold_in salts for proposal randomness (disjoint from the acceptance
+# uniforms, which use the swap key itself)
+_SEO_SALT = 0x5E0
+_WINDOW_SALT = 0x71D0
+
+
+@dataclasses.dataclass(frozen=True)
+class DEO(ExchangeStrategy):
+    """Deterministic even/odd neighbour pairing (paper §3; the default)."""
+
+    name = "deo"
+
+
+@dataclasses.dataclass(frozen=True)
+class SEO(ExchangeStrategy):
+    """Stochastic even/odd: the pairing phase is a per-iteration coin flip."""
+
+    name = "seo"
+
+    def propose_pairs(self, key, phase, n):
+        coin = jax.random.randint(
+            jax.random.fold_in(key, _SEO_SALT), (), 0, 2, dtype=jnp.int32
+        )
+        return swap_lib.pair_partners(n, coin)
+
+
+@dataclasses.dataclass(frozen=True)
+class Windowed(ExchangeStrategy):
+    """Random perfect matching within (alternately shifted) rung windows.
+
+    The ladder is tiled into contiguous windows of ``window`` rungs; on odd
+    iterations the grid shifts by ``window // 2`` (a truncated window at the
+    cold end takes up the slack — windows never wrap the cold/hot boundary)
+    so state can traverse the whole ladder.  Every window pairs its members
+    by a uniformly random permutation taken two at a time, which proposes
+    *any* of the ``C(w, 2)`` in-window pairs with equal probability — a
+    symmetric, state-independent proposal, so the shared acceptance core
+    applies unchanged.
+
+    Note on acceptance-mode ladder adaptation: attempt/accept counters are
+    credited to the *lower rung of the pair* whatever its span, so the
+    per-gap acceptance the Kofke feedback reads is only approximate under
+    this strategy; prefer ``AdaptConfig(mode="flow")``, which consumes the
+    pairing-agnostic round-trip flow instead.
+    """
+
+    name = "windowed"
+    window: int = 4
+
+    def __post_init__(self):
+        if self.window < 2:
+            raise ValueError(f"window must be >= 2, got {self.window}")
+
+    def _matching(self, key, n, w, off):
+        """Involution for one (static) grid offset: windows [0, w-off),
+        [w-off, 2w-off), … — the first window is truncated, none wrap."""
+        partner = jnp.arange(n, dtype=jnp.int32)
+        starts = [0] + list(range(w - off if off else w, n, w))
+        for b, start in enumerate(starts):
+            size = min(w, n - start) if start else min(w - off, n)
+            if size < 2:
+                continue
+            perm = jax.random.permutation(
+                jax.random.fold_in(key, _WINDOW_SALT + 4096 * off + b), size
+            )
+            members = (start + perm).astype(jnp.int32)
+            n_pairs = size // 2
+            a = members[0 : 2 * n_pairs : 2]
+            c = members[1 : 2 * n_pairs : 2]
+            partner = partner.at[a].set(c).at[c].set(a)
+        return partner
+
+    def propose_pairs(self, key, phase, n):
+        w = min(self.window, n)
+        # the offset is binary (0 / w//2), so build both static tilings and
+        # select by the traced phase parity
+        aligned = self._matching(key, n, w, 0)
+        shifted = self._matching(key, n, w, w // 2)
+        return jnp.where(jnp.asarray(phase, jnp.int32) % 2 == 0, aligned, shifted)
+
+
+@dataclasses.dataclass(frozen=True)
+class VMPT(ExchangeStrategy):
+    """Virtual-move PT: DEO dynamics + waste-recycled estimator weights."""
+
+    name = "vmpt"
+    n_virtual = 2
+
+    def estimator_weights(self, partner, prob_pair):
+        n = partner.shape[0]
+        idx = jnp.arange(n, dtype=jnp.int32)
+        lower = jnp.minimum(idx, partner)
+        # both members of a pair see the pair's acceptance probability;
+        # unpaired rungs keep their configuration with certainty
+        p = jnp.where(partner != idx, prob_pair[lower], 0.0)
+        return jnp.stack([1.0 - p, p])
+
+
+register_strategy(
+    "deo", DEO,
+    "deterministic even/odd neighbour pairing (paper §3; default, "
+    "ballistic index flow)",
+)
+register_strategy(
+    "seo", SEO,
+    "stochastic even/odd: pairing phase drawn from the PRNG per iteration "
+    "(diffusive reference scheme)",
+)
+register_strategy(
+    "windowed", Windowed,
+    "random perfect matching within alternately-shifted rung windows "
+    "(non-adjacent exchanges; params: window)",
+)
+register_strategy(
+    "vmpt", VMPT,
+    "virtual-move PT: DEO dynamics + waste-recycled estimator weights "
+    "over every attempted exchange (Coluzza & Frenkel)",
+)

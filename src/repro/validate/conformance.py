@@ -35,6 +35,7 @@ from repro.api import (
     AdaptSpec,
     Callback,
     EngineSpec,
+    ExchangeSpec,
     LadderSpec,
     PhaseSpec,
     RunSpec,
@@ -90,14 +91,27 @@ class ConformanceReport:
         return name, val
 
 
-def entry_runspec(entry: RegisteredSystem, seed: int = 0) -> RunSpec:
+def entry_runspec(
+    entry: RegisteredSystem,
+    seed: int = 0,
+    exchange: str | ExchangeSpec | None = None,
+) -> RunSpec:
     """Compile a zoo entry to the declarative `RunSpec` conformance executes.
 
     One burn-in phase with the ladder feedback on, then ``n_batches``
     measurement phases whose ``reset_stats`` makes each a self-contained
     batch-means window.  The spec is fully serializable — ``python -m repro
     run`` on its JSON form performs the identical simulation.
+
+    ``exchange`` selects the replica-exchange strategy (name or
+    `ExchangeSpec`; None = the default "deo") — the gate that makes the
+    strategy × system conformance matrix (`tests/test_conformance.py`) a
+    one-argument sweep.
     """
+    if exchange is None:
+        exchange = ExchangeSpec()
+    elif isinstance(exchange, str):
+        exchange = ExchangeSpec(strategy=exchange)
     if entry.n_chains < 2:
         raise ValueError("conformance requires the ensemble axis (n_chains >= 2)")
     phases = [PhaseSpec(name="burn", n_sweeps=entry.burn_sweeps, adapt=True)]
@@ -121,6 +135,7 @@ def entry_runspec(entry: RegisteredSystem, seed: int = 0) -> RunSpec:
             chunk_intervals=entry.chunk_intervals,
             n_chains=entry.n_chains,
         ),
+        exchange=exchange,
         adapt=AdaptSpec(
             target=0.3, min_attempts_per_pair=10, max_rounds=entry.adapt_rounds
         ),
@@ -131,12 +146,12 @@ def entry_runspec(entry: RegisteredSystem, seed: int = 0) -> RunSpec:
 
 
 def run_conformance(
-    entry: RegisteredSystem, seed: int = 0, exact_fn=None
+    entry: RegisteredSystem, seed: int = 0, exact_fn=None, exchange=None
 ) -> ConformanceReport:
     """Run one zoo entry through the adaptive ensemble Session vs ground truth."""
     if exact_fn is None:
         exact_fn = EXACT[entry.name]
-    spec = entry_runspec(entry, seed=seed)
+    spec = entry_runspec(entry, seed=seed, exchange=exchange)
 
     # A tiny callback freezes the post-burn ladder so the measurement phases
     # can be audited against it — the callback pipeline replacing what used

@@ -87,3 +87,20 @@ if HAVE_HYPOTHESIS:
         """(n,) float32 energy vector with PT-realistic spread."""
         vals = draw(st.lists(st.floats(-60, 60, width=32), min_size=n, max_size=n))
         return np.asarray(vals, np.float32)
+
+    @st.composite
+    def exchange_strategies(draw, names=None):
+        """A registered replica-exchange strategy instance (any family).
+
+        Windowed strategies draw their window size too, so the involution
+        and in-window-distance properties get exercised across window
+        configurations — the same pool `test_exchange.py` and the
+        conformance matrix build on.
+        """
+        from repro.exchange import available_strategies, make_strategy
+
+        name = draw(st.sampled_from(sorted(names or available_strategies())))
+        params = {}
+        if name == "windowed":
+            params["window"] = draw(st.integers(2, 7))
+        return make_strategy(name, params)

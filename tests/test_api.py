@@ -20,6 +20,7 @@ from repro.api import (
     CheckpointCallback,
     EarlyStopCallback,
     EngineSpec,
+    ExchangeSpec,
     LadderSpec,
     PhaseSpec,
     RunSpec,
@@ -137,7 +138,7 @@ def test_unknown_spec_version_rejected():
 def test_unknown_keys_rejected_everywhere():
     good = json.loads(tiny_ising_spec().to_json())
     for path in (("bogus",), ("system", "bogus"), ("ladder", "bogus"),
-                 ("engine", "bogus")):
+                 ("engine", "bogus"), ("exchange", "bogus")):
         data = json.loads(json.dumps(good))
         node = data
         for k in path[:-1]:
@@ -145,6 +146,54 @@ def test_unknown_keys_rejected_everywhere():
         node[path[-1]] = 1
         with pytest.raises(ValueError, match="unknown key"):
             RunSpec.from_dict(data)
+
+
+def test_enum_valued_fields_rejected_at_parse_time():
+    """Satellite guard: a typo'd enum value must fail in `from_json` with
+    the field and its allowed values named — not deep inside the engine."""
+    good = json.loads(tiny_ising_spec().to_json())
+    cases = [
+        (("engine", "criterion"), "boltzman", "criterion.*allowed"),
+        (("engine", "swap_mode"), "both", "swap_mode.*allowed"),
+        (("ladder", "kind"), "logarithmic", "bad ladder kind"),
+        (("exchange", "strategy"), "qpam", "strategy.*allowed"),
+    ]
+    for path, val, match in cases:
+        data = json.loads(json.dumps(good))
+        node = data
+        for k in path[:-1]:
+            node = node[k]
+        node[path[-1]] = val
+        with pytest.raises(ValueError, match=match):
+            RunSpec.from_dict(data)
+    # adapt.mode rides on a spec that actually has an adapt block
+    with_adapt = json.loads(tiny_ising_spec(
+        adapt=AdaptSpec(target=0.3)
+    ).to_json())
+    with_adapt["adapt"]["mode"] = "osmosis"
+    with pytest.raises(ValueError, match="adapt mode.*allowed"):
+        RunSpec.from_dict(with_adapt)
+    # and the constructors reject the same values directly
+    with pytest.raises(ValueError, match="allowed"):
+        EngineSpec(criterion="boltzman")
+    with pytest.raises(ValueError, match="allowed"):
+        ExchangeSpec(strategy="qpam")
+    with pytest.raises(ValueError, match="allowed"):
+        AdaptSpec(mode="osmosis")
+
+
+def test_exchange_spec_roundtrip_and_default():
+    spec = tiny_ising_spec()
+    assert spec.exchange == ExchangeSpec()  # deo is the default
+    for strat in ("seo", "windowed", "vmpt"):
+        s = tiny_ising_spec(exchange=ExchangeSpec(strategy=strat, window=5))
+        again = RunSpec.from_json(s.to_json())
+        assert again == s
+        assert again.exchange.strategy == strat
+    # a pre-exchange JSON (no "exchange" key) parses to the default
+    data = json.loads(spec.to_json())
+    del data["exchange"]
+    assert RunSpec.from_dict(data).exchange == ExchangeSpec()
 
 
 def test_spec_validation_errors():

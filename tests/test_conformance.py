@@ -105,6 +105,23 @@ def test_hp_occupancy_chi_square_exact_distribution():
     assert chi2 < 1.65 * dof, (chi2, dof)
 
 
+@pytest.mark.parametrize("strategy", ["seo", "windowed", "vmpt"])
+@pytest.mark.parametrize("name", ["gaussian", "ising"])
+def test_exchange_strategy_conforms_to_exact_reference(name, strategy):
+    """The strategy × system gate (DESIGN.md §Exchange): every non-default
+    replica-exchange scheme must be *statistically verified* on the Ising +
+    Gaussian zoo entries — same adaptive ensemble path, same 4×MCSE
+    tolerance — not just run without crashing.  (`deo` is the default the
+    rest of this module already gates.)"""
+    entry = systems.REGISTRY[name]
+    report = run_conformance(entry, seed=0, exchange=strategy)
+    assert report.n_retunes == entry.adapt_rounds, report.n_retunes
+    np.testing.assert_allclose(report.temps[0], entry.temps[0], rtol=1e-5)
+    np.testing.assert_allclose(report.temps[-1], entry.temps[-1], rtol=1e-4)
+    assert np.all(np.diff(report.temps) > 0)
+    assert_conforms(report, z_max=4.0, geweke_max=4.0)
+
+
 def test_conformance_catches_a_wrong_sampler():
     """Negative control: a deliberately biased reference must fail the gate —
     otherwise the 4xMCSE tolerance is too loose to mean anything."""

@@ -1,0 +1,337 @@
+"""The pluggable replica-exchange subsystem (DESIGN.md §Exchange).
+
+Property tests (shared `conftest.py` hypothesis strategies) for the swap
+layer's structural invariants — every strategy's pairing is a valid
+involution, the logistic rule is Barker-complementary, Metropolis satisfies
+the detailed-balance identity — plus integration checks: `deo` is bit-equal
+to the pre-strategy `swap_permutation` path, `vmpt` realizes the *same
+chain* as `deo` while Rao-Blackwellizing the estimator through the stats
+weight channel, and the flow-optimized ladder mode consumes the `flow_up`
+diagnostic.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ising, ladder, swap
+from repro.engine import AdaptConfig, Engine, EngineConfig, init_stats, update_stats
+from repro.engine.adapt import AdaptState, flow_optimized_ladder, maybe_adapt
+from repro.exchange import (
+    DEO,
+    SEO,
+    VMPT,
+    Windowed,
+    available_strategies,
+    make_strategy,
+)
+
+R, L = 6, 8
+TEMPS = np.asarray(ladder.linear_ladder(R, 1.0, 3.5))
+
+
+# ---------- registry ------------------------------------------------------------
+def test_registry_covers_expected_strategies():
+    assert set(available_strategies()) == {"deo", "seo", "windowed", "vmpt"}
+    assert isinstance(make_strategy(None), DEO)  # default
+    assert make_strategy("windowed", {"window": 6}) == Windowed(window=6)
+    with pytest.raises(ValueError, match="unknown exchange strategy"):
+        make_strategy("qpam")
+    with pytest.raises(ValueError, match="window"):
+        Windowed(window=1)
+
+
+# ---------- structural invariants -----------------------------------------------
+@pytest.mark.parametrize("name", sorted(["deo", "seo", "windowed", "vmpt"]))
+def test_strategy_involutions_deterministic_grid(name):
+    """Bare-environment (no hypothesis) cover of the involution invariant:
+    every strategy's pairing is self-inverse with no rung paired twice."""
+    params = {"window": 3} if name == "windowed" else {}
+    strategy = make_strategy(name, params)
+    for n in (2, 3, 5, 8, 13):
+        for phase in range(4):
+            for seed in range(3):
+                key = jax.random.key(seed)
+                p = np.asarray(strategy.propose_pairs(key, jnp.int32(phase), n))
+                np.testing.assert_array_equal(p[p], np.arange(n))
+
+
+def test_every_strategy_proposes_involutions():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import strategies as st
+
+    from conftest import exchange_strategies
+
+    @hyp.given(
+        strategy=exchange_strategies(),
+        n=st.integers(2, 33),
+        phase=st.integers(0, 5),
+        seed=st.integers(0, 2**16),
+    )
+    @hyp.settings(max_examples=60, deadline=None)
+    def check(strategy, n, phase, seed):
+        key = jax.random.key(seed)
+        p = np.asarray(strategy.propose_pairs(key, jnp.int32(phase), n))
+        # self-inverse permutation => a valid pairing: no rung in two pairs
+        np.testing.assert_array_equal(p[p], np.arange(n))
+        if isinstance(strategy, (DEO, SEO, VMPT)):
+            assert np.all(np.abs(p - np.arange(n)) <= 1)  # neighbours only
+        if isinstance(strategy, Windowed):
+            # pairs stay within one window (measured on the ladder ring —
+            # the shifted grid wraps once)
+            d = np.abs(p - np.arange(n))
+            assert np.all(np.minimum(d, n - d) < strategy.window)
+
+    check()
+
+
+def test_deo_bit_equal_to_seed_swap_permutation():
+    """The extracted default must reproduce `swap_permutation` exactly."""
+    deo = DEO()
+    betas = jnp.asarray(1.0 / TEMPS, jnp.float32)
+    for seed in range(5):
+        key = jax.random.key(seed)
+        e = jax.random.normal(jax.random.fold_in(key, 9), (R,)) * 30
+        for phase in range(4):
+            ref = swap.swap_permutation(key, jnp.int32(phase), betas, e, n=R)
+            partner = deo.propose_pairs(key, jnp.int32(phase), R)
+            got = deo.accept(key, partner, betas, e)
+            for a, b in zip(ref, got):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_logistic_acceptance_is_barker_complementary(seed):
+    """p(i,j) + p(j,i) = 1 for the logistic rule, over random pair data."""
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    n = 16
+    betas = jnp.sort(jax.random.uniform(k1, (n,), minval=0.1, maxval=2.0))[::-1]
+    e = jax.random.normal(k2, (n,)) * 40
+    p = swap.swap_probability(betas[:-1], betas[1:], e[:-1], e[1:], "logistic")
+    q = swap.swap_probability(betas[:-1], betas[1:], e[1:], e[:-1], "logistic")
+    np.testing.assert_allclose(np.asarray(p + q), 1.0, rtol=1e-5)
+
+
+def test_metropolis_satisfies_detailed_balance_identity():
+    """p(i,j) / p(j,i) = exp(Δβ·ΔE): the ratio that makes the extended-
+    ensemble chain reversible, checked in the regime below the clamp."""
+    db = np.asarray([0.01, 0.1, 0.5, 1.5])
+    de = np.asarray([-40.0, -3.0, -0.1, 0.0, 0.1, 3.0, 40.0])
+    for dbi in db:
+        for dei in de:
+            blo, bhi = jnp.float32(1.0 + dbi), jnp.float32(1.0)
+            elo, ehi = jnp.float32(dei), jnp.float32(0.0)
+            fwd = swap.swap_probability(blo, bhi, elo, ehi, "metropolis")
+            rev = swap.swap_probability(blo, bhi, ehi, elo, "metropolis")
+            arg = float((blo - bhi) * (elo - ehi))
+            np.testing.assert_allclose(
+                float(fwd) / float(rev), np.exp(arg), rtol=1e-4
+            )
+
+
+def test_vmpt_weights_are_a_distribution_per_rung():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import strategies as st
+    from conftest import rung_energies, temp_ladders
+
+    vmpt = VMPT()
+
+    @hyp.given(
+        temps=temp_ladders(min_rungs=2, max_rungs=12),
+        data=st.data(),
+        seed=st.integers(0, 2**16),
+        phase=st.integers(0, 3),
+    )
+    @hyp.settings(max_examples=30, deadline=None)
+    def check(temps, data, seed, phase):
+        n = len(temps)
+        e = jnp.asarray(data.draw(rung_energies(n)))
+        betas = jnp.asarray(1.0 / np.asarray(temps), jnp.float32)
+        key = jax.random.key(seed)
+        partner = vmpt.propose_pairs(key, jnp.int32(phase), n)
+        _, _, prob, _ = vmpt.accept(key, partner, betas, e)
+        w = np.asarray(vmpt.estimator_weights(partner, prob))
+        assert w.shape == (2, n)
+        assert np.all(w >= 0) and np.all(w <= 1)
+        np.testing.assert_allclose(w.sum(axis=0), 1.0, rtol=1e-6)
+        # unpaired rungs keep their configuration with certainty
+        unpaired = np.asarray(partner) == np.arange(n)
+        np.testing.assert_array_equal(w[1][unpaired], 0.0)
+
+    check()
+
+
+# ---------- engine integration ---------------------------------------------------
+def _engine(strategy, **kw):
+    system = ising.IsingSystem(length=L)
+    cfg = EngineConfig(
+        n_replicas=R, swap_interval=5, chunk_intervals=3, exchange=strategy, **kw
+    )
+    return Engine(system, cfg, observables={
+        "am": lambda s: jnp.abs(ising.magnetization(s))
+    })
+
+
+@pytest.mark.parametrize("strategy", ["seo", "windowed", "vmpt"])
+def test_strategies_run_and_keep_rung_permutation_valid(strategy):
+    eng = _engine(strategy)
+    st = eng.init(jax.random.key(1), TEMPS)
+    st, res = eng.run(st, 60)
+    assert sorted(np.asarray(st.pt.rung).tolist()) == list(range(R))
+    assert np.isfinite(res.summary["mean_energy"]).all()
+    # weights sum to one per record, so weight_sum tracks n_records exactly
+    np.testing.assert_allclose(
+        np.asarray(st.stats.weight_sum), float(np.asarray(st.stats.n_records))
+    )
+
+
+def test_vmpt_realizes_the_same_chain_as_deo():
+    """Waste recycling changes the estimator, never the chain: states, rungs
+    and energies must be bit-identical to a DEO run with the same seed."""
+    e_deo = _engine("deo")
+    e_vm = _engine("vmpt")
+    st_d = e_deo.init(jax.random.key(2), TEMPS)
+    st_v = e_vm.init(jax.random.key(2), TEMPS)
+    st_d, res_d = e_deo.run(st_d, 100)
+    st_v, res_v = e_vm.run(st_v, 100)
+    np.testing.assert_array_equal(np.asarray(st_d.pt.states), np.asarray(st_v.pt.states))
+    np.testing.assert_array_equal(np.asarray(st_d.pt.energy), np.asarray(st_v.pt.energy))
+    np.testing.assert_array_equal(np.asarray(st_d.pt.rung), np.asarray(st_v.pt.rung))
+    # ...while the waste-recycled means differ (they mix in virtual states)
+    assert not np.array_equal(
+        res_d.summary["mean_energy"], res_v.summary["mean_energy"]
+    )
+
+
+def test_vmpt_trace_carries_the_virtual_outcome_axis():
+    eng = _engine("vmpt", record_trace=True)
+    st = eng.init(jax.random.key(3), TEMPS)
+    st, res = eng.run(st, 30)  # 6 intervals
+    assert res.trace["energy"].shape == (6, 2, R)
+    assert res.trace["est_weight"].shape == (6, 2, R)
+    np.testing.assert_allclose(res.trace["est_weight"].sum(axis=1), 1.0, rtol=1e-6)
+    assert res.trace["swap_attempt"].shape == (6, R)
+
+
+def test_weighted_welford_matches_mixture_mean():
+    """The stats weight channel must reproduce the closed-form weighted mean
+    (and the plain path when every weight is 1)."""
+    rng = np.random.default_rng(0)
+    r, t = 4, 30
+    vals = rng.normal(size=(t, 2, r)).astype(np.float32)
+    w1 = rng.uniform(0, 1, size=(t, r)).astype(np.float32)
+    weights = np.stack([1.0 - w1, w1], axis=1)  # (t, 2, r)
+    s = init_stats(r, ["energy"])
+    diag = {
+        "swap_accept": jnp.zeros((r,), bool),
+        "swap_prob": jnp.zeros((r,)),
+        "swap_attempt": jnp.zeros((r,), bool),
+    }
+    for i in range(t):
+        rec = {"energy": jnp.asarray(vals[i]),
+               "est_weight": jnp.asarray(weights[i]), **diag}
+        s = update_stats(s, rec, jnp.arange(r, dtype=jnp.int32))
+    expect = (vals * weights).sum(axis=(0, 1)) / weights.sum(axis=(0, 1))
+    np.testing.assert_allclose(np.asarray(s.mean["energy"]), expect, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(s.weight_sum), t, rtol=1e-5)
+
+
+def test_retune_resets_weight_sum_with_the_moments():
+    """A mid-run ladder retune restarts the moment accumulators — weight_sum
+    is part of that state.  Regression: a stale total deflates post-retune
+    variances and freezes the weighted (VMPT) mean updates near zero."""
+    eng = _engine("vmpt")
+    eng.adapt = AdaptConfig(target=0.4, min_attempts_per_pair=2)
+    st = eng.init(jax.random.key(7), TEMPS)
+    st, res = eng.run(st, 200)
+    assert len(res.ladder_history) > 1  # a retune actually fired
+    np.testing.assert_allclose(
+        np.asarray(st.stats.weight_sum), float(np.asarray(st.stats.n_records))
+    )
+    # the post-retune weighted means track the live energies, not zero
+    e_rung = np.asarray(st.pt.energy)[np.argsort(np.asarray(st.pt.rung))]
+    assert np.all(np.abs(res.summary["mean_energy"] - e_rung) < 60.0)
+
+
+# ---------- flow-optimized ladders ----------------------------------------------
+def test_flow_optimized_ladder_concentrates_rungs_at_the_bottleneck():
+    """A sharp f(T) drop in one gap is a mixing bottleneck: the optimized
+    ladder must place more rungs (smaller spacings) there."""
+    temps = np.linspace(1.0, 4.0, 7)
+    f = np.asarray([1.0, 0.98, 0.96, 0.94, 0.25, 0.02, 0.0])  # cliff at gap 3->4
+    new = flow_optimized_ladder(temps, f, rate=1.0)
+    assert new.shape == temps.shape
+    np.testing.assert_allclose(new[0], temps[0], rtol=1e-6)
+    np.testing.assert_allclose(new[-1], temps[-1], rtol=1e-6)
+    assert np.all(np.diff(new) > 0)
+    gaps = np.diff(new)
+    # the cliff lived between the original rungs 3 and 4 (T in [2.5, 3.0]);
+    # the smallest new gap must fall inside that region
+    k = int(np.argmin(gaps))
+    assert 2.4 <= new[k] and new[k + 1] <= 3.1, new
+
+
+def test_maybe_adapt_flow_mode_gates_and_consumes_flow_counters():
+    temps = np.linspace(1.0, 4.0, 5)
+    adapt = AdaptConfig(mode="flow", flow_min_visits=10, rate=1.0)
+    st = AdaptState.fresh(5)
+    counters = {
+        "attempts": np.full(5, 100.0), "accepts": np.full(5, 30.0),
+        "up": np.asarray([9.0, 7.0, 5.0, 3.0, 0.0]),
+        "labeled": np.full(5, 9.0),  # below the gate
+    }
+    new, fb = maybe_adapt(temps, counters, adapt, st)
+    assert new is None and fb is None and st.rounds == 0
+    counters["labeled"] = np.full(5, 20.0)
+    counters["up"] = np.asarray([20.0, 15.0, 10.0, 5.0, 0.0])
+    new, fb = maybe_adapt(temps, counters, adapt, st)
+    assert new is not None and st.rounds == 1
+    np.testing.assert_allclose(fb, counters["up"] / 20.0)
+    # window rebased: an identical second call has zero fresh signal
+    new2, _ = maybe_adapt(temps, counters, adapt, st)
+    assert new2 is None
+
+
+def test_flow_adapt_end_to_end_improves_or_matches_round_trips():
+    """Flow-optimized feedback must actually fire through the engine loop and
+    keep the ladder valid (monotone, endpoints pinned)."""
+    system = ising.IsingSystem(length=L)
+    cfg = EngineConfig(n_replicas=R, swap_interval=2, chunk_intervals=50, n_chains=2)
+    eng = Engine(system, cfg, adapt=AdaptConfig(mode="flow", flow_min_visits=5, rate=0.8))
+    st = eng.init(jax.random.key(5), np.asarray(ladder.linear_ladder(R, 1.0, 4.0)))
+    st, res = eng.run(st, 600)
+    assert len(res.ladder_history) > 1  # the flow feedback fired
+    final = res.ladder_history[-1]
+    assert np.all(np.diff(final) > 0)
+    np.testing.assert_allclose(final[0], 1.0, rtol=1e-5)
+    np.testing.assert_allclose(final[-1], 4.0, rtol=1e-4)
+
+
+def test_flow_mode_requires_temp_swap_mode():
+    system = ising.IsingSystem(length=L)
+    cfg = EngineConfig(n_replicas=R, swap_interval=2, swap_mode="state")
+    with pytest.raises(ValueError, match="flow"):
+        Engine(system, cfg, adapt=AdaptConfig(mode="flow"))
+
+
+# ---------- spec-layer integration ----------------------------------------------
+def test_session_resolves_strategies_by_name():
+    from repro.api import (
+        ExchangeSpec, LadderSpec, PhaseSpec, RunSpec, ScheduleSpec, Session,
+        SystemSpec, EngineSpec,
+    )
+
+    base = dict(
+        system=SystemSpec("ising", {"length": 4, "accept_rule": "glauber"}),
+        ladder=LadderSpec(kind="custom", n_replicas=4, temps=(1.5, 2.2, 3.1, 4.4)),
+        engine=EngineSpec(swap_interval=5, chunk_intervals=4),
+        schedule=ScheduleSpec(phases=(PhaseSpec(name="m", n_sweeps=20),)),
+        seed=2,
+    )
+    # default spec == explicit deo spec, bit-for-bit
+    r_default = Session(RunSpec(**base)).run()
+    r_deo = Session(RunSpec(exchange=ExchangeSpec(strategy="deo"), **base)).run()
+    np.testing.assert_array_equal(r_default.final_energies(), r_deo.final_energies())
+    for strat in ("seo", "windowed", "vmpt"):
+        out = Session(RunSpec(exchange=ExchangeSpec(strategy=strat), **base)).run()
+        assert np.isfinite(out.final_energies()).all()
