@@ -3,7 +3,7 @@
 
   fig3a/fig3b   convergence.py      magnetization & iterations-vs-size
   fig4/fig5     speedup.py          replica-parallel speed-up
-  fig6          tile_sweep.py       block-size -> Pallas tile sweep
+  fig6          tile_sweep.py       block-size + sweeps-per-launch tile sweep
   fig7          swap_overhead.py    swap-interval cost + acceptance
   zoo           systems_bench.py    per-system sweep throughput (system zoo)
   ptlm          ptlm_bench.py       paper technique on the LM pool

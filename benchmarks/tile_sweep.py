@@ -1,41 +1,106 @@
 """Paper Fig. 6 analogue: CUDA block-size -> Pallas BlockSpec tile sweep.
 
 The paper tunes replicas-per-CUDA-block; the TPU analogue is replicas per
-VMEM-resident kernel tile (`r_blk`).  On this CPU container kernel wall time
-is interpreter time (not indicative), so the primary deliverable is the
-*structural* table: VMEM working set per tile vs the 16 MB budget, plus lane
-alignment of the lattice dim.  The XLA (oracle) path is also timed as the
-executable reference.
+VMEM-resident kernel tile (``r_blk``) — and, since the interval-fused
+kernels (DESIGN.md §6), **sweeps per kernel launch** (``n_sweeps``), the
+axis the paper's single-launch device residency actually lives on.  On this
+CPU container kernel wall time is interpreter time (not indicative), so the
+primary deliverables are *structural*: VMEM working set per tile (per-sweep
+and fused models) vs the 16 MB budget, lane alignment of the lattice dim,
+and the modeled HBM traffic collapse of fusing — 18 B/cell/sweep down to
+2 B/cell/interval.  The XLA (oracle) paths are also timed as the executable
+reference, and every row lands in ``BENCH_kernels.json``
+(`benchmarks.common.write_bench_json`) so CI accumulates the perf
+trajectory.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, time_call, write_bench_json
 from repro.kernels import ops, ref
-from repro.kernels.ising_sweep import vmem_working_set_bytes
+from repro.kernels.ising_sweep import (
+    hbm_bytes_per_cell_sweep,
+    vmem_working_set_bytes,
+    vmem_working_set_bytes_fused,
+)
 
 VMEM_BYTES = 16 * 2**20
+GROUP = "kernels"
 
 
-def run(length: int = 300, r: int = 64):
+def run(length: int = 300, r: int = 64, out_dir=None):
     key = jax.random.key(0)
     k1, k2, k3 = jax.random.split(key, 3)
     spins = jnp.where(jax.random.uniform(k1, (r, length, length)) < 0.5, 1, -1).astype(jnp.int8)
     u = jax.random.uniform(k2, (r, 2, length, length))
     betas = jax.random.uniform(k3, (r,), minval=0.25, maxval=1.0)
+    cells = length * length
 
     xla = jax.jit(lambda s, u, b: ref.ising_sweep(s, u, b, j=1.0, b=0.0))
     t_ref = time_call(xla, spins, u, betas)
-    emit("fig6_xla_oracle", t_ref, f"L={length};R={r}")
+    emit(
+        "fig6_xla_oracle", t_ref, f"L={length};R={r}",
+        group=GROUP,
+        metrics={"length": length, "n_replicas": r,
+                 "hbm_bytes_per_cell_sweep": hbm_bytes_per_cell_sweep(fused=False)},
+    )
 
+    # -- replica-tile axis (the paper's Fig. 6 block-size knob) ----------------
     for r_blk in (1, 2, 4, 8, 16, 32):
         ws = vmem_working_set_bytes(r_blk, length)
-        fits = "fits" if ws <= VMEM_BYTES else "EXCEEDS"
+        ws_fused = vmem_working_set_bytes_fused(r_blk, length)
+        fits = "fits" if max(ws, ws_fused) <= VMEM_BYTES else "EXCEEDS"
         aligned = "aligned" if length % 128 == 0 else f"pad_to_{-(-length // 128) * 128}"
         # structural row; interpret-mode timing would not be meaningful.
         emit(
             f"fig6_rblk{r_blk}", ws / 819e9,  # VMEM fill time at HBM bw (s)
-            f"vmem_bytes={ws};{fits};lanes={aligned};grid={r // min(r_blk, r)}",
+            f"vmem_bytes={ws};vmem_bytes_fused={ws_fused};{fits}"
+            f";lanes={aligned};grid={r // min(r_blk, r)}",
+            group=GROUP,
+            metrics={"r_blk": r_blk, "vmem_bytes": ws,
+                     "vmem_bytes_fused": ws_fused,
+                     "fits_vmem": float(max(ws, ws_fused) <= VMEM_BYTES)},
         )
+
+    # -- sweeps-per-launch axis (the interval-fusion knob) ---------------------
+    # The XLA-oracle wall-clock per sweep is the executable reference for the
+    # fused path (the counter-PRNG stream, one launch for S sweeps); modeled
+    # HBM traffic shows the 18 -> 2/S B/cell/sweep collapse the kernel buys.
+    for n_sweeps in (1, 4, 16, 64):
+        fused_fn = jax.jit(lambda s, k, b: ops.ising_sweep_fused(
+            s, k, jnp.int32(0), b, n_sweeps=n_sweeps, use_pallas=False
+        ))
+        t_fused = time_call(fused_fn, spins, key, betas)
+        bytes_fused = hbm_bytes_per_cell_sweep(
+            fused=True, sweeps_per_interval=n_sweeps
+        )
+        speedup = hbm_bytes_per_cell_sweep(fused=False) / bytes_fused
+        emit(
+            f"fig6_fused_s{n_sweeps}", t_fused / n_sweeps,
+            f"L={length};R={r};hbm_B_cell_sweep={bytes_fused:.3f}"
+            f";traffic_x{speedup:.0f}",
+            group=GROUP,
+            metrics={"n_sweeps": n_sweeps, "length": length, "n_replicas": r,
+                     "seconds_per_sweep": t_fused / n_sweeps,
+                     "hbm_bytes_per_cell_sweep": bytes_fused,
+                     "traffic_reduction_x": speedup,
+                     "modeled_hbm_bytes_per_sweep": bytes_fused * r * cells},
+        )
+
+    path = write_bench_json(GROUP, out_dir)
+    print(f"# wrote {path}", flush=True)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--length", type=int, default=300)
+    ap.add_argument("--replicas", type=int, default=64)
+    ap.add_argument("--out-dir", default=None,
+                    help="where BENCH_kernels.json lands (default: $BENCH_OUT_DIR or .)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(length=args.length, r=args.replicas, out_dir=args.out_dir)

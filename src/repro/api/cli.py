@@ -8,7 +8,8 @@ Subcommands (DESIGN.md §API):
                                 ``(spec.json, newest checkpoint)`` alone
   validate SYSTEM [...]         conformance-run a system-zoo entry against
                                 its exact reference (exit 1 on failure);
-                                --exchange gates a non-default strategy
+                                --exchange gates a non-default strategy,
+                                --fused the interval-fused kernel path
   list-systems                  registered systems, params and observables
   list-strategies               registered replica-exchange strategies
 
@@ -98,10 +99,31 @@ def _cmd_validate(args) -> int:
         )
         return 2
     entry = systems.REGISTRY[args.system]
-    report = run_conformance(entry, seed=args.seed, exchange=args.exchange)
+    # use_pallas rides along so the gate exercises the fused *kernel* (its
+    # interpret path off-TPU), not just the pure-JAX fused reference
+    system_params = (
+        {"use_fused": True, "use_pallas": True} if args.fused else None
+    )
+    if args.fused:
+        try:
+            systems.make_system(
+                entry.name, {**entry.params, **system_params}
+            )
+        except TypeError:
+            print(
+                f"system {args.system!r} has no fused kernel path "
+                "(no use_fused constructor option)",
+                file=sys.stderr,
+            )
+            return 2
+    report = run_conformance(
+        entry, seed=args.seed, exchange=args.exchange,
+        system_params=system_params,
+    )
     worst_series, worst_z = report.worst()
+    kernel = " fused" if args.fused else ""
     print(
-        f"{args.system} [{args.exchange}]: {report.n_batches} batch means, "
+        f"{args.system} [{args.exchange}{kernel}]: {report.n_batches} batch means, "
         f"ladder retuned {report.n_retunes}x, "
         f"worst |z| = {worst_z:.2f} ({worst_series})"
     )
@@ -115,7 +137,7 @@ def _cmd_validate(args) -> int:
         os.makedirs(args.out, exist_ok=True)
         path = os.path.join(args.out, f"validate_{args.system}.json")
         payload = {"system": args.system, "seed": args.seed,
-                   "exchange": args.exchange}
+                   "exchange": args.exchange, "fused": bool(args.fused)}
         for f in dataclasses.fields(report):
             v = getattr(report, f.name)
             if isinstance(v, dict):
@@ -190,6 +212,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--exchange", default="deo",
                    help="replica-exchange strategy (see list-strategies)")
+    p.add_argument("--fused", action="store_true",
+                   help="run the interval-fused kernel path (use_fused=True; "
+                        "its counter-PRNG stream is gated statistically)")
     p.add_argument("--out", default=None, help="also write the report JSON here")
     p.set_defaults(fn=_cmd_validate)
 

@@ -81,11 +81,21 @@ class IsingSystem:
         fused into one `mcmc_step` call (keeps the scan short).
       use_pallas: checkerboard only — route the sweep through the Pallas
         kernel (interpret=True on CPU) instead of the pure-XLA path.
+      use_fused: checkerboard only — run whole swap intervals through the
+        interval-fused kernel (`repro.kernels.ops.ising_sweep_fused`) with
+        counter-PRNG uniforms generated in-kernel instead of per-sweep
+        launches fed an externally generated uniforms stream.  The random
+        stream *differs* from the per-sweep path (gated statistically by the
+        conformance suite, not bit-equal — DESIGN.md §6); with
+        ``use_pallas=False`` the fused pure-JAX reference runs instead,
+        bit-exact with the fused kernel.
       accept_rule: "metropolis" (paper Eq. 1) or "glauber" (heat-bath) —
         glauber keeps simultaneous checkerboard updates strictly stochastic
         (see repro.kernels.ref.accept_prob for the ergodicity caveat).
       init_balance: initial fraction of +1 spins (the paper fixes the same
         ratio of -1/+1 across replicas; 0.5 = random balanced).
+      r_blk: replicas per Pallas grid step; 8 is the documented
+        v5e-VMEM-safe block at the paper's L=300 (`kernels.ising_sweep`).
     """
 
     length: int
@@ -94,8 +104,10 @@ class IsingSystem:
     update: UpdateMode = "checkerboard"
     flips_per_step: int = 1
     use_pallas: bool = False
+    use_fused: bool = False
     accept_rule: str = "metropolis"
     init_balance: float = 0.5
+    r_blk: int = 8
 
     def __post_init__(self):
         if self.update == "checkerboard" and self.length % 2 != 0:
@@ -105,6 +117,11 @@ class IsingSystem:
             raise ValueError(
                 f"checkerboard update needs even L under PBC, got L={self.length}; "
                 "use update='single_flip' for odd lattices"
+            )
+        if self.use_fused and self.update != "checkerboard":
+            raise ValueError(
+                "use_fused=True needs update='checkerboard' (the fused "
+                "kernel is an interval of checkerboard sweeps)"
             )
 
     # -- System protocol ---------------------------------------------------
@@ -177,5 +194,24 @@ class IsingSystem:
 
         return kops.ising_sweep(
             spins, u, betas, j=self.j, b=self.b, rule=self.accept_rule,
+            r_blk=self.r_blk, use_pallas=self.use_pallas,
+        )
+
+    # -- fused whole-interval fast path (used when use_fused=True) -----------
+    def batched_mcmc_interval(self, key, t, spins, betas, *, n_sweeps):
+        """``n_sweeps`` replica-batched sweeps in one fused launch.
+
+        ``key`` is the chain's root PRNG key and ``t`` the global sweep
+        counter at interval entry; the counter PRNG derives every uniform
+        from ``(key, t + sweep, replica, colour)``, so the result is
+        independent of chunking and of how intervals were grouped into
+        calls.  Returns ``(spins', delta_e, n_accepted)`` summed over the
+        interval.
+        """
+        from repro.kernels import ops as kops
+
+        return kops.ising_sweep_fused(
+            spins, key, t, betas, n_sweeps=n_sweeps, j=self.j, b=self.b,
+            rule=self.accept_rule, r_blk=self.r_blk,
             use_pallas=self.use_pallas,
         )

@@ -71,6 +71,11 @@ class PottsSystem:
       j: coupling constant (ferromagnetic for j > 0).
       use_pallas: route the sweep through the Pallas kernel
         (interpret=True on CPU) instead of the pure-XLA oracle.
+      use_fused: run whole swap intervals through the interval-fused kernel
+        (`repro.kernels.ops.potts_sweep_fused`) with counter-PRNG uniforms
+        generated in-kernel.  The random stream differs from the per-sweep
+        path (statistically gated, not bit-equal — DESIGN.md §6); with
+        ``use_pallas=False`` the bit-exact fused pure-JAX reference runs.
       accept_rule: "metropolis" or "glauber" (see repro.kernels.ref).
       r_blk: replicas per Pallas grid step; 4 is the documented VMEM-safe
         block at the paper's L=300 (`kernels.potts_sweep`).
@@ -80,6 +85,7 @@ class PottsSystem:
     q: int = 3
     j: float = 1.0
     use_pallas: bool = False
+    use_fused: bool = False
     accept_rule: str = "metropolis"
     r_blk: int = 4
 
@@ -123,4 +129,16 @@ class PottsSystem:
         return kops.potts_sweep(
             states, u, betas, q=self.q, j=self.j, rule=self.accept_rule,
             r_blk=self.r_blk, use_pallas=self.use_pallas,
+        )
+
+    # -- fused whole-interval fast path (used when use_fused=True) -----------
+    def batched_mcmc_interval(self, key, t, states, betas, *, n_sweeps):
+        """``n_sweeps`` replica-batched sweeps in one fused launch (see
+        `repro.core.ising.IsingSystem.batched_mcmc_interval`)."""
+        from repro.kernels import ops as kops
+
+        return kops.potts_sweep_fused(
+            states, key, t, betas, n_sweeps=n_sweeps, q=self.q, j=self.j,
+            rule=self.accept_rule, r_blk=self.r_blk,
+            use_pallas=self.use_pallas,
         )

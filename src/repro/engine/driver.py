@@ -102,6 +102,22 @@ def _batched_step(system: System):
     return jax.vmap(system.mcmc_step)
 
 
+def _batched_interval(system: System):
+    """The fused whole-interval fast path, when selected by the system.
+
+    Systems expose ``batched_mcmc_interval(key, t, states, betas, *,
+    n_sweeps)`` — all ``sweeps_per_interval`` sweeps in one kernel launch
+    with in-kernel counter-PRNG uniforms (`repro.kernels.prng`).  It is an
+    *opt-in* (``use_fused=True``): the fused random stream cannot be
+    bit-equal to the per-sweep `jax.random` stream, so the default path must
+    stay bit-equal to pre-fused behaviour.  Systems without the method (or
+    with fusion off) fall back to the per-sweep scan.
+    """
+    if not getattr(system, "use_fused", False):
+        return None
+    return getattr(system, "batched_mcmc_interval", None)
+
+
 def _sweep_once(system, spec: StepSpec, betas, st: PTState, shard=None) -> PTState:
     """One parallel sweep of every replica at its current temperature."""
     r = spec.n_replicas
@@ -196,6 +212,7 @@ def make_interval_step(
     """
     observables = dict(observables or {})
     recycle = spec.do_swap and spec.exchange.n_virtual > 1
+    fused = _batched_interval(system)
 
     def constrain(st):
         # keep the replica axis sharded through the loop — without this the
@@ -208,10 +225,28 @@ def make_interval_step(
         return shard_state(st, shard)
 
     def interval_step(st: PTState, betas):
-        def sweep_body(s, _):
-            return constrain(_sweep_once(system, spec, betas, s, shard)), None
+        if fused is not None:
+            # One launch for the whole interval: the kernel owns the sweep
+            # loop (VMEM-resident states, in-kernel counter PRNG keyed on the
+            # same (st.key, st.t) the per-sweep path derives from); the
+            # driver just advances the incremental energy and the counter.
+            states, de, _ = fused(
+                st.key, st.t, st.states, betas[st.rung],
+                n_sweeps=spec.sweeps_per_interval,
+            )
+            st = constrain(dataclasses.replace(
+                st,
+                states=states,
+                energy=st.energy + de.astype(jnp.float32),
+                t=st.t + spec.sweeps_per_interval,
+            ))
+        else:
+            def sweep_body(s, _):
+                return constrain(_sweep_once(system, spec, betas, s, shard)), None
 
-        st, _ = jax.lax.scan(sweep_body, st, None, length=spec.sweeps_per_interval)
+            st, _ = jax.lax.scan(
+                sweep_body, st, None, length=spec.sweeps_per_interval
+            )
         if recycle:
             # Waste recycling: record BOTH virtual outcomes of every
             # attempted exchange (pre-swap values, rung order), weighted by

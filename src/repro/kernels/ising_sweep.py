@@ -10,16 +10,37 @@ re-thought for the TPU memory hierarchy (DESIGN.md §2/§6):
 * both colour half-sweeps run back-to-back in-kernel, so each sweep costs one
   HBM round-trip of the spin block instead of two;
 * spins are int8 in HBM (8× denser than the f32 math dtype) and are widened
-  to f32 only inside VMEM;
-* random uniforms are **kernel inputs** so the CPU `interpret=True` path is
-  bit-exact with `ref.ising_sweep` (on hardware, `pltpu.prng_random_bits`
-  in-kernel would remove that HBM stream — recorded as follow-up work).
+  to f32 only inside VMEM.
 
-VMEM working set per grid step ≈ r_blk · L² · (2 int8 in/out + 2·4 u-f32 +
-4 f32 widened + 4 f32 neighbour-sum) = 18·r_blk·L² bytes; for the paper's
-L=300 and r_blk=8 that's ≈ 12.4 MiB — just inside a v5e core's 16 MB of VMEM
-(`vmem_working_set_bytes`, pinned by tests/test_kernels.py and checked by the
-tile sweep).
+Two kernels share that tile strategy (DESIGN.md §6):
+
+* ``ising_sweep_pallas`` — **one sweep per launch**; the random uniforms are
+  a kernel *input* stream ``(R, 2, L, L)`` f32, so the CPU
+  ``interpret=True`` path is bit-exact with `ref.ising_sweep`.  Modeled HBM
+  traffic: int8 spins in+out (2 B/cell) plus the externally generated
+  uniforms stream (8 B/cell written by the generator + 8 B/cell read back) =
+  **18 B/cell/sweep** (`hbm_bytes_per_cell_sweep`).
+* ``ising_sweep_fused_pallas`` — **one swap interval per launch**: all
+  ``n_sweeps`` sweeps run with the spin block VMEM-resident and the uniforms
+  generated *in-kernel* by the counter PRNG (`repro.kernels.prng`, threefry
+  from ``(key, sweep, replica, colour)``), accumulating per-replica
+  ΔE/acceptance in-kernel.  The spin block crosses HBM once each way per
+  *interval*, cutting modeled traffic to **2 B/cell/interval** plus O(R)
+  scalars — the paper's single-launch device residency (its 986× CUDA
+  recipe) applied to the TPU memory hierarchy.  The stream is deterministic
+  pure-uint32 arithmetic, so interpret mode is bit-exact with repeated
+  `ref.ising_sweep` application fed `prng.ising_sweep_uniforms`.
+
+VMEM working set per grid step (bytes; pinned by tests/test_kernels.py and
+checked by the tile sweep):
+
+* per-sweep: r_blk · L² · (2 int8 in/out + 2·4 u-f32 + 4 f32 widened +
+  4 f32 neighbour-sum) = 18·r_blk·L²; L=300, r_blk=8 ≈ 12.4 MiB — just
+  inside a v5e core's 16 MB (`vmem_working_set_bytes`);
+* fused: the uniforms input stream is replaced by one in-flight colour plane
+  of PRNG draws (4 B bits + 4 B f32) plus O(r_blk) key/counter state —
+  same 18 B/cell total (`vmem_working_set_bytes_fused`), the win is HBM
+  traffic, not VMEM footprint.
 
 On hardware, the trailing lattice dim should be padded to a multiple of 128
 lanes for full VPU utilization (the wrapper in ops.py reports alignment).
@@ -31,6 +52,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import prng
 
 
 def _roll1(x: jnp.ndarray, shift: int, axis: int) -> jnp.ndarray:
@@ -127,6 +150,115 @@ def ising_sweep_pallas(
     )(spins, u, betas)
 
 
+def _ising_sweep_fused_kernel(
+    spins_ref, beta_ref, kw_ref, t0_ref, out_ref, de_ref, nacc_ref,
+    *, n_sweeps, r_blk, j, b, rule,
+):
+    """``n_sweeps`` checkerboard sweeps over an (r_blk, L, L) block.
+
+    The spin block stays VMEM-resident across the whole interval; each
+    sweep's uniforms come from the counter PRNG at ``(t0 + sweep, replica,
+    colour)``.  ΔE/acceptance accumulate per replica with the *same
+    association order* as per-sweep oracle application (per-colour within a
+    sweep, then per-sweep), so the f32 totals are bit-equal too.
+    """
+    s = spins_ref[...].astype(jnp.float32)  # widen in VMEM only
+    l = s.shape[-1]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    parity = (ii + jj) % 2
+    beta = beta_ref[...].astype(jnp.float32)[:, None, None]
+    sk0, sk1 = prng.stream_key(kw_ref[...])
+    rep = (
+        jax.lax.broadcasted_iota(jnp.uint32, (r_blk,), 0)
+        + (pl.program_id(0) * r_blk).astype(jnp.uint32)
+    )
+    t0 = t0_ref[0]
+
+    def sweep(i, carry):
+        s, de_total, n_acc = carry
+        w0, w1 = prng.sweep_key(sk0, sk1, t0 + i.astype(jnp.uint32), rep)
+        ds = jnp.zeros(r_blk, jnp.float32)
+        na = jnp.zeros(r_blk, jnp.int32)
+        for color in (0, 1):  # static unroll, exactly as the per-sweep kernel
+            u = prng.plane_uniforms(w0, w1, color, l, l)
+            nbr = (
+                _roll1(s, 1, 1) + _roll1(s, -1, 1)
+                + _roll1(s, 1, 2) + _roll1(s, -1, 2)
+            )
+            de = 2.0 * s * (j * nbr - b)
+            accept = (u < _accept_prob(de, beta, rule)) & (parity == color)
+            s = jnp.where(accept, -s, s)
+            ds = ds + jnp.sum(jnp.where(accept, de, 0.0), axis=(1, 2))
+            na = na + jnp.sum(accept.astype(jnp.int32), axis=(1, 2))
+        return s, de_total + ds, n_acc + na
+
+    s, de_total, n_acc = jax.lax.fori_loop(
+        0, n_sweeps, sweep,
+        (s, jnp.zeros(r_blk, jnp.float32), jnp.zeros(r_blk, jnp.int32)),
+    )
+    out_ref[...] = s.astype(jnp.int8)
+    de_ref[...] = de_total
+    nacc_ref[...] = n_acc
+
+
+def ising_sweep_fused_pallas(
+    spins: jnp.ndarray,
+    key_words: jnp.ndarray,
+    t0: jnp.ndarray,
+    betas: jnp.ndarray,
+    *,
+    n_sweeps: int,
+    j: float = 1.0,
+    b: float = 0.0,
+    rule: str = "metropolis",
+    r_blk: int = 8,
+    interpret: bool = True,
+):
+    """Interval-fused pallas_call wrapper (see module docstring).
+
+    Args:
+      spins: (R, L, L) int8; R must be a multiple of ``r_blk`` (ops.py pads).
+      key_words: (2,) uint32 run-key words (`prng.key_words`).
+      t0: (1,) uint32 global sweep counter at interval entry.
+      betas: (R,) f32.
+      n_sweeps: sweeps fused into this launch (static).
+      r_blk: replicas per grid step (the Fig.-6 "block size" analogue).
+      interpret: True on CPU; False on real TPU.
+
+    Returns ``(spins', delta_e, n_accepted)`` with ΔE/acceptance summed over
+    the whole interval.
+    """
+    r, l, _ = spins.shape
+    assert r % r_blk == 0, (r, r_blk)
+    grid = (r // r_blk,)
+    kernel = functools.partial(
+        _ising_sweep_fused_kernel,
+        n_sweeps=n_sweeps, r_blk=r_blk, j=j, b=b, rule=rule,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r_blk, l, l), lambda i: (i, 0, 0)),
+            pl.BlockSpec((r_blk,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((r_blk, l, l), lambda i: (i, 0, 0)),
+            pl.BlockSpec((r_blk,), lambda i: (i,)),
+            pl.BlockSpec((r_blk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, l, l), jnp.int8),
+            jax.ShapeDtypeStruct((r,), jnp.float32),
+            jax.ShapeDtypeStruct((r,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(spins, betas, key_words, t0)
+
+
 def vmem_working_set_bytes(r_blk: int, length: int) -> int:
     """Static VMEM budget model used by the tile sweep (bytes per grid step)."""
     spins_in = r_blk * length * length  # int8
@@ -135,3 +267,40 @@ def vmem_working_set_bytes(r_blk: int, length: int) -> int:
     nbr = r_blk * length * length * 4  # neighbour-sum temporary
     out = r_blk * length * length
     return spins_in + uniforms + widened + nbr + out
+
+
+def vmem_working_set_bytes_fused(r_blk: int, length: int) -> int:
+    """VMEM budget of the interval-fused kernel (bytes per grid step).
+
+    The per-sweep kernel's 8 B/cell uniforms *input block* is replaced by one
+    in-flight colour plane of counter-PRNG draws (4 B uint32 bits + 4 B f32
+    uniforms) plus O(r_blk) key/counter scalars — the total stays 18 B/cell;
+    fusing wins HBM traffic (`hbm_bytes_per_cell_sweep`), not VMEM footprint.
+    """
+    cells = r_blk * length * length
+    spins_in = cells  # int8
+    bits = cells * 4  # uint32 PRNG draw, active colour
+    uniforms = cells * 4  # f32 uniforms, active colour
+    widened = cells * 4  # f32 working copy
+    nbr = cells * 4  # neighbour-sum temporary
+    out = cells
+    rng_state = 4 * 4 * r_blk  # stream/sweep key words + replica counters
+    return spins_in + bits + uniforms + widened + nbr + out + rng_state
+
+
+def hbm_bytes_per_cell_sweep(
+    *, fused: bool, sweeps_per_interval: int = 1
+) -> float:
+    """Modeled HBM bytes per lattice cell per sweep (O(R) scalars excluded).
+
+    Per-sweep path: int8 spins in+out (2 B) **plus the uniforms stream** —
+    8 B/cell written by the external generator and 8 B/cell read back by the
+    kernel — 18 B/cell/sweep.  Fused path: the spin block crosses HBM once
+    each way per *interval*, so 2 B/cell amortized over
+    ``sweeps_per_interval`` sweeps; the randoms never exist in HBM.
+    """
+    if not fused:
+        return 2.0 + 8.0 + 8.0
+    if sweeps_per_interval < 1:
+        raise ValueError("sweeps_per_interval must be >= 1")
+    return 2.0 / sweeps_per_interval

@@ -13,12 +13,32 @@ import jax.numpy as jnp
 
 from repro.kernels import ising_sweep as _ising
 from repro.kernels import potts_sweep as _potts
+from repro.kernels import prng as _prng
 from repro.kernels import ref as _ref
 from repro.kernels import wkv6 as _wkv6
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _pad_replicas(arrays, betas, r_blk: int):
+    """Pad the replica axis of every array to a multiple of ``r_blk``.
+
+    Pad rows *tile* the real replicas (``row i -> row i % R``) so any pad
+    count — including ``pad > R``, e.g. R=3 at r_blk=8 — yields consistent
+    shapes (``spins[:pad]`` silently under-padded there, leaving betas one
+    length and spins another).  Padded rows run at beta=0 on junk lattices
+    and are dropped by the caller; the grid shape stays static.
+    """
+    r = betas.shape[0]
+    pad = (-r) % r_blk
+    if not pad:
+        return arrays, betas, r
+    idx = jnp.arange(pad) % r
+    arrays = [jnp.concatenate([a, a[idx]], axis=0) for a in arrays]
+    betas = jnp.concatenate([betas, jnp.zeros((pad,), betas.dtype)], axis=0)
+    return arrays, betas, r
 
 
 @partial(jax.jit, static_argnames=("j", "b", "rule", "r_blk", "use_pallas"))
@@ -40,14 +60,9 @@ def ising_sweep(
     """
     if not use_pallas:
         return _ref.ising_sweep(spins, u, betas, j=j, b=b, rule=rule)
-    r = spins.shape[0]
-    pad = (-r) % r_blk
-    if pad:
-        spins = jnp.concatenate([spins, spins[:pad]], axis=0)
-        u = jnp.concatenate([u, u[:pad]], axis=0)
-        betas = jnp.concatenate([betas, jnp.zeros((pad,), betas.dtype)], axis=0)
+    (spins, u), betas, r = _pad_replicas([spins, u], betas, r_blk)
     out, de, nacc = _ising.ising_sweep_pallas(
-        spins, u, betas, j=j, b=b, rule=rule, r_blk=min(r_blk, spins.shape[0]),
+        spins, u, betas, j=j, b=b, rule=rule, r_blk=r_blk,
         interpret=not _on_tpu(),
     )
     return out[:r], de[:r], nacc[:r]
@@ -75,15 +90,113 @@ def potts_sweep(
     """
     if not use_pallas:
         return _ref.potts_sweep(states, u, betas, q=q, j=j, rule=rule)
-    r = states.shape[0]
-    pad = (-r) % r_blk
-    if pad:
-        states = jnp.concatenate([states, states[:pad]], axis=0)
-        u = jnp.concatenate([u, u[:pad]], axis=0)
-        betas = jnp.concatenate([betas, jnp.zeros((pad,), betas.dtype)], axis=0)
+    (states, u), betas, r = _pad_replicas([states, u], betas, r_blk)
     out, de, nacc = _potts.potts_sweep_pallas(
         states, u, betas, q=q, j=j, rule=rule,
-        r_blk=min(r_blk, states.shape[0]), interpret=not _on_tpu(),
+        r_blk=r_blk, interpret=not _on_tpu(),
+    )
+    return out[:r], de[:r], nacc[:r]
+
+
+def _fused_prelude(key, t):
+    """Normalize the fused-kernel PRNG inputs: key words + (1,) u32 counter."""
+    words = _prng.key_words(key)
+    t0 = jnp.asarray(t).astype(jnp.uint32).reshape(1)
+    return words, t0
+
+
+@partial(jax.jit, static_argnames=("n_sweeps", "j", "b", "rule", "r_blk", "use_pallas"))
+def ising_sweep_fused(
+    spins: jnp.ndarray,
+    key: jnp.ndarray,
+    t: jnp.ndarray,
+    betas: jnp.ndarray,
+    *,
+    n_sweeps: int,
+    j: float = 1.0,
+    b: float = 0.0,
+    rule: str = "metropolis",
+    r_blk: int = 8,
+    use_pallas: bool = True,
+):
+    """Interval-fused checkerboard sweeps: ``n_sweeps`` sweeps, one launch.
+
+    ``key`` is a typed JAX PRNG key (or raw uint32 key data) and ``t`` the
+    global sweep counter at interval entry; uniforms come from the counter
+    PRNG (`repro.kernels.prng`) so the ``use_pallas=False`` pure-JAX path —
+    ``n_sweeps`` applications of `ref.ising_sweep` fed
+    `prng.ising_sweep_uniforms` — is bit-exact with the kernel in interpret
+    mode.  Replica padding follows `ising_sweep` (tiled junk rows at beta=0,
+    dropped on return); real replicas keep counter indices ``0..R-1`` so the
+    stream is padding-invariant.
+    """
+    words, t0 = _fused_prelude(key, t)
+    r, length = spins.shape[0], spins.shape[-1]
+    if not use_pallas:
+        rep = jnp.arange(r, dtype=jnp.uint32)
+
+        def sweep(i, carry):
+            s, de, na = carry
+            u = _prng.ising_sweep_uniforms(
+                words, t0[0] + jnp.uint32(i), rep, length
+            )
+            s, d, n = _ref.ising_sweep(s, u, betas, j=j, b=b, rule=rule)
+            return s, de + d, na + n
+
+        return jax.lax.fori_loop(
+            0, n_sweeps, sweep,
+            (spins, jnp.zeros((r,), jnp.float32), jnp.zeros((r,), jnp.int32)),
+        )
+    (spins,), padded_betas, r = _pad_replicas([spins], betas, r_blk)
+    out, de, nacc = _ising.ising_sweep_fused_pallas(
+        spins, words, t0, padded_betas, n_sweeps=n_sweeps, j=j, b=b,
+        rule=rule, r_blk=r_blk, interpret=not _on_tpu(),
+    )
+    return out[:r], de[:r], nacc[:r]
+
+
+@partial(jax.jit, static_argnames=("n_sweeps", "q", "j", "rule", "r_blk", "use_pallas"))
+def potts_sweep_fused(
+    states: jnp.ndarray,
+    key: jnp.ndarray,
+    t: jnp.ndarray,
+    betas: jnp.ndarray,
+    *,
+    n_sweeps: int,
+    q: int,
+    j: float = 1.0,
+    rule: str = "metropolis",
+    r_blk: int = 4,
+    use_pallas: bool = True,
+):
+    """Interval-fused Potts sweeps; see `ising_sweep_fused` for the contract.
+
+    The ``use_pallas=False`` path applies `ref.potts_sweep` ``n_sweeps``
+    times on `prng.potts_sweep_uniforms` — bit-exact with the fused kernel
+    in interpret mode.
+    """
+    words, t0 = _fused_prelude(key, t)
+    r = states.shape[0]
+    h, w = states.shape[-2], states.shape[-1]
+    if not use_pallas:
+        rep = jnp.arange(r, dtype=jnp.uint32)
+
+        def sweep(i, carry):
+            s, de, na = carry
+            u = _prng.potts_sweep_uniforms(
+                words, t0[0] + jnp.uint32(i), rep, h, w
+            )
+            s, d, n = _ref.potts_sweep(s, u, betas, q=q, j=j, rule=rule)
+            return s, de + d, na + n
+
+        return jax.lax.fori_loop(
+            0, n_sweeps, sweep,
+            (states, jnp.zeros((r,), jnp.float32), jnp.zeros((r,), jnp.int32)),
+        )
+    (states,), padded_betas, r = _pad_replicas([states], betas, r_blk)
+    out, de, nacc = _potts.potts_sweep_fused_pallas(
+        states, words, t0, padded_betas, n_sweeps=n_sweeps, q=q, j=j,
+        rule=rule, r_blk=r_blk, interpret=not _on_tpu(),
     )
     return out[:r], de[:r], nacc[:r]
 

@@ -8,11 +8,25 @@ to int32 only inside VMEM.  The proposal randoms ride alongside the
 acceptance randoms as kernel inputs, so the CPU `interpret=True` path is
 bit-exact with `ref.potts_sweep`.
 
+Like the Ising kernel, two variants share the tile strategy (DESIGN.md §6):
+``potts_sweep_pallas`` (one sweep per launch, uniforms as an input stream —
+bit-exact vs `ref.potts_sweep`) and ``potts_sweep_fused_pallas`` (one swap
+*interval* per launch: all ``n_sweeps`` sweeps with the colour block
+VMEM-resident, the four uniform planes per sweep generated in-kernel by the
+counter PRNG `repro.kernels.prng` at ``(key, sweep, replica, 2*colour +
+(proposal|accept))``, ΔE/acceptance accumulated in-kernel).  Modeled HBM
+traffic drops from 34 B/cell/sweep (int8 in/out + 16 B of uniforms written
+externally + 16 B read back) to 2 B/cell/*interval* plus O(R) scalars
+(`hbm_bytes_per_cell_sweep`).
+
 VMEM working set per grid step ≈ r_blk · H · W · (2 int8 in/out + 4·4 u-f32 +
 2·4 i32 working copies + 4 de-f32) = 30·r_blk·H·W bytes — roughly 2.3× the
 Ising kernel's (the extra uniform plane pays for the colour proposal), still
 inside a v5e core's 16 MB for the paper's L=300 at r_blk=4 (~10.8 MB;
-`vmem_working_set_bytes`).
+`vmem_working_set_bytes`).  The fused variant swaps the 16 B/cell uniforms
+block for one in-flight plane of PRNG draws (8 B bits+f32), totalling
+22 B/cell (`vmem_working_set_bytes_fused`) — r_blk=4 at L=300 stays well
+inside budget.
 """
 from __future__ import annotations
 
@@ -21,6 +35,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import prng
 
 
 def _roll1(x: jnp.ndarray, shift: int, axis: int) -> jnp.ndarray:
@@ -126,6 +142,116 @@ def potts_sweep_pallas(
     )(states, u, betas)
 
 
+def _potts_sweep_fused_kernel(
+    states_ref, beta_ref, kw_ref, t0_ref, out_ref, de_ref, nacc_ref,
+    *, n_sweeps, r_blk, q, j, rule,
+):
+    """``n_sweeps`` checkerboard Potts sweeps over an (r_blk, H, W) block.
+
+    Same interval-fusion scheme as `_ising_sweep_fused_kernel`: the colour
+    block stays VMEM-resident, per-sweep uniforms come from the counter PRNG
+    (plane ``2*colour + (0 proposal | 1 accept)``), and ΔE/acceptance
+    accumulate in the per-sweep oracle's association order (bit-equal f32).
+    """
+    s = states_ref[...].astype(jnp.int32)  # widen in VMEM only
+    h, w = s.shape[-2], s.shape[-1]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (h, w), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (h, w), 1)
+    parity = (ii + jj) % 2
+    beta = beta_ref[...].astype(jnp.float32)[:, None, None]
+    sk0, sk1 = prng.stream_key(kw_ref[...])
+    rep = (
+        jax.lax.broadcasted_iota(jnp.uint32, (r_blk,), 0)
+        + (pl.program_id(0) * r_blk).astype(jnp.uint32)
+    )
+    t0 = t0_ref[0]
+
+    def sweep(i, carry):
+        s, de_total, n_acc = carry
+        w0, w1 = prng.sweep_key(sk0, sk1, t0 + i.astype(jnp.uint32), rep)
+        ds = jnp.zeros(r_blk, jnp.float32)
+        na = jnp.zeros(r_blk, jnp.int32)
+        for color in (0, 1):  # static unroll, exactly as the per-sweep kernel
+            u_prop = prng.plane_uniforms(w0, w1, 2 * color + 0, h, w)
+            u_acc = prng.plane_uniforms(w0, w1, 2 * color + 1, h, w)
+            d = 1 + jnp.floor(u_prop * (q - 1)).astype(jnp.int32)
+            trial = jax.lax.rem(s + d, q)
+            de = jnp.zeros(s.shape, jnp.float32)
+            for axis, shift in ((1, 1), (1, -1), (2, 1), (2, -1)):
+                nbr = _roll1(s, shift, axis)
+                de = de + j * (
+                    (s == nbr).astype(jnp.float32)
+                    - (trial == nbr).astype(jnp.float32)
+                )
+            accept = (u_acc < _accept_prob(de, beta, rule)) & (parity == color)
+            s = jnp.where(accept, trial, s)
+            ds = ds + jnp.sum(jnp.where(accept, de, 0.0), axis=(1, 2))
+            na = na + jnp.sum(accept.astype(jnp.int32), axis=(1, 2))
+        return s, de_total + ds, n_acc + na
+
+    s, de_total, n_acc = jax.lax.fori_loop(
+        0, n_sweeps, sweep,
+        (s, jnp.zeros(r_blk, jnp.float32), jnp.zeros(r_blk, jnp.int32)),
+    )
+    out_ref[...] = s.astype(jnp.int8)
+    de_ref[...] = de_total
+    nacc_ref[...] = n_acc
+
+
+def potts_sweep_fused_pallas(
+    states: jnp.ndarray,
+    key_words: jnp.ndarray,
+    t0: jnp.ndarray,
+    betas: jnp.ndarray,
+    *,
+    n_sweeps: int,
+    q: int,
+    j: float = 1.0,
+    rule: str = "metropolis",
+    r_blk: int = 4,
+    interpret: bool = True,
+):
+    """Interval-fused pallas_call wrapper (see module docstring).
+
+    Args:
+      states: (R, H, W) int8 in {0..q-1}; R a multiple of ``r_blk``
+        (ops.py pads).
+      key_words: (2,) uint32 run-key words (`prng.key_words`).
+      t0: (1,) uint32 global sweep counter at interval entry.
+      betas: (R,) f32;  n_sweeps / q: static.
+
+    Returns ``(states', delta_e, n_accepted)`` summed over the interval.
+    """
+    r, h, w = states.shape
+    assert r % r_blk == 0, (r, r_blk)
+    grid = (r // r_blk,)
+    kernel = functools.partial(
+        _potts_sweep_fused_kernel,
+        n_sweeps=n_sweeps, r_blk=r_blk, q=q, j=j, rule=rule,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r_blk, h, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((r_blk,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((r_blk, h, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((r_blk,), lambda i: (i,)),
+            pl.BlockSpec((r_blk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, h, w), jnp.int8),
+            jax.ShapeDtypeStruct((r,), jnp.float32),
+            jax.ShapeDtypeStruct((r,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(states, betas, key_words, t0)
+
+
 def vmem_working_set_bytes(r_blk: int, height: int, width: int) -> int:
     """Static VMEM budget model (bytes per grid step; see module docstring)."""
     cells = r_blk * height * width
@@ -136,3 +262,39 @@ def vmem_working_set_bytes(r_blk: int, height: int, width: int) -> int:
     de = cells * 4  # f32 per-site energy delta
     out = cells
     return states_in + uniforms + widened + trial + de + out
+
+
+def vmem_working_set_bytes_fused(r_blk: int, height: int, width: int) -> int:
+    """VMEM budget of the interval-fused Potts kernel (bytes per grid step).
+
+    The 16 B/cell uniforms input block is replaced by one in-flight plane of
+    counter-PRNG draws (4 B uint32 bits + 4 B f32) plus O(r_blk) key state —
+    22 B/cell total vs the per-sweep kernel's 30.
+    """
+    cells = r_blk * height * width
+    states_in = cells  # int8
+    bits = cells * 4  # uint32 PRNG draw, active plane
+    uniforms = cells * 4  # f32 uniforms, active plane
+    widened = cells * 4  # i32 working copy
+    trial = cells * 4  # i32 proposal lattice
+    de = cells * 4  # f32 per-site energy delta
+    out = cells
+    rng_state = 4 * 4 * r_blk  # stream/sweep key words + replica counters
+    return states_in + bits + uniforms + widened + trial + de + out + rng_state
+
+
+def hbm_bytes_per_cell_sweep(
+    *, fused: bool, sweeps_per_interval: int = 1
+) -> float:
+    """Modeled HBM bytes per cell per sweep (O(R) scalars excluded).
+
+    Per-sweep path: int8 in+out (2 B) + 16 B/cell of uniforms written by the
+    external generator + 16 B read back = 34 B/cell/sweep.  Fused: the
+    colour block crosses HBM once each way per interval (2 B/cell amortized
+    over ``sweeps_per_interval``); randoms never exist in HBM.
+    """
+    if not fused:
+        return 2.0 + 16.0 + 16.0
+    if sweeps_per_interval < 1:
+        raise ValueError("sweeps_per_interval must be >= 1")
+    return 2.0 / sweeps_per_interval

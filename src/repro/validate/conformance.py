@@ -95,6 +95,7 @@ def entry_runspec(
     entry: RegisteredSystem,
     seed: int = 0,
     exchange: str | ExchangeSpec | None = None,
+    system_params: dict | None = None,
 ) -> RunSpec:
     """Compile a zoo entry to the declarative `RunSpec` conformance executes.
 
@@ -106,7 +107,10 @@ def entry_runspec(
     ``exchange`` selects the replica-exchange strategy (name or
     `ExchangeSpec`; None = the default "deo") — the gate that makes the
     strategy × system conformance matrix (`tests/test_conformance.py`) a
-    one-argument sweep.
+    one-argument sweep.  ``system_params`` overlays the entry's constructor
+    params — how kernel-option variants (e.g. ``use_fused=True``, whose
+    random stream is deliberately *not* bit-equal to the per-sweep path)
+    join the same matrix without duplicating zoo entries.
     """
     if exchange is None:
         exchange = ExchangeSpec()
@@ -126,7 +130,9 @@ def entry_runspec(
             adapt=True, reset_stats=True,
         ))
     return RunSpec(
-        system=SystemSpec(name=entry.name, params=dict(entry.params)),
+        system=SystemSpec(
+            name=entry.name, params={**entry.params, **(system_params or {})}
+        ),
         ladder=LadderSpec(
             kind="custom", n_replicas=len(entry.temps), temps=entry.temps
         ),
@@ -146,12 +152,18 @@ def entry_runspec(
 
 
 def run_conformance(
-    entry: RegisteredSystem, seed: int = 0, exact_fn=None, exchange=None
+    entry: RegisteredSystem,
+    seed: int = 0,
+    exact_fn=None,
+    exchange=None,
+    system_params: dict | None = None,
 ) -> ConformanceReport:
     """Run one zoo entry through the adaptive ensemble Session vs ground truth."""
     if exact_fn is None:
         exact_fn = EXACT[entry.name]
-    spec = entry_runspec(entry, seed=seed, exchange=exchange)
+    spec = entry_runspec(
+        entry, seed=seed, exchange=exchange, system_params=system_params
+    )
 
     # A tiny callback freezes the post-burn ladder so the measurement phases
     # can be audited against it — the callback pipeline replacing what used

@@ -122,6 +122,31 @@ def test_exchange_strategy_conforms_to_exact_reference(name, strategy):
     assert_conforms(report, z_max=4.0, geweke_max=4.0)
 
 
+@pytest.mark.parametrize("name", [
+    "ising",
+    # the Potts exact reference enumerates 3^16 configs (~20 s) — same slow
+    # tier as the base Potts entry
+    pytest.param("potts", marks=pytest.mark.slow),
+])
+def test_fused_kernel_conforms_to_exact_reference(name):
+    """The interval-fused kernel gate (DESIGN.md §6): fusing all
+    sweeps-per-interval into one launch replaces the per-sweep `jax.random`
+    uniforms with the in-kernel counter PRNG, so the chain *cannot* be
+    bit-equal to the per-sweep path — it must instead be statistically
+    verified against exact ground truth through the same adaptive ensemble
+    path and 4×MCSE tolerance as every other sampler variant."""
+    entry = systems.REGISTRY[name]
+    report = run_conformance(
+        entry, seed=0,
+        system_params={"use_fused": True, "use_pallas": True},
+    )
+    assert report.n_retunes == entry.adapt_rounds, report.n_retunes
+    np.testing.assert_allclose(report.temps[0], entry.temps[0], rtol=1e-5)
+    np.testing.assert_allclose(report.temps[-1], entry.temps[-1], rtol=1e-4)
+    assert np.all(np.diff(report.temps) > 0)
+    assert_conforms(report, z_max=4.0, geweke_max=4.0)
+
+
 def test_conformance_catches_a_wrong_sampler():
     """Negative control: a deliberately biased reference must fail the gate —
     otherwise the 4xMCSE tolerance is too loose to mean anything."""

@@ -271,6 +271,57 @@ def test_checkpoint_preserves_adapted_ladder(tmp_path):
 
 
 # ---------- guard rails -----------------------------------------------------------
+# ---------- interval-fused kernel fast path -------------------------------------
+def test_fused_interval_chunking_invariance_and_energy():
+    """The fused fast path must keep the engine's two core contracts: chunk
+    boundaries are invisible (counter PRNG keys on the global sweep counter,
+    not on call structure), and the incrementally tracked energy matches a
+    from-scratch recompute."""
+    from repro.core.systems import batched_energy
+
+    results = []
+    for chunk_intervals in (1, 4):
+        system = ising.IsingSystem(
+            length=L, accept_rule="glauber", use_fused=True, use_pallas=True
+        )
+        eng = Engine(system, EngineConfig(
+            n_replicas=R, swap_interval=5, chunk_intervals=chunk_intervals
+        ), observables=OBS)
+        st = eng.init(jax.random.key(3), TEMPS)
+        st, _ = eng.run(st, 40)
+        results.append(st)
+    np.testing.assert_array_equal(
+        np.asarray(results[0].pt.states), np.asarray(results[1].pt.states)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(results[0].pt.rung), np.asarray(results[1].pt.rung)
+    )
+    st = results[0]
+    np.testing.assert_allclose(
+        np.asarray(st.pt.energy),
+        np.asarray(batched_energy(
+            ising.IsingSystem(length=L), st.pt.states
+        )),
+        rtol=1e-5, atol=1e-3,
+    )
+    assert int(np.asarray(st.pt.t)) == 40
+
+
+def test_fused_off_by_default_keeps_persweep_path():
+    """`use_fused` is opt-in: a default system must take the per-sweep scan
+    (the fused counter stream is deliberately different), so default engine
+    trajectories stay bit-equal to pre-fused builds."""
+    from repro.engine.driver import _batched_interval
+
+    assert _batched_interval(ising.IsingSystem(length=L)) is None
+    assert _batched_interval(gaussian.GaussianMixture(
+        mus=(-1.0, 1.0), sigmas=(1.0, 1.0), weights=(0.5, 0.5)
+    )) is None
+    assert _batched_interval(
+        ising.IsingSystem(length=L, use_fused=True)
+    ) is not None
+
+
 def test_run_rejects_non_interval_multiple():
     _, eng = _engine(swap_interval=5)
     st = eng.init(jax.random.key(0), TEMPS)

@@ -79,6 +79,44 @@ def test_potts_sweep_energy_delta_property(system, seed):
     assert (np.asarray(nacc) >= 0).all() and (np.asarray(nacc) <= h * w).all()
 
 
+@given(
+    system=ising_systems(),
+    seed=st.integers(0, 2**20),
+    n_sweeps=st.integers(1, 3),
+    r=st.integers(1, 5),
+)
+@settings(**SETTINGS)
+def test_fused_interval_matches_persweep_oracle_property(system, seed, n_sweeps, r):
+    """For ANY checkerboard Ising config / replica count / interval length:
+    the interval-fused kernel is bit-equal to repeated per-sweep oracle
+    application on the shared counter stream (`repro.kernels.prng`) — the
+    property form of the pinned cases in test_kernels.py."""
+    from repro.kernels import ops, prng
+
+    l = system.length
+    key = jax.random.key(seed)
+    k1, k2 = jax.random.split(key)
+    spins = jnp.where(jax.random.uniform(k1, (r, l, l)) < 0.5, 1, -1).astype(jnp.int8)
+    betas = jax.random.uniform(k2, (r,), minval=0.05, maxval=2.0)
+    got = ops.ising_sweep_fused(
+        spins, key, jnp.int32(seed % 1000), betas, n_sweeps=n_sweeps,
+        j=system.j, b=system.b, rule=system.accept_rule, r_blk=4,
+        use_pallas=True,
+    )
+    words = prng.key_words(key)
+    rep = jnp.arange(r, dtype=jnp.uint32)
+    s = spins
+    na = jnp.zeros((r,), jnp.int32)
+    for i in range(n_sweeps):
+        u = prng.ising_sweep_uniforms(words, seed % 1000 + i, rep, l)
+        s, _, n = ref.ising_sweep(
+            s, u, betas, j=system.j, b=system.b, rule=system.accept_rule
+        )
+        na = na + n
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(s))
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(na))
+
+
 @given(seed=st.integers(0, 2**20), n=st.integers(2, 32))
 @settings(**SETTINGS)
 def test_swap_probability_bounds_and_symmetry(seed, n):

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ising_sweep as isk
-from repro.kernels import ops, potts_sweep as psk, ref
+from repro.kernels import ops, potts_sweep as psk, prng, ref
 
 
 def _rand_ising(key, r, l):
@@ -61,6 +61,175 @@ def test_ising_padding_path_bit_equal(r):
     np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]), rtol=1e-6, atol=1e-3)
 
 
+# ---------- counter PRNG (the fused kernels' random stream) ---------------------
+def test_threefry_known_answer_vectors():
+    """Threefry-2x32-20 against the published Random123 test vectors — the
+    stream contract is the cipher itself, not 'whatever this build computes'."""
+    kat = [
+        ((0, 0), (0, 0), (0x6B200159, 0x99BA4EFE)),
+        ((0xFFFFFFFF, 0xFFFFFFFF), (0xFFFFFFFF, 0xFFFFFFFF),
+         (0x1CB996FC, 0xBB002BE7)),
+        ((0x13198A2E, 0x03707344), (0x243F6A88, 0x85A308D3),
+         (0xC4923A9C, 0x483DF7A0)),
+    ]
+    for key, ctr, want in kat:
+        got = prng.threefry2x32(
+            jnp.uint32(key[0]), jnp.uint32(key[1]),
+            jnp.uint32(ctr[0]), jnp.uint32(ctr[1]),
+        )
+        assert (int(got[0]), int(got[1])) == want
+
+
+def test_prng_uniforms_range_and_moments():
+    """[0,1) half-open contract plus crude moment sanity (catches a broken
+    rotation/injection far faster than the conformance gate would)."""
+    u = np.asarray(prng.plane_uniforms(
+        jnp.arange(8, dtype=jnp.uint32), jnp.arange(8, 16, dtype=jnp.uint32),
+        0, 64, 64,
+    ))
+    assert u.min() >= 0.0 and u.max() < 1.0
+    n = u.size
+    assert abs(u.mean() - 0.5) < 4.0 / np.sqrt(12 * n)
+    assert abs(u.var() - 1.0 / 12.0) < 0.002
+
+
+def test_prng_stream_distinct_across_counter_axes():
+    """Distinct (sweep, replica, plane) must give distinct lattices — the
+    injectivity the counter layout is designed for."""
+    words = prng.key_words(jax.random.key(3))
+    rep = jnp.arange(4, dtype=jnp.uint32)
+    base = np.asarray(prng.ising_sweep_uniforms(words, 5, rep, 8))
+    other_t = np.asarray(prng.ising_sweep_uniforms(words, 6, rep, 8))
+    assert not np.array_equal(base, other_t)
+    for r in range(1, 4):  # replica axis
+        assert not np.array_equal(base[0], base[r])
+    assert not np.array_equal(base[:, 0], base[:, 1])  # colour planes
+
+
+# ---------- interval-fused kernels vs the per-sweep oracle stream ---------------
+@pytest.mark.parametrize("n_sweeps", [1, 3])
+@pytest.mark.parametrize("r,l,r_blk", [
+    (1, 4, 1), (8, 10, 4), (5, 12, 2),  # pad path
+    (3, 6, 8),   # pad > R (regression: tiled padding)
+    (4, 30, 4),  # odd (non-128-aligned) lattice like the paper's 300
+])
+def test_ising_fused_bit_equals_persweep_oracle_stream(r, l, r_blk, n_sweeps):
+    """The fused kernel over S sweeps must be BIT-equal (spins, ΔE and
+    acceptance counts included — same f32 association order) to S
+    applications of the per-sweep oracle fed the same counter stream."""
+    key = jax.random.key(r * 10 + l)
+    spins, _, betas = _rand_ising(key, r, l)
+    t0 = 17
+    got = ops.ising_sweep_fused(
+        spins, key, jnp.int32(t0), betas, n_sweeps=n_sweeps, j=1.0, b=0.3,
+        r_blk=r_blk, use_pallas=True,
+    )
+    words = prng.key_words(key)
+    rep = jnp.arange(r, dtype=jnp.uint32)
+    s, de, na = spins, jnp.zeros((r,), jnp.float32), jnp.zeros((r,), jnp.int32)
+    for i in range(n_sweeps):
+        u = prng.ising_sweep_uniforms(words, t0 + i, rep, l)
+        s, d, n = ref.ising_sweep(s, u, betas, j=1.0, b=0.3)
+        de, na = de + d, na + n
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(s))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(de))
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(na))
+    # and the pure-JAX fused reference is the same stream, bit-for-bit
+    rf = ops.ising_sweep_fused(
+        spins, key, jnp.int32(t0), betas, n_sweeps=n_sweeps, j=1.0, b=0.3,
+        r_blk=r_blk, use_pallas=False,
+    )
+    for a, b in zip(got, rf):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("n_sweeps", [1, 3])
+@pytest.mark.parametrize("r,h,w,r_blk,q", [
+    (1, 4, 4, 1, 3), (5, 8, 6, 2, 4),  # pad path
+    (3, 6, 6, 8, 3),  # pad > R (regression: tiled padding)
+])
+@pytest.mark.parametrize("rule", ["metropolis", "glauber"])
+def test_potts_fused_bit_equals_persweep_oracle_stream(r, h, w, r_blk, q, rule, n_sweeps):
+    key = jax.random.key(r * 7 + h + q)
+    states, _, betas = _rand_potts(key, r, h, w, q)
+    t0 = 5
+    got = ops.potts_sweep_fused(
+        states, key, jnp.int32(t0), betas, n_sweeps=n_sweeps, q=q, j=0.8,
+        rule=rule, r_blk=r_blk, use_pallas=True,
+    )
+    words = prng.key_words(key)
+    rep = jnp.arange(r, dtype=jnp.uint32)
+    s, de, na = states, jnp.zeros((r,), jnp.float32), jnp.zeros((r,), jnp.int32)
+    for i in range(n_sweeps):
+        u = prng.potts_sweep_uniforms(words, t0 + i, rep, h, w)
+        s, d, n = ref.potts_sweep(s, u, betas, q=q, j=0.8, rule=rule)
+        de, na = de + d, na + n
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(s))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(de))
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(na))
+    rf = ops.potts_sweep_fused(
+        states, key, jnp.int32(t0), betas, n_sweeps=n_sweeps, q=q, j=0.8,
+        rule=rule, r_blk=r_blk, use_pallas=False,
+    )
+    for a, b in zip(got, rf):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ising_fused_block_size_invariance():
+    """Fig-6 invariant extended to the fused kernel: neither the replica
+    tile size nor the padding it implies may change the stream (real
+    replicas keep counter indices 0..R-1)."""
+    key = jax.random.key(2)
+    spins, _, betas = _rand_ising(key, 6, 8)
+    outs = [
+        ops.ising_sweep_fused(
+            spins, key, jnp.int32(0), betas, n_sweeps=2, r_blk=rb,
+            use_pallas=True,
+        )[0]
+        for rb in (1, 2, 3, 6, 8)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(o))
+
+
+def test_fused_interval_equals_split_intervals():
+    """Chunking invariance: one fused 4-sweep interval == two fused 2-sweep
+    intervals with the counter advanced — what makes engine chunk/interval
+    boundaries invisible to the fused chain."""
+    key = jax.random.key(9)
+    spins, _, betas = _rand_ising(key, 4, 6)
+    whole = ops.ising_sweep_fused(
+        spins, key, jnp.int32(10), betas, n_sweeps=4, use_pallas=True
+    )
+    s1, de1, na1 = ops.ising_sweep_fused(
+        spins, key, jnp.int32(10), betas, n_sweeps=2, use_pallas=True
+    )
+    s2, de2, na2 = ops.ising_sweep_fused(
+        s1, key, jnp.int32(12), betas, n_sweeps=2, use_pallas=True
+    )
+    np.testing.assert_array_equal(np.asarray(whole[0]), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(whole[2]), np.asarray(na1 + na2))
+    np.testing.assert_allclose(
+        np.asarray(whole[1]), np.asarray(de1 + de2), rtol=1e-6, atol=1e-3
+    )
+
+
+# ---------- per-sweep padding regression: pad > R (e.g. R=3 at r_blk=8) ---------
+@pytest.mark.parametrize("r,r_blk", [(3, 8), (2, 8), (1, 4), (5, 16)])
+def test_potts_padding_exceeding_r_bit_equal(r, r_blk):
+    """`ops` wrappers must tile the replica padding: with pad > R the old
+    `x[:pad]` under-padded states/u while betas padded fully, leaving the
+    kernel mismatched shapes."""
+    states, u, betas = _rand_potts(jax.random.key(40 + r), r, 6, 6, 3)
+    got = ops.potts_sweep(states, u, betas, q=3, j=1.0, r_blk=r_blk,
+                          use_pallas=True)
+    want = ref.potts_sweep(states, u, betas, q=3, j=1.0)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(want[2]))
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]),
+                               rtol=1e-6, atol=1e-3)
+
+
 def test_vmem_working_set_documented_budget():
     """The documented v5e budget for the paper's L=300 config must hold: the
     Ising kernel's r_blk=8 working set is the 18 B/cell (~12.4 MiB) modelled
@@ -76,6 +245,49 @@ def test_vmem_working_set_documented_budget():
     # both models are monotone in every argument (sanity of the estimator)
     assert psk.vmem_working_set_bytes(8, 300, 300) > potts_bytes
     assert psk.vmem_working_set_bytes(4, 300, 302) > potts_bytes
+
+
+def test_vmem_fused_documented_budget():
+    """The fused kernels' working sets at the documented blocks must still
+    fit a v5e core's 16 MB: 18 B/cell Ising (+O(r_blk) RNG state) and
+    22 B/cell Potts — fusion trades the uniforms input block for one
+    in-flight plane of PRNG draws, so VMEM stays flat while HBM traffic
+    collapses."""
+    ising = isk.vmem_working_set_bytes_fused(8, 300)
+    assert ising == 18 * 8 * 300 * 300 + 16 * 8
+    assert ising < 16 * 2**20
+    potts = psk.vmem_working_set_bytes_fused(4, 300, 300)
+    assert potts == 22 * 4 * 300 * 300 + 16 * 4
+    assert potts < 16 * 2**20
+    # fused never exceeds the per-sweep working set by more than the RNG state
+    assert ising <= isk.vmem_working_set_bytes(8, 300) + 16 * 8
+    assert potts <= psk.vmem_working_set_bytes(4, 300, 300)
+
+
+def test_hbm_traffic_model_fused_speedup():
+    """The acceptance bar for this optimisation: modeled HBM bytes per cell
+    per sweep must drop >= 5x on the fused Ising path — already 9x at one
+    sweep per interval (18 -> 2 B), scaling linearly with the interval."""
+    unfused = isk.hbm_bytes_per_cell_sweep(fused=False)
+    assert unfused == 18.0
+    assert unfused >= 5 * isk.hbm_bytes_per_cell_sweep(
+        fused=True, sweeps_per_interval=1
+    )
+    assert isk.hbm_bytes_per_cell_sweep(fused=True, sweeps_per_interval=100) == (
+        pytest.approx(0.02)
+    )
+    # Potts: 34 -> 2/S B per cell per sweep
+    assert psk.hbm_bytes_per_cell_sweep(fused=False) == 34.0
+    assert psk.hbm_bytes_per_cell_sweep(fused=False) >= 5 * (
+        psk.hbm_bytes_per_cell_sweep(fused=True, sweeps_per_interval=1)
+    )
+    # the kernel modules keep their models local (self-contained kernel code,
+    # like _roll1/_accept_prob) — pin the fused branches against silent
+    # divergence: both amortize the same int8 in+out over the interval
+    for s in (1, 4, 100):
+        assert isk.hbm_bytes_per_cell_sweep(
+            fused=True, sweeps_per_interval=s
+        ) == psk.hbm_bytes_per_cell_sweep(fused=True, sweeps_per_interval=s)
 
 
 # ---------- Potts kernel vs oracle ----------------------------------------------
