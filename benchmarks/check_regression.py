@@ -1,0 +1,156 @@
+"""Perf-trajectory regression gate: fresh BENCH_*.json vs committed baseline.
+
+CI re-runs the benchmark suites at smoke sizes and compares the fresh
+records against the baselines committed at the repo root (``BENCH_kernels
+.json``, ``BENCH_swap.json``, ``BENCH_shard.json``).  Metrics fall into
+tolerance classes by what produces them:
+
+* **exact** — configuration echoes (device/replica counts, sizes, boolean
+  structural facts like "the shard fits VMEM").  Any drift is a real
+  behaviour change.
+* **model** (rtol 1%) — analytic numbers (`hbm_bytes_per_cell_sweep`, VMEM
+  working sets, traffic ratios).  These only move when the model moves.
+* **measured** (rtol 50%) — deterministic-but-environment-coupled values:
+  swap acceptance and round trips at fixed seeds, HLO-parsed collective
+  bytes.  Wide tolerance absorbs jax/XLA version shifts while still
+  catching order-of-magnitude regressions (a lattice-sized collective
+  sneaking into the swap path blows straight through 50%).
+* **advisory** — wall-clock (``seconds`` and *_per_sweep/_per_call/_per_sec
+  rates).  Printed, never fatal: CI machines are not a timing lab.
+
+A record present in the baseline but missing fresh is fatal (a benchmark
+silently disappearing is itself a regression); fresh-only records are fine
+(new coverage).  Exit 1 on any fatal drift.
+
+    python -m benchmarks.check_regression --baseline-dir . \
+        --fresh-dir /tmp/bench kernels swap shard
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+EXACT = {
+    "n_devices", "n_replicas", "length", "sweeps", "n_sweeps", "r_blk",
+    "fits_vmem", "lattice_independent", "shard_fits", "exceeds_single_chip",
+}
+MODEL = {
+    "hbm_bytes_per_cell_sweep", "traffic_reduction_x", "vmem_bytes",
+    "vmem_bytes_fused", "vmem_bytes_single_chip", "vmem_bytes_per_shard",
+    "modeled_hbm_bytes_per_sweep",
+}
+MEASURED = {
+    "swap_acceptance", "round_trips", "collective_bytes_per_exchange",
+    "payload_bytes_per_exchange", "wire_bytes_per_chunk",
+    "collective_wire_bytes_per_chunk", "collective_count",
+}
+# everything else (us_per_sweep, trips_per_sec, overhead_pct, ...) is
+# timing-derived: advisory only
+
+MODEL_RTOL = 0.01
+MEASURED_RTOL = 0.50
+MEASURED_ATOL = 1e-9
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"]: r for r in payload.get("records", [])}
+
+
+def _rel_drift(base: float, fresh: float) -> float:
+    if base == fresh:
+        return 0.0
+    denom = max(abs(base), MEASURED_ATOL)
+    return abs(fresh - base) / denom
+
+
+def compare_group(group: str, baseline_dir: str, fresh_dir: str):
+    """Yield (severity, message) rows; severity in {'fail', 'warn', 'ok'}."""
+    fname = f"BENCH_{group}.json"
+    base_path = os.path.join(baseline_dir, fname)
+    fresh_path = os.path.join(fresh_dir, fname)
+    if not os.path.exists(base_path):
+        yield "fail", f"{group}: missing committed baseline {base_path}"
+        return
+    if not os.path.exists(fresh_path):
+        yield "fail", f"{group}: missing fresh output {fresh_path}"
+        return
+    base = _load(base_path)
+    fresh = _load(fresh_path)
+    for name, brec in sorted(base.items()):
+        frec = fresh.get(name)
+        if frec is None:
+            yield "fail", f"{group}/{name}: record missing from fresh run"
+            continue
+        bm = brec.get("metrics", {})
+        fm = frec.get("metrics", {})
+        for metric, bval in sorted(bm.items()):
+            if metric not in fm:
+                yield "fail", f"{group}/{name}.{metric}: metric disappeared"
+                continue
+            fval = fm[metric]
+            drift = _rel_drift(bval, fval)
+            if metric in EXACT:
+                if bval != fval:
+                    yield "fail", (
+                        f"{group}/{name}.{metric}: exact metric changed "
+                        f"{bval} -> {fval}"
+                    )
+            elif metric in MODEL:
+                if drift > MODEL_RTOL:
+                    yield "fail", (
+                        f"{group}/{name}.{metric}: model drift "
+                        f"{bval} -> {fval} ({drift:.1%} > {MODEL_RTOL:.0%})"
+                    )
+            elif metric in MEASURED:
+                if drift > MEASURED_RTOL:
+                    yield "fail", (
+                        f"{group}/{name}.{metric}: measured drift "
+                        f"{bval} -> {fval} ({drift:.1%} > {MEASURED_RTOL:.0%})"
+                    )
+            elif drift > 1.0:
+                yield "warn", (
+                    f"{group}/{name}.{metric}: timing moved "
+                    f"{bval:.4g} -> {fval:.4g} (advisory)"
+                )
+        bsec, fsec = brec.get("seconds", 0.0), frec.get("seconds", 0.0)
+        if bsec > 0 and _rel_drift(bsec, fsec) > 1.0:
+            yield "warn", (
+                f"{group}/{name}: wall-clock {bsec * 1e6:.0f}us -> "
+                f"{fsec * 1e6:.0f}us (advisory)"
+            )
+    yield "ok", (
+        f"{group}: {len(base)} baseline records checked "
+        f"({len(set(fresh) - set(base))} fresh-only)"
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("groups", nargs="+",
+                    help="bench group names, e.g. kernels swap shard")
+    ap.add_argument("--baseline-dir", default=".",
+                    help="where committed BENCH_<group>.json baselines live")
+    ap.add_argument("--fresh-dir", required=True,
+                    help="where the fresh run wrote its BENCH_<group>.json")
+    args = ap.parse_args(argv)
+    failures = 0
+    for group in args.groups:
+        for severity, msg in compare_group(
+            group, args.baseline_dir, args.fresh_dir
+        ):
+            print(f"[{severity.upper()}] {msg}")
+            if severity == "fail":
+                failures += 1
+    if failures:
+        print(f"{failures} regression(s) vs committed baselines", file=sys.stderr)
+        return 1
+    print("perf trajectory OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

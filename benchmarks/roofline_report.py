@@ -1,5 +1,11 @@
 """Render the §Roofline table from results/dryrun/*.json (and emit summary
-CSV rows for benchmarks.run)."""
+CSV rows for benchmarks.run).
+
+The PT-kernel traffic section is fed by the same analytic model the fused
+kernels and their ≥5× traffic assertions use —
+`repro.hlo.traffic.hbm_bytes_per_cell_sweep` — so the report can never
+drift from the numbers the tests actually gate on.
+"""
 from __future__ import annotations
 
 import glob
@@ -7,6 +13,7 @@ import json
 import os
 
 from benchmarks.common import emit
+from repro.hlo.traffic import hbm_bytes_per_cell_sweep
 
 COLS = (
     "t_comp_s", "t_mem_s", "t_mem_analytic_s", "t_coll_s",
@@ -54,7 +61,70 @@ def markdown_table(rows, mesh="single") -> str:
     return "\n".join(out)
 
 
+# (system, per-cell uniform-plane bytes): one f32 plane per colour for Ising,
+# proposal + acceptance planes for Potts — same constants the kernels'
+# per-system wrappers pass when they delegate to the shared model.
+_KERNEL_SYSTEMS = (("ising", 8.0), ("potts", 16.0))
+_FUSE_SWEEPS = (1, 4, 16, 64)
+
+
+def kernel_traffic_rows():
+    """Modeled HBM traffic rows for the fused PT sweep kernels.
+
+    One row per (system, sweeps-per-interval) from the shared model —
+    these are the exact values `tests/test_kernels.py` asserts ≥5× on.
+    """
+    rows = []
+    for system, plane_bytes in _KERNEL_SYSTEMS:
+        unfused = hbm_bytes_per_cell_sweep(
+            fused=False, uniform_plane_bytes=plane_bytes
+        )
+        for s in _FUSE_SWEEPS:
+            fused = hbm_bytes_per_cell_sweep(
+                fused=True, sweeps_per_interval=s,
+                uniform_plane_bytes=plane_bytes,
+            )
+            rows.append({
+                "system": system, "sweeps_per_interval": s,
+                "unfused_bytes_per_cell_sweep": unfused,
+                "fused_bytes_per_cell_sweep": fused,
+                "traffic_reduction_x": unfused / fused,
+            })
+    return rows
+
+
+def kernel_traffic_markdown(rows) -> str:
+    out = [
+        "## Fused PT sweep kernels (modeled, `repro.hlo.traffic`)",
+        "",
+        "| system | sweeps/interval | unfused B/cell/sweep | fused B/cell/sweep | traffic x |",
+        "|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append(
+            "| {sys} | {s} | {u:.1f} | {f:.3f} | {x:.0f}x |".format(
+                sys=r["system"], s=r["sweeps_per_interval"],
+                u=r["unfused_bytes_per_cell_sweep"],
+                f=r["fused_bytes_per_cell_sweep"],
+                x=r["traffic_reduction_x"],
+            )
+        )
+    return "\n".join(out)
+
+
 def run(res_dir: str = "results/dryrun"):
+    os.makedirs("results", exist_ok=True)
+    krows = kernel_traffic_rows()
+    with open(os.path.join("results", "roofline_kernels.md"), "w") as f:
+        f.write(kernel_traffic_markdown(krows) + "\n")
+    for r in krows:
+        emit(
+            f"roofline_kernel_{r['system']}_s{r['sweeps_per_interval']}",
+            0.0,
+            f"unfused={r['unfused_bytes_per_cell_sweep']:.1f}B"
+            f";fused={r['fused_bytes_per_cell_sweep']:.3f}B"
+            f";x{r['traffic_reduction_x']:.0f}",
+        )
     rows = load(res_dir)
     if not rows:
         emit("roofline_report", 0.0, "no dryrun results found")
@@ -62,7 +132,6 @@ def run(res_dir: str = "results/dryrun"):
     for mesh in ("single", "multi"):
         md = markdown_table(rows, mesh)
         path = os.path.join("results", f"roofline_{mesh}.md")
-        os.makedirs("results", exist_ok=True)
         with open(path, "w") as f:
             f.write(md + "\n")
     done = [r for r in rows if "roofline" in r and r["mesh"] == "single"]

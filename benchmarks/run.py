@@ -8,6 +8,10 @@
   zoo           systems_bench.py    per-system sweep throughput (system zoo)
   ptlm          ptlm_bench.py       paper technique on the LM pool
   roofline      roofline_report.py  §Roofline tables from the dry-run JSONs
+  shard         shard_scaling.py    multi-device weak/strong scaling +
+                                    collective bytes (invoke the module
+                                    directly with --devices N for a
+                                    simulated multi-device mesh)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only fig7,...]
 """
@@ -23,7 +27,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import convergence, ptlm_bench, roofline_report, speedup
-    from benchmarks import swap_overhead, systems_bench, tile_sweep
+    from benchmarks import shard_scaling, swap_overhead, systems_bench, tile_sweep
 
     suites = {
         "fig3": convergence.run,
@@ -33,6 +37,7 @@ def main() -> None:
         "zoo": systems_bench.run,
         "ptlm": ptlm_bench.run,
         "roofline": roofline_report.run,
+        "shard": shard_scaling.run,
     }
     only = [s for s in args.only.split(",") if s]
     print("name,us_per_call,derived")

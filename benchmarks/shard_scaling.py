@@ -1,0 +1,172 @@
+"""Multi-device PT scaling: shard_map mega-step over a replica mesh.
+
+Weak and strong scaling of the sharded engine (DESIGN.md §Distributed) on a
+simulated host-device mesh: wall-clock per sweep and measured collective
+payload bytes per exchange (`repro.hlo.collectives`) vs device count, plus
+the capacity headline — a replica ladder whose fused-kernel VMEM working set
+exceeds a single chip's 16 MB budget running end-to-end once sharded, each
+shard comfortably inside budget.
+
+CPU wall-clock is not TPU wall-clock, but the *structure* carries: the
+collective bytes are exact (parsed from the compiled HLO, O(R) scalar rows
+per exchange), and the VMEM working-set model is the same one the tile
+sweep and the kernel tests use.  Rows land in ``BENCH_shard.json``
+(`benchmarks.common.write_bench_json`) — the perf-trajectory record
+`benchmarks/check_regression.py` gates CI against.
+
+Run with simulated devices (the flag must precede jax import; the
+``--devices`` preamble below handles it):
+
+    python -m benchmarks.shard_scaling --devices 8
+"""
+from __future__ import annotations
+
+import os as _os
+import sys as _sys
+
+if __name__ == "__main__" and "--devices" in _sys.argv:
+    # must land before jax is imported — the flag is read at backend init
+    _n = _sys.argv[_sys.argv.index("--devices") + 1]
+    _os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={_n}"
+    )
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import emit, time_call, write_bench_json
+from repro.core import ising, ladder
+from repro.core.distributed import MeshSpec
+from repro.engine import Engine, EngineConfig
+from repro.hlo.collectives import parse_collectives
+from repro.kernels.ising_sweep import vmem_working_set_bytes_fused
+
+GROUP = "shard"
+VMEM_BYTES = 16 * 2**20
+
+
+def _make_engine(r: int, length: int, n_dev: int, *, fused: bool = False):
+    cfg = EngineConfig(
+        n_replicas=r,
+        swap_interval=5,
+        chunk_intervals=4,
+        donate=False,  # timing loop re-runs the same state
+        mesh=None if n_dev == 1 else MeshSpec(ensemble=1, replica=n_dev),
+    )
+    params = {"length": length}
+    if fused:
+        params.update(use_fused=True, n_sweeps_fused=5)
+    system = ising.IsingSystem(**params)
+    eng = Engine(system, cfg)
+    state = eng.init(jax.random.key(7), np.asarray(ladder.paper_ladder(r)))
+    return eng, state
+
+
+def _measure(name: str, r: int, length: int, n_dev: int, sweeps: int):
+    eng, state = _make_engine(r, length, n_dev)
+    t = time_call(lambda st: eng.run(st, sweeps)[0].pt.energy, state, iters=3)
+    chunk = eng.config.chunk_intervals
+    st = parse_collectives(eng._compiled(state, chunk).as_text())
+    bytes_per_exchange = st.payload_bytes / chunk
+    emit(
+        name, t,
+        f"devices={n_dev};R={r};L={length};sweeps={sweeps}"
+        f";us_per_sweep={t / sweeps * 1e6:.1f}"
+        f";coll_B_per_exchange={bytes_per_exchange:.0f}",
+        group=GROUP,
+        metrics={
+            "n_devices": n_dev, "n_replicas": r, "length": length,
+            "sweeps": sweeps, "us_per_sweep": t / sweeps * 1e6,
+            "collective_bytes_per_exchange": bytes_per_exchange,
+            "collective_wire_bytes_per_chunk": st.wire_bytes,
+        },
+    )
+
+
+def _device_counts():
+    n = jax.device_count()
+    return [d for d in (1, 2, 4, 8) if d <= n]
+
+
+def run_weak(r_per_device: int = 8, length: int = 16, sweeps: int = 100):
+    """Weak scaling: R grows with the mesh, shard size held fixed."""
+    for d in _device_counts():
+        _measure(f"weak_d{d}", r_per_device * d, length, d, sweeps)
+
+
+def run_strong(r: int = 16, length: int = 16, sweeps: int = 100):
+    """Strong scaling: fixed ladder spread over more devices."""
+    for d in _device_counts():
+        if r % d:
+            continue
+        _measure(f"strong_d{d}", r, length, d, sweeps)
+
+
+def run_capacity(length: int = 128, r: int = 64, sweeps: int = 10):
+    """A ladder too big for one chip's VMEM runs end-to-end sharded.
+
+    The fused-kernel working set for the whole ladder exceeds the 16 MB
+    single-chip budget; split over the replica mesh each shard fits.  The
+    run itself uses the default per-sweep path (this container has no real
+    TPU), but the budget numbers are the same static model the tile sweep
+    and kernel tests use, and the sharded mega-step is the real engine.
+    """
+    n_dev = jax.device_count()
+    if n_dev < 2:
+        emit("capacity_skipped", 0.0, "needs >=2 devices", group=GROUP)
+        return
+    ws_single = vmem_working_set_bytes_fused(r, length)
+    ws_shard = vmem_working_set_bytes_fused(r // n_dev, length)
+    if ws_single <= VMEM_BYTES:
+        emit(
+            "capacity_skipped", 0.0,
+            f"R={r},L={length} fits one chip ({ws_single}B); raise sizes",
+            group=GROUP,
+        )
+        return
+    eng, state = _make_engine(r, length, n_dev)
+    t = time_call(lambda st: eng.run(st, sweeps)[0].pt.energy, state,
+                  warmup=1, iters=1)
+    emit(
+        "capacity_beyond_vmem", t,
+        f"devices={n_dev};R={r};L={length};vmem_single={ws_single}"
+        f";vmem_shard={ws_shard};budget={VMEM_BYTES}",
+        group=GROUP,
+        metrics={
+            "n_devices": n_dev, "n_replicas": r, "length": length,
+            "vmem_bytes_single_chip": ws_single,
+            "vmem_bytes_per_shard": ws_shard,
+            "exceeds_single_chip": float(ws_single > VMEM_BYTES),
+            "shard_fits": float(ws_shard <= VMEM_BYTES),
+        },
+    )
+
+
+def run(r_per_device: int = 8, length: int = 16, sweeps: int = 100,
+        out_dir=None):
+    run_weak(r_per_device=r_per_device, length=length, sweeps=sweeps)
+    run_strong(r=2 * r_per_device, length=length, sweeps=sweeps)
+    run_capacity()
+    path = write_bench_json(GROUP, out_dir)
+    print(f"# wrote {path}", flush=True)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--devices", type=int, default=0,
+                    help="simulate N host devices (sets "
+                         "--xla_force_host_platform_device_count before "
+                         "jax is imported)")
+    ap.add_argument("--r-per-device", type=int, default=8)
+    ap.add_argument("--length", type=int, default=16)
+    ap.add_argument("--sweeps", type=int, default=100)
+    ap.add_argument("--out-dir", default=None,
+                    help="where BENCH_shard.json lands (default: "
+                         "$BENCH_OUT_DIR or .)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(r_per_device=args.r_per_device, length=args.length,
+        sweeps=args.sweeps, out_dir=args.out_dir)

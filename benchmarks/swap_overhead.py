@@ -14,8 +14,24 @@ Runs through the chunked engine; acceptance and round-trip columns come from
 the O(R) online counters (`repro.engine.stats`) — no trace is materialized.
 Rows land in ``BENCH_swap.json`` via `benchmarks.common.write_bench_json`
 (the perf-trajectory record CI uploads on every PR).
+
+With ``--devices N`` (or >=2 devices already visible) the suite also
+compiles the *sharded* mega-step per exchange strategy and reports measured
+collective payload bytes per exchange from the compiled HLO
+(`repro.hlo.collectives`), asserting temp-mode DEO/SEO swap traffic is O(R)
+— independent of the lattice size, no (L, L) block on the wire.
 """
 from __future__ import annotations
+
+import os as _os
+import sys as _sys
+
+if __name__ == "__main__" and "--devices" in _sys.argv:
+    # must land before jax is imported — the flag is read at backend init
+    _n = _sys.argv[_sys.argv.index("--devices") + 1]
+    _os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={_n}"
+    )
 
 import numpy as np
 
@@ -111,10 +127,76 @@ def run_strategies(r: int = 16, length: int = 16, sweeps: int = 4000):
         )
 
 
-def run(r: int = 64, length: int = 32, sweeps: int = 1000, out_dir=None):
+def run_collectives(r: int = 8, length: int = 8, devices: int = 0):
+    """Measured collective payload per exchange on the sharded mega-step.
+
+    Compiles the shard_map chunk for every exchange strategy on a (1, D)
+    replica mesh and parses the compiled HLO for collective payload bytes
+    (`repro.hlo.collectives.parse_collectives`).  The O(R) claim is checked
+    structurally: the payload must be *identical* when the lattice side
+    doubles — only O(R) energy/rung rows may cross the interconnect, never
+    an (L, L) lattice block.  Temp-mode DEO/SEO assert on this; every
+    strategy reports it.
+    """
+    from repro.core.distributed import MeshSpec
+    from repro.hlo.collectives import parse_collectives
+
+    n_dev = devices or jax.device_count()
+    n_dev = min(n_dev, jax.device_count())
+    if n_dev < 2:
+        emit(
+            "collectives_skipped", 0.0,
+            f"need >=2 devices (have {jax.device_count()}); rerun with "
+            "--devices N (sets --xla_force_host_platform_device_count)",
+            group=GROUP,
+        )
+        return
+    r = max(r, n_dev) // n_dev * n_dev  # replica axis must divide evenly
+    interval, chunk = 4, 3
+
+    def stats_for(name: str, side: int):
+        cfg = EngineConfig(
+            n_replicas=r, swap_interval=interval, chunk_intervals=chunk,
+            donate=False, exchange=name,
+            mesh=MeshSpec(ensemble=1, replica=n_dev),
+        )
+        eng = Engine(ising.IsingSystem(length=side), cfg)
+        state = eng.init(jax.random.key(3), np.asarray(ladder.paper_ladder(r)))
+        return parse_collectives(eng._compiled(state, chunk).as_text())
+
+    for name in available_strategies():
+        st = stats_for(name, length)
+        st2 = stats_for(name, 2 * length)
+        per_exchange = st.payload_bytes / chunk
+        l_independent = st.payload_bytes == st2.payload_bytes
+        if name in ("deo", "seo"):
+            assert l_independent, (
+                f"{name}: collective payload grew with the lattice "
+                f"({st.payload_bytes:.0f} -> {st2.payload_bytes:.0f} B/chunk)"
+                " — a lattice-sized block is crossing the interconnect"
+            )
+        ops = ",".join(f"{k}:{v:.0f}" for k, v in sorted(st.by_op.items()))
+        emit(
+            f"collectives_{name}", 0.0,
+            f"devices={n_dev};R={r};B_per_exchange={per_exchange:.0f}"
+            f";ops={ops};L_independent={l_independent}",
+            group=GROUP,
+            metrics={
+                "n_devices": n_dev, "n_replicas": r,
+                "payload_bytes_per_exchange": per_exchange,
+                "wire_bytes_per_chunk": st.wire_bytes,
+                "collective_count": float(st.count),
+                "lattice_independent": float(l_independent),
+            },
+        )
+
+
+def run(r: int = 64, length: int = 32, sweeps: int = 1000, out_dir=None,
+        devices: int = 0):
     run_intervals(r=r, length=length, sweeps=sweeps)
     # strategy rows scale off the same knobs so the CI smoke run stays tiny
     run_strategies(r=max(4, r // 4), length=min(length, 16), sweeps=4 * sweeps)
+    run_collectives(r=min(r, 8), length=min(length, 8), devices=devices)
     path = write_bench_json(GROUP, out_dir)
     print(f"# wrote {path}", flush=True)
 
@@ -126,9 +208,13 @@ if __name__ == "__main__":
     ap.add_argument("--replicas", type=int, default=64)
     ap.add_argument("--length", type=int, default=32)
     ap.add_argument("--sweeps", type=int, default=1000)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="simulate N host devices for the sharded-collective "
+                         "rows (sets --xla_force_host_platform_device_count "
+                         "before jax is imported)")
     ap.add_argument("--out-dir", default=None,
                     help="where BENCH_swap.json lands (default: $BENCH_OUT_DIR or .)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     run(r=args.replicas, length=args.length, sweeps=args.sweeps,
-        out_dir=args.out_dir)
+        out_dir=args.out_dir, devices=args.devices)

@@ -35,6 +35,19 @@ __all__ = ["main"]
 def _cmd_run(args) -> int:
     with open(args.spec) as f:
         spec = RunSpec.from_json(f.read())
+    if args.mesh_chains > 0 or args.mesh_replicas > 0:
+        # command-line mesh override: run the same spec sharded without
+        # editing the JSON (simulate devices on CPU with
+        # XLA_FLAGS=--xla_force_host_platform_device_count=N)
+        from repro.core.distributed import MeshSpec
+
+        mesh = MeshSpec(
+            ensemble=max(args.mesh_chains, 1),
+            replica=max(args.mesh_replicas, 1),
+        )
+        spec = dataclasses.replace(
+            spec, engine=dataclasses.replace(spec.engine, mesh=mesh)
+        )
     out = args.out or os.path.join(
         "runs", os.path.splitext(os.path.basename(args.spec))[0]
     )
@@ -194,6 +207,12 @@ def build_parser() -> argparse.ArgumentParser:
                    help="chunks between checkpoints")
     p.add_argument("--progress-every", type=int, default=10,
                    help="chunks between progress lines")
+    p.add_argument("--mesh-chains", type=int, default=0, metavar="E",
+                   help="shard whole chains over E devices (MeshSpec "
+                        "ensemble axis; overrides the spec's engine.mesh)")
+    p.add_argument("--mesh-replicas", type=int, default=0, metavar="D",
+                   help="shard the replica axis over D devices (MeshSpec "
+                        "replica axis; overrides the spec's engine.mesh)")
     p.add_argument("--quiet", action="store_true")
     p.set_defaults(fn=_cmd_run)
 

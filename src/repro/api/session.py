@@ -292,7 +292,6 @@ class Session:
         self,
         spec: RunSpec,
         callbacks: Sequence[Callback] = (),
-        shard=None,
     ):
         self.spec = spec
         self.callbacks = list(callbacks)
@@ -306,7 +305,6 @@ class Session:
                 spec.ladder.n_replicas, exchange=spec.exchange.build()
             ),
             observables=self.observables,
-            shard=shard,
             # Engine.adapt is toggled per phase; constructing with it also
             # validates it against the engine config (track_stats etc.).
             adapt=self._adapt,
@@ -334,7 +332,6 @@ class Session:
         cls,
         directory: str,
         callbacks: Sequence[Callback] = (),
-        shard=None,
     ) -> "Session":
         """Rebuild a Session from ``(spec.json, newest checkpoint)`` alone.
 
@@ -351,7 +348,7 @@ class Session:
         if data is None:
             raise FileNotFoundError(f"no spec.json in {directory!r}")
         spec = RunSpec.from_json(data)
-        session = cls(spec, callbacks=callbacks, shard=shard)
+        session = cls(spec, callbacks=callbacks)
         out = session.engine.restore(manager)
         if out is None:
             raise FileNotFoundError(f"no restorable checkpoint in {directory!r}")

@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core import ladder as ladder_lib
 from repro.core import systems as systems_lib
+from repro.core.distributed import MeshSpec
 from repro.engine import AdaptConfig, EngineConfig
 from repro.engine.adapt import ADAPT_MODES
 from repro.exchange import available_strategies, make_strategy
@@ -195,7 +196,14 @@ class LadderSpec:
 class EngineSpec:
     """Execution knobs — a serializable mirror of `repro.engine.EngineConfig`
     (minus ``n_replicas``, which the ladder owns, and ``exchange``, which
-    `ExchangeSpec` owns)."""
+    `ExchangeSpec` owns).
+
+    ``mesh`` (optional) selects the explicit multi-device shard_map path:
+    a nested `repro.core.distributed.MeshSpec` — two ints, ``ensemble``
+    devices over whole chains times ``replica`` devices over the rung
+    population.  Serialized as ``{"ensemble": E, "replica": D}``; null keeps
+    the single-device path.
+    """
 
     swap_interval: int = 100
     criterion: str = "logistic"
@@ -206,6 +214,7 @@ class EngineSpec:
     track_stats: bool = True
     measure_interval: int = 100
     donate: bool = True
+    mesh: MeshSpec | None = None
 
     def __post_init__(self):
         if self.criterion not in ("logistic", "metropolis"):
@@ -218,8 +227,14 @@ class EngineSpec:
                 f"unknown swap_mode {self.swap_mode!r}; "
                 "allowed: ['state', 'temp']"
             )
+        if self.mesh is not None and not isinstance(self.mesh, MeshSpec):
+            object.__setattr__(
+                self, "mesh", _from_dict(MeshSpec, self.mesh, "engine.mesh")
+            )
 
     def build(self, n_replicas: int, exchange=None) -> EngineConfig:
+        # asdict flattens the nested MeshSpec to its dict form;
+        # EngineConfig.__post_init__ coerces it back
         return EngineConfig(
             n_replicas=n_replicas, exchange=exchange, **dataclasses.asdict(self)
         )

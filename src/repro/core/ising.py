@@ -198,20 +198,24 @@ class IsingSystem:
         )
 
     # -- fused whole-interval fast path (used when use_fused=True) -----------
-    def batched_mcmc_interval(self, key, t, spins, betas, *, n_sweeps):
+    def batched_mcmc_interval(self, key, t, spins, betas, *, n_sweeps,
+                              replica_offset=0):
         """``n_sweeps`` replica-batched sweeps in one fused launch.
 
         ``key`` is the chain's root PRNG key and ``t`` the global sweep
         counter at interval entry; the counter PRNG derives every uniform
         from ``(key, t + sweep, replica, colour)``, so the result is
         independent of chunking and of how intervals were grouped into
-        calls.  Returns ``(spins', delta_e, n_accepted)`` summed over the
-        interval.
+        calls.  ``replica_offset`` (traced uint32 scalar) is the global
+        index of local replica 0 when the replica axis is sharded across a
+        device mesh — the counter streams stay those of the global slots.
+        Returns ``(spins', delta_e, n_accepted)`` summed over the interval.
         """
         from repro.kernels import ops as kops
 
         return kops.ising_sweep_fused(
-            spins, key, t, betas, n_sweeps=n_sweeps, j=self.j, b=self.b,
+            spins, key, t, betas, n_sweeps=n_sweeps,
+            replica_offset=replica_offset, j=self.j, b=self.b,
             rule=self.accept_rule, r_blk=self.r_blk,
             use_pallas=self.use_pallas,
         )

@@ -132,13 +132,15 @@ class PottsSystem:
         )
 
     # -- fused whole-interval fast path (used when use_fused=True) -----------
-    def batched_mcmc_interval(self, key, t, states, betas, *, n_sweeps):
+    def batched_mcmc_interval(self, key, t, states, betas, *, n_sweeps,
+                              replica_offset=0):
         """``n_sweeps`` replica-batched sweeps in one fused launch (see
         `repro.core.ising.IsingSystem.batched_mcmc_interval`)."""
         from repro.kernels import ops as kops
 
         return kops.potts_sweep_fused(
-            states, key, t, betas, n_sweeps=n_sweeps, q=self.q, j=self.j,
+            states, key, t, betas, n_sweeps=n_sweeps, q=self.q,
+            replica_offset=replica_offset, j=self.j,
             rule=self.accept_rule, r_blk=self.r_blk,
             use_pallas=self.use_pallas,
         )

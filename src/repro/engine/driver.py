@@ -20,12 +20,18 @@ restructures the execution for unbounded runs (DESIGN.md §1):
   retune the ladder between chunks with zero recompiles;
 * **ensemble axis** — the mega-step `vmap`s over ``n_chains`` independent
   chains ``(C, R, ...)``; chain ``c`` draws its PRNG stream from
-  ``fold_in(key, c)`` so its results are invariant to the ensemble size.
-  ``shard`` composes with the axis by moving up one level: with one chain it
-  pins the replica axis (`repro.core.distributed.replica_sharding`); with an
-  ensemble it pins the leading *chain* axis — each device owns whole chains,
-  the embarrassingly parallel layout that saturates a mesh from one launch
-  with zero cross-chain communication.
+  ``fold_in(key, c)`` so its results are invariant to the ensemble size;
+* **explicit multi-device placement** — `EngineConfig.mesh`
+  (`repro.core.distributed.MeshSpec`) runs the mega-step through an explicit
+  `shard_map` over a named (``chains`` x ``replicas``) device mesh instead
+  of GSPMD constraint hints.  Each device advances its local replica block
+  with zero communication (fused kernels run per-shard with global-slot
+  counter streams via ``replica_offset``); the exchange step is
+  device-resident — only the O(R) energy/rung rows are all-gathered, the
+  full-ladder swap decision is recomputed redundantly on every device from
+  identical inputs, and temp-mode swaps move *no lattice state*.  That
+  redundancy is what keeps the sharded mega-step bit-equal to the
+  single-device path at identical seeds.
 
 PRNG streams are identical to the seed driver (keys derive from the state's
 global sweep counter), so a fixed-ladder chunked run is bit-equal to the
@@ -39,7 +45,11 @@ from typing import Any, Callable, Mapping
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import distributed as dist_lib
+from repro.core.distributed import CHAIN_AXIS, MeshSpec, REPLICA_AXIS
 from repro.core.pt import PTState, init_replicas as pt_init_replicas
 from repro.core.systems import System
 from repro.engine import stats as stats_lib
@@ -55,6 +65,7 @@ __all__ = [
     "AdaptInfo",
     "Engine",
     "make_interval_step",
+    "make_sharded_interval_step",
 ]
 
 
@@ -277,6 +288,147 @@ def make_interval_step(
     return interval_step
 
 
+# -- sharded interval step: the shard_map per-device body ----------------------
+
+
+def _observe_full(observables, st_local: PTState, full: PTState):
+    """`_observe` on a device's full-row view of a sharded state.
+
+    ``full`` carries the all-gathered (R,) energy/rung rows; per-replica
+    observables are evaluated on the *local* lattice block and all-gathered
+    as O(R) scalar rows — lattices never cross devices.
+    """
+    inv = jnp.argsort(full.rung)
+    out = {"energy": full.energy[inv]}
+    for name, fn in (observables or {}).items():
+        vals = jax.lax.all_gather(
+            jax.vmap(fn)(st_local.states), REPLICA_AXIS, tiled=True
+        )
+        out[name] = vals[inv]
+    return out
+
+
+def make_sharded_interval_step(
+    system: System,
+    spec: StepSpec,
+    observables: Mapping[str, Callable] | None = None,
+):
+    """Per-device interval body for the `shard_map` mega-step.
+
+    Semantics match `make_interval_step` exactly — same record contract,
+    same PRNG streams — but expressed per replica shard:
+
+    * **sweeps**: each device advances its contiguous slot block
+      ``[off, off + R_local)`` with the *global* slot indices folded into the
+      per-replica keys (and ``replica_offset`` into the fused kernels'
+      counter PRNG), so local streams are bit-identical to the single-device
+      launch;
+    * **exchange (device-resident)**: one `all_gather` each of the (R,)
+      energy and rung rows — O(R) scalars, the module docstring's
+      O(R·L²) → O(R) reduction — then the full-ladder `_swap_decision` is
+      recomputed *redundantly* on every device from identical inputs (same
+      ``fold_in(key, 2t+1)`` swap key), and each device slices its block of
+      the new rung assignment back out.  Temp-mode swaps therefore move no
+      lattice state between devices.  DEO/SEO/windowed/VMPT all ride the
+      same gathered row, differing only in how they consume it.
+
+    Returns ``step(st_local, betas) -> (st_local, record, rung_full)`` where
+    ``record`` holds full (R,) rung-ordered rows (replicated along the
+    replica axis) and ``rung_full`` is the post-swap slot->rung map the
+    redundant stats update keys on.
+    """
+    observables = dict(observables or {})
+    recycle = spec.do_swap and spec.exchange.n_virtual > 1
+    fused = _batched_interval(system)
+    r = spec.n_replicas
+
+    def gather(x):
+        return jax.lax.all_gather(x, REPLICA_AXIS, tiled=True)
+
+    def step(st: PTState, betas):
+        r_local = st.energy.shape[0]
+        start = jax.lax.axis_index(REPLICA_AXIS) * r_local
+        offset = start.astype(jnp.uint32)
+        if fused is not None:
+            states, de, _ = fused(
+                st.key, st.t, st.states, betas[st.rung],
+                n_sweeps=spec.sweeps_per_interval, replica_offset=offset,
+            )
+            st = dataclasses.replace(
+                st,
+                states=states,
+                energy=st.energy + de.astype(jnp.float32),
+                t=st.t + spec.sweeps_per_interval,
+            )
+        else:
+            def sweep_body(s, _):
+                # global slot ids into fold_in: slot k's stream is invariant
+                # to how the replica axis is carved up
+                keys = jax.vmap(jax.random.fold_in, (None, 0))(
+                    jax.random.fold_in(s.key, 2 * s.t),
+                    offset + jnp.arange(r_local, dtype=jnp.uint32),
+                )
+                states, de, _ = _batched_step(system)(keys, s.states, betas[s.rung])
+                return dataclasses.replace(
+                    s,
+                    states=states,
+                    energy=s.energy + de.astype(jnp.float32),
+                    t=s.t + 1,
+                ), None
+
+            st, _ = jax.lax.scan(
+                sweep_body, st, None, length=spec.sweeps_per_interval
+            )
+
+        # device-resident exchange: gather the O(R) scalar rows, nothing else
+        full = dataclasses.replace(
+            st, energy=gather(st.energy), rung=gather(st.rung)
+        )
+
+        def pull_back(local: PTState, full_after: PTState) -> PTState:
+            new_rung = jax.lax.dynamic_slice_in_dim(
+                full_after.rung, start, r_local
+            )
+            local = dataclasses.replace(
+                local, rung=new_rung, phase=full_after.phase
+            )
+            if spec.swap_mode == "state":
+                # only reachable with a 1-way replica axis (Engine guards):
+                # the full rows ARE the local rows, lattices moved locally
+                local = dataclasses.replace(
+                    local, states=full_after.states, energy=full_after.energy
+                )
+            return local
+
+        if recycle:
+            partner, perm, swap_diag = _swap_decision(spec, betas, full)
+            weights = spec.exchange.estimator_weights(
+                partner, swap_diag["swap_prob"]
+            )
+            pre = _observe_full(observables, st, full)
+            rec = {k: jnp.stack([v, v[partner]]) for k, v in pre.items()}
+            rec["est_weight"] = weights
+            full = _apply_swap(spec, full, perm)
+            st = pull_back(st, full)
+        else:
+            if spec.do_swap:
+                _, perm, swap_diag = _swap_decision(spec, betas, full)
+                full = _apply_swap(spec, full, perm)
+                st = pull_back(st, full)
+            else:
+                z = jnp.zeros((r,))
+                swap_diag = {
+                    "swap_accept": z.astype(bool),
+                    "swap_prob": z,
+                    "swap_attempt": z.astype(bool),
+                }
+            rec = dict(_observe_full(observables, st, full))
+        rec.update(swap_diag)
+        return st, rec, full.rung
+
+    return step
+
+
 # -- engine configuration and state -------------------------------------------
 
 
@@ -304,6 +456,12 @@ class EngineConfig:
         instance, a registered strategy name ("deo"/"seo"/"windowed"/
         "vmpt"), or None for the default `DEO` (the paper's scheme,
         bit-equal to the pre-strategy swap path).
+      mesh: `repro.core.distributed.MeshSpec` (or its dict form) selecting
+        the explicit shard_map mega-step over an (ensemble x replica) device
+        mesh; None (default) keeps the single-device path.  Requires
+        ``n_chains % mesh.ensemble == 0``, ``n_replicas % mesh.replica == 0``
+        and — with ``mesh.replica > 1`` — ``swap_mode='temp'`` (state-mode
+        swaps would move O(R·L²) lattice bytes per exchange).
     """
 
     n_replicas: int
@@ -317,6 +475,7 @@ class EngineConfig:
     measure_interval: int = 100
     donate: bool = True
     exchange: Any = None
+    mesh: Any = None
 
     def __post_init__(self):
         if self.chunk_intervals < 1:
@@ -326,6 +485,18 @@ class EngineConfig:
         # resolve names eagerly so a bad strategy fails at config time, not
         # deep inside the first compiled chunk
         object.__setattr__(self, "exchange", make_strategy(self.exchange))
+        # accept the MeshSpec's dict form (dataclasses.asdict round-trips
+        # through api.spec flatten nested dataclasses into dicts)
+        if isinstance(self.mesh, Mapping):
+            object.__setattr__(self, "mesh", MeshSpec(**self.mesh))
+        if self.mesh is not None:
+            self.mesh.validate(self.n_replicas, self.n_chains)
+            if self.mesh.replica > 1 and self.swap_mode != "temp":
+                raise ValueError(
+                    "swap_mode='state' exchanges O(R*L^2) lattice state and "
+                    "is not supported across a sharded replica axis; use "
+                    "swap_mode='temp' or mesh.replica=1"
+                )
 
     @property
     def spec(self) -> StepSpec:
@@ -438,7 +609,6 @@ class Engine:
         system: System,
         config: EngineConfig,
         observables: Mapping[str, Callable] | None = None,
-        shard=None,
         adapt: AdaptConfig | None = None,
     ):
         if adapt is not None and not config.track_stats:
@@ -455,8 +625,10 @@ class Engine:
         self.system = system
         self.config = config
         self.observables = dict(observables or {})
-        self.shard = shard
         self.adapt = adapt
+        # the concrete device mesh is engine state, not config: MeshSpec is
+        # pure shape (serializable through RunSpec), build() binds devices
+        self._mesh = None if config.mesh is None else config.mesh.build()
         self._names = ["energy"] + sorted(self.observables)
         self._executables: dict[int, Any] = {}
         # retune count for AdaptConfig.max_rounds — per Engine (i.e. per
@@ -479,10 +651,7 @@ class Engine:
     # -- state construction ----------------------------------------------------
     def _init_single(self, key: jax.Array) -> PTState:
         # one chain = seed init verbatim (keeps pt-vs-engine bit-equality)
-        shard = self.shard if self.config.n_chains == 1 else None
-        return pt_init_replicas(
-            self.system, self.config.n_replicas, key, shard=shard
-        )
+        return pt_init_replicas(self.system, self.config.n_replicas, key)
 
     def init(self, key: jax.Array, temps) -> EngineState:
         """Fresh engine state on the given temperature ladder.
@@ -496,6 +665,14 @@ class Engine:
             raise ValueError(
                 f"ladder shape {temps.shape} != (n_replicas={self.config.n_replicas},)"
             )
+        self._temps = temps.copy()
+        # a fresh state restarts the swap counters at zero — stale window
+        # baselines from a previous state would starve the feedback loop
+        self._adapt_state = None
+        return self.place(self._fresh_state(key, temps))
+
+    def _fresh_state(self, key: jax.Array, temps) -> EngineState:
+        """`init` minus placement/host bookkeeping (eval_shape-safe)."""
         c = self.config.n_chains
         if c == 1:
             pt_st = self._init_single(key)
@@ -504,16 +681,33 @@ class Engine:
                 key, jnp.arange(c, dtype=jnp.uint32)
             )
             pt_st = jax.vmap(self._init_single)(keys)
-            pt_st = self._constrain_chain_axis(pt_st)
         stats = stats_lib.init_stats(
             self.config.n_replicas, self._names, n_chains=0 if c == 1 else c
         )
-        self._temps = temps.copy()
-        # a fresh state restarts the swap counters at zero — stale window
-        # baselines from a previous state would starve the feedback loop
-        self._adapt_state = None
-        betas = jnp.asarray(1.0 / temps, jnp.float32)
+        betas = jnp.asarray(1.0 / np.asarray(temps, np.float64), jnp.float32)
         return EngineState(pt=pt_st, stats=stats, betas=betas)
+
+    def place(self, state: EngineState) -> EngineState:
+        """Commit the state onto the mesh placement contract (DESIGN.md
+        §Distributed); identity without a configured mesh.
+
+        Placement is explicit `jax.device_put` with `NamedSharding`s — not a
+        lazy constraint hint — so the AOT-lowered mega-step sees committed
+        input shardings and never falls back to partitioner guessing.
+        """
+        if self._mesh is None:
+            return state
+        c = self.config.n_chains
+        sh = EngineState(
+            pt=dist_lib.named_shardings(
+                self._mesh, dist_lib.pt_partition_specs(state.pt, c)
+            ),
+            stats=dist_lib.named_shardings(
+                self._mesh, dist_lib.replicated_partition_specs(state.stats, c)
+            ),
+            betas=NamedSharding(self._mesh, P(None)),
+        )
+        return jax.device_put(state, sh)
 
     def reset_stats(self, state: EngineState) -> EngineState:
         """Zero the online accumulators (e.g. after burn-in).
@@ -532,34 +726,14 @@ class Engine:
             # window baselines with them or the window goes negative and the
             # feedback loop starves forever
             self._adapt_state.zero()
-        return dataclasses.replace(state, stats=stats)
-
-    def _constrain_chain_axis(self, tree):
-        """Pin the leading chain axis of every (C, ...) leaf to ``shard``.
-
-        With an ensemble, ``shard`` distributes whole chains over the mesh
-        (the replica-axis PartitionSpec applied one axis up); without a
-        shard this is a no-op.
-        """
-        if self.shard is None:
-            return tree
-
-        def con(x):
-            if getattr(x, "ndim", 0) >= 1:
-                return jax.lax.with_sharding_constraint(x, self.shard)
-            return x
-
-        return jax.tree_util.tree_map(con, tree)
+        return self.place(dataclasses.replace(state, stats=stats))
 
     # -- compiled mega-step ----------------------------------------------------
-    def _make_mega(self, chunk_len: int):
+    def _make_mega(self, chunk_len: int, state: EngineState):
         cfg = self.config
-        step = make_interval_step(
-            self.system,
-            cfg.spec,
-            self.observables,
-            self.shard if cfg.n_chains == 1 else None,
-        )
+        if self._mesh is not None:
+            return self._make_mega_sharded(chunk_len, state)
+        step = make_interval_step(self.system, cfg.spec, self.observables)
 
         def mega(pt_st, stats, betas):
             def body(carry, _):
@@ -575,23 +749,52 @@ class Engine:
             return pt_st, stats, trace
 
         if cfg.n_chains > 1:
-            vmega = jax.vmap(mega, in_axes=(0, 0, None))
-            if self.shard is None:
-                return vmega
-
-            def mega(pt_st, stats, betas):
-                # keep the chain axis pinned through the host loop — the
-                # constraint can't live inside the vmapped scan, but anchoring
-                # the program boundary stops the partitioner replicating the
-                # ensemble (same failure mode as the replica-axis note above)
-                pt_st, stats, trace = vmega(pt_st, stats, betas)
-                return (
-                    self._constrain_chain_axis(pt_st),
-                    self._constrain_chain_axis(stats),
-                    trace,
-                )
-
+            mega = jax.vmap(mega, in_axes=(0, 0, None))
         return mega
+
+    def _make_mega_sharded(self, chunk_len: int, state: EngineState):
+        """The chunk program as an explicit `shard_map` over the device mesh.
+
+        The whole chunk scan runs inside one shard_map region, so the only
+        cross-device traffic in the compiled program is the per-interval
+        O(R) energy/rung/observable all-gathers (`make_sharded_interval_step`)
+        — verifiable by `repro.hlo.collectives.parse_collectives` on the
+        lowered text.  ``check_rep=False``: replicated outputs (stats, phase,
+        t) are *computed* redundantly from identical inputs, which the static
+        replication checker cannot prove.
+        """
+        cfg = self.config
+        step = make_sharded_interval_step(self.system, cfg.spec, self.observables)
+
+        def chain_mega(pt_st, stats, betas):
+            def body(carry, _):
+                pt_st, stats = carry
+                pt_st, rec, rung_full = step(pt_st, betas)
+                if cfg.track_stats:
+                    stats = stats_lib.update_stats(stats, rec, rung_full)
+                return (pt_st, stats), (rec if cfg.record_trace else None)
+
+            (pt_st, stats), trace = jax.lax.scan(
+                body, (pt_st, stats), None, length=chunk_len
+            )
+            return pt_st, stats, trace
+
+        fn = chain_mega
+        if cfg.n_chains > 1:
+            # local chains only: the ensemble axis is carved by shard_map,
+            # vmap batches over this device's C / ensemble chains
+            fn = jax.vmap(chain_mega, in_axes=(0, 0, None))
+
+        pt_specs = dist_lib.pt_partition_specs(state.pt, cfg.n_chains)
+        stats_specs = dist_lib.replicated_partition_specs(state.stats, cfg.n_chains)
+        trace_spec = P(CHAIN_AXIS) if cfg.n_chains > 1 else P()
+        return shard_map(
+            fn,
+            mesh=self._mesh,
+            in_specs=(pt_specs, stats_specs, P(None)),
+            out_specs=(pt_specs, stats_specs, trace_spec),
+            check_rep=False,
+        )
 
     def _compiled(self, state: EngineState, chunk_len: int):
         """AOT executable for a chunk of ``chunk_len`` intervals.
@@ -606,7 +809,7 @@ class Engine:
                 lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=getattr(x, "sharding", None)), tree
             )
             donate = (0, 1) if self.config.donate else ()
-            jitted = jax.jit(self._make_mega(chunk_len), donate_argnums=donate)
+            jitted = jax.jit(self._make_mega(chunk_len, state), donate_argnums=donate)
             exe = jitted.lower(
                 sds(state.pt), sds(state.stats), sds(state.betas)
             ).compile()
@@ -655,6 +858,9 @@ class Engine:
             )
         n_intervals = n_sweeps // spi
         many = self.config.n_chains > 1
+        # commit placement before the first donated call: an externally
+        # built/restored state may still live on the default device
+        state = self.place(state)
         temps = self._temps
         if temps is None or not np.array_equal(
             np.asarray(state.betas), (1.0 / temps).astype(np.float32)
@@ -722,11 +928,11 @@ class Engine:
                         mean=zeros(state.stats.mean),
                         m2=zeros(state.stats.m2),
                     )
-                    state = dataclasses.replace(
+                    state = self.place(dataclasses.replace(
                         state,
                         stats=stats,
                         betas=jnp.asarray(1.0 / temps, jnp.float32),
-                    )
+                    ))
                     if on_adapt is not None:
                         on_adapt(AdaptInfo(
                             round=adapt_st.rounds,
@@ -808,7 +1014,9 @@ class Engine:
         as saved (including any mid-run adaptation).
         """
         temps = np.full((self.config.n_replicas,), 1.0, np.float32)
-        shapes = jax.eval_shape(lambda k: self.init(k, temps), jax.random.key(0))
+        shapes = jax.eval_shape(
+            lambda k: self._fresh_state(k, temps), jax.random.key(0)
+        )
 
         def materialize(s):
             if jax.dtypes.issubdtype(s.dtype, jax.dtypes.prng_key):
@@ -819,4 +1027,7 @@ class Engine:
         out = checkpoint.restore_latest(template)
         if out is None:
             return None
-        return out
+        state, meta = out
+        # checkpoints are mesh-shape independent (gathered numpy on save);
+        # re-commit onto THIS engine's placement, whatever mesh wrote them
+        return self.place(state), meta

@@ -80,8 +80,14 @@ def parse_collectives(hlo_text: str) -> CollectiveStats:
         d = _DEF_RE.match(ln)
         if d:
             name, rhs = d.groups()
-            # the type is the prefix of rhs before the opcode
-            name_type[name] = rhs.split(" ")[0] if rhs.startswith("(") else rhs
+            # the type is the prefix of rhs before the opcode; defs like
+            # get-tuple-element print their operand's full tuple type inline,
+            # so keeping the whole rhs would charge the collective for every
+            # buffer in the loop-carry tuple
+            if rhs.startswith("("):
+                name_type[name] = rhs.split(") ")[0] + ")"
+            else:
+                name_type[name] = rhs.split(" ")[0]
     # while instructions: body/condition computation names
     body_trip: dict[str, int] = {}
     for ln in lines:

@@ -12,12 +12,45 @@ traffic.  While-body contributions are multiplied by the loop trip count
 
 Skipped as free: parameter/constant/tuple/get-tuple-element/bitcast (no data
 movement of their own — their bytes are charged at their consumers).
+
+This module also owns the *analytic* sweep-kernel traffic model
+(`hbm_bytes_per_cell_sweep`): the single source of truth behind the kernels'
+per-system models (`repro.kernels.ising_sweep` / `potts_sweep` delegate
+here), the ≥5× fused-traffic assertions in tests, and the roofline report
+(`benchmarks/roofline_report.py`) — one formula, three consumers.
 """
 from __future__ import annotations
 
 import re
 
 from repro.hlo.collectives import _COMP_RE, _DEF_RE, _SHAPE_RE, _shape_bytes
+
+
+def hbm_bytes_per_cell_sweep(
+    *,
+    fused: bool,
+    sweeps_per_interval: int = 1,
+    state_bytes: float = 2.0,
+    uniform_plane_bytes: float = 8.0,
+) -> float:
+    """Modeled HBM bytes per lattice cell per sweep (O(R) scalars excluded).
+
+    Per-sweep path: ``state_bytes`` (int8 state in + out) **plus the
+    uniforms stream** — ``uniform_plane_bytes`` written per cell by the
+    external generator and the same read back by the kernel.  Fused path:
+    the state block crosses HBM once each way per *interval*
+    (``state_bytes`` amortized over ``sweeps_per_interval`` sweeps); the
+    randoms come from the in-kernel counter PRNG and never exist in HBM.
+
+    Defaults model the Ising kernel (one f32 uniform per cell per colour =
+    8 B/cell/sweep each way -> 18 B/cell/sweep unfused); Potts passes
+    ``uniform_plane_bytes=16.0`` (proposal + acceptance planes -> 34).
+    """
+    if not fused:
+        return state_bytes + 2.0 * uniform_plane_bytes
+    if sweeps_per_interval < 1:
+        raise ValueError("sweeps_per_interval must be >= 1")
+    return state_bytes / sweeps_per_interval
 
 _FREE_OPS = (
     "parameter(", "constant(", "tuple(", "get-tuple-element(", "bitcast(",

@@ -151,16 +151,20 @@ def ising_sweep_pallas(
 
 
 def _ising_sweep_fused_kernel(
-    spins_ref, beta_ref, kw_ref, t0_ref, out_ref, de_ref, nacc_ref,
+    spins_ref, beta_ref, kw_ref, t0_ref, off_ref, out_ref, de_ref, nacc_ref,
     *, n_sweeps, r_blk, j, b, rule,
 ):
     """``n_sweeps`` checkerboard sweeps over an (r_blk, L, L) block.
 
     The spin block stays VMEM-resident across the whole interval; each
     sweep's uniforms come from the counter PRNG at ``(t0 + sweep, replica,
-    colour)``.  ΔE/acceptance accumulate per replica with the *same
-    association order* as per-sweep oracle application (per-colour within a
-    sweep, then per-sweep), so the f32 totals are bit-equal too.
+    colour)``.  The replica counter is *global*: block offset plus
+    ``off_ref`` (the device's first global slot when the replica axis is
+    sharded), so a device computing slots [off, off+r_local) draws exactly
+    the streams the single-device launch would.  ΔE/acceptance accumulate
+    per replica with the *same association order* as per-sweep oracle
+    application (per-colour within a sweep, then per-sweep), so the f32
+    totals are bit-equal too.
     """
     s = spins_ref[...].astype(jnp.float32)  # widen in VMEM only
     l = s.shape[-1]
@@ -172,6 +176,7 @@ def _ising_sweep_fused_kernel(
     rep = (
         jax.lax.broadcasted_iota(jnp.uint32, (r_blk,), 0)
         + (pl.program_id(0) * r_blk).astype(jnp.uint32)
+        + off_ref[0]
     )
     t0 = t0_ref[0]
 
@@ -209,6 +214,7 @@ def ising_sweep_fused_pallas(
     betas: jnp.ndarray,
     *,
     n_sweeps: int,
+    replica_offset: jnp.ndarray | None = None,
     j: float = 1.0,
     b: float = 0.0,
     rule: str = "metropolis",
@@ -223,6 +229,8 @@ def ising_sweep_fused_pallas(
       t0: (1,) uint32 global sweep counter at interval entry.
       betas: (R,) f32.
       n_sweeps: sweeps fused into this launch (static).
+      replica_offset: (1,) uint32 global index of local slot 0 (sharded
+        replica axis); default 0 keeps single-device streams unchanged.
       r_blk: replicas per grid step (the Fig.-6 "block size" analogue).
       interpret: True on CPU; False on real TPU.
 
@@ -231,6 +239,8 @@ def ising_sweep_fused_pallas(
     """
     r, l, _ = spins.shape
     assert r % r_blk == 0, (r, r_blk)
+    if replica_offset is None:
+        replica_offset = jnp.zeros((1,), jnp.uint32)
     grid = (r // r_blk,)
     kernel = functools.partial(
         _ising_sweep_fused_kernel,
@@ -244,6 +254,7 @@ def ising_sweep_fused_pallas(
             pl.BlockSpec((r_blk,), lambda i: (i,)),
             pl.BlockSpec((2,), lambda i: (0,)),
             pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
         ],
         out_specs=[
             pl.BlockSpec((r_blk, l, l), lambda i: (i, 0, 0)),
@@ -256,7 +267,7 @@ def ising_sweep_fused_pallas(
             jax.ShapeDtypeStruct((r,), jnp.int32),
         ],
         interpret=interpret,
-    )(spins, betas, key_words, t0)
+    )(spins, betas, key_words, t0, replica_offset)
 
 
 def vmem_working_set_bytes(r_blk: int, length: int) -> int:
@@ -298,9 +309,13 @@ def hbm_bytes_per_cell_sweep(
     kernel — 18 B/cell/sweep.  Fused path: the spin block crosses HBM once
     each way per *interval*, so 2 B/cell amortized over
     ``sweeps_per_interval`` sweeps; the randoms never exist in HBM.
+
+    Delegates to `repro.hlo.traffic.hbm_bytes_per_cell_sweep` — the shared
+    model the roofline report and traffic assertions also consume.
     """
-    if not fused:
-        return 2.0 + 8.0 + 8.0
-    if sweeps_per_interval < 1:
-        raise ValueError("sweeps_per_interval must be >= 1")
-    return 2.0 / sweeps_per_interval
+    from repro.hlo.traffic import hbm_bytes_per_cell_sweep as model
+
+    return model(
+        fused=fused, sweeps_per_interval=sweeps_per_interval,
+        state_bytes=2.0, uniform_plane_bytes=8.0,
+    )

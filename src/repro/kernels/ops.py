@@ -113,6 +113,7 @@ def ising_sweep_fused(
     betas: jnp.ndarray,
     *,
     n_sweeps: int,
+    replica_offset=0,
     j: float = 1.0,
     b: float = 0.0,
     rule: str = "metropolis",
@@ -127,13 +128,17 @@ def ising_sweep_fused(
     ``n_sweeps`` applications of `ref.ising_sweep` fed
     `prng.ising_sweep_uniforms` — is bit-exact with the kernel in interpret
     mode.  Replica padding follows `ising_sweep` (tiled junk rows at beta=0,
-    dropped on return); real replicas keep counter indices ``0..R-1`` so the
-    stream is padding-invariant.
+    dropped on return); real replicas keep counter indices ``offset..offset+R-1``
+    so the stream is padding-invariant.  ``replica_offset`` (traced uint32
+    scalar, default 0) is the global index of local replica 0 when the
+    replica axis is sharded across devices: a device holding slots
+    ``[off, off+R_local)`` reproduces exactly the single-device streams.
     """
     words, t0 = _fused_prelude(key, t)
+    off = jnp.asarray(replica_offset).astype(jnp.uint32).reshape(-1)[:1]
     r, length = spins.shape[0], spins.shape[-1]
     if not use_pallas:
-        rep = jnp.arange(r, dtype=jnp.uint32)
+        rep = off[0] + jnp.arange(r, dtype=jnp.uint32)
 
         def sweep(i, carry):
             s, de, na = carry
@@ -149,7 +154,8 @@ def ising_sweep_fused(
         )
     (spins,), padded_betas, r = _pad_replicas([spins], betas, r_blk)
     out, de, nacc = _ising.ising_sweep_fused_pallas(
-        spins, words, t0, padded_betas, n_sweeps=n_sweeps, j=j, b=b,
+        spins, words, t0, padded_betas, n_sweeps=n_sweeps,
+        replica_offset=off, j=j, b=b,
         rule=rule, r_blk=r_blk, interpret=not _on_tpu(),
     )
     return out[:r], de[:r], nacc[:r]
@@ -164,22 +170,25 @@ def potts_sweep_fused(
     *,
     n_sweeps: int,
     q: int,
+    replica_offset=0,
     j: float = 1.0,
     rule: str = "metropolis",
     r_blk: int = 4,
     use_pallas: bool = True,
 ):
-    """Interval-fused Potts sweeps; see `ising_sweep_fused` for the contract.
+    """Interval-fused Potts sweeps; see `ising_sweep_fused` for the contract
+    (including the sharded-replica ``replica_offset`` counter convention).
 
     The ``use_pallas=False`` path applies `ref.potts_sweep` ``n_sweeps``
     times on `prng.potts_sweep_uniforms` — bit-exact with the fused kernel
     in interpret mode.
     """
     words, t0 = _fused_prelude(key, t)
+    off = jnp.asarray(replica_offset).astype(jnp.uint32).reshape(-1)[:1]
     r = states.shape[0]
     h, w = states.shape[-2], states.shape[-1]
     if not use_pallas:
-        rep = jnp.arange(r, dtype=jnp.uint32)
+        rep = off[0] + jnp.arange(r, dtype=jnp.uint32)
 
         def sweep(i, carry):
             s, de, na = carry
@@ -195,7 +204,8 @@ def potts_sweep_fused(
         )
     (states,), padded_betas, r = _pad_replicas([states], betas, r_blk)
     out, de, nacc = _potts.potts_sweep_fused_pallas(
-        states, words, t0, padded_betas, n_sweeps=n_sweeps, q=q, j=j,
+        states, words, t0, padded_betas, n_sweeps=n_sweeps, q=q,
+        replica_offset=off, j=j,
         rule=rule, r_blk=r_blk, interpret=not _on_tpu(),
     )
     return out[:r], de[:r], nacc[:r]

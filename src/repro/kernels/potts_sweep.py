@@ -143,15 +143,17 @@ def potts_sweep_pallas(
 
 
 def _potts_sweep_fused_kernel(
-    states_ref, beta_ref, kw_ref, t0_ref, out_ref, de_ref, nacc_ref,
+    states_ref, beta_ref, kw_ref, t0_ref, off_ref, out_ref, de_ref, nacc_ref,
     *, n_sweeps, r_blk, q, j, rule,
 ):
     """``n_sweeps`` checkerboard Potts sweeps over an (r_blk, H, W) block.
 
     Same interval-fusion scheme as `_ising_sweep_fused_kernel`: the colour
     block stays VMEM-resident, per-sweep uniforms come from the counter PRNG
-    (plane ``2*colour + (0 proposal | 1 accept)``), and ΔE/acceptance
-    accumulate in the per-sweep oracle's association order (bit-equal f32).
+    (plane ``2*colour + (0 proposal | 1 accept)``) keyed on the *global*
+    replica counter (block offset + ``off_ref`` under replica-axis sharding),
+    and ΔE/acceptance accumulate in the per-sweep oracle's association order
+    (bit-equal f32).
     """
     s = states_ref[...].astype(jnp.int32)  # widen in VMEM only
     h, w = s.shape[-2], s.shape[-1]
@@ -163,6 +165,7 @@ def _potts_sweep_fused_kernel(
     rep = (
         jax.lax.broadcasted_iota(jnp.uint32, (r_blk,), 0)
         + (pl.program_id(0) * r_blk).astype(jnp.uint32)
+        + off_ref[0]
     )
     t0 = t0_ref[0]
 
@@ -206,6 +209,7 @@ def potts_sweep_fused_pallas(
     *,
     n_sweeps: int,
     q: int,
+    replica_offset: jnp.ndarray | None = None,
     j: float = 1.0,
     rule: str = "metropolis",
     r_blk: int = 4,
@@ -219,11 +223,15 @@ def potts_sweep_fused_pallas(
       key_words: (2,) uint32 run-key words (`prng.key_words`).
       t0: (1,) uint32 global sweep counter at interval entry.
       betas: (R,) f32;  n_sweeps / q: static.
+      replica_offset: (1,) uint32 global index of local slot 0 (sharded
+        replica axis); default 0 keeps single-device streams unchanged.
 
     Returns ``(states', delta_e, n_accepted)`` summed over the interval.
     """
     r, h, w = states.shape
     assert r % r_blk == 0, (r, r_blk)
+    if replica_offset is None:
+        replica_offset = jnp.zeros((1,), jnp.uint32)
     grid = (r // r_blk,)
     kernel = functools.partial(
         _potts_sweep_fused_kernel,
@@ -237,6 +245,7 @@ def potts_sweep_fused_pallas(
             pl.BlockSpec((r_blk,), lambda i: (i,)),
             pl.BlockSpec((2,), lambda i: (0,)),
             pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
         ],
         out_specs=[
             pl.BlockSpec((r_blk, h, w), lambda i: (i, 0, 0)),
@@ -249,7 +258,7 @@ def potts_sweep_fused_pallas(
             jax.ShapeDtypeStruct((r,), jnp.int32),
         ],
         interpret=interpret,
-    )(states, betas, key_words, t0)
+    )(states, betas, key_words, t0, replica_offset)
 
 
 def vmem_working_set_bytes(r_blk: int, height: int, width: int) -> int:
@@ -292,9 +301,13 @@ def hbm_bytes_per_cell_sweep(
     external generator + 16 B read back = 34 B/cell/sweep.  Fused: the
     colour block crosses HBM once each way per interval (2 B/cell amortized
     over ``sweeps_per_interval``); randoms never exist in HBM.
+
+    Delegates to `repro.hlo.traffic.hbm_bytes_per_cell_sweep` — the shared
+    model the roofline report and traffic assertions also consume.
     """
-    if not fused:
-        return 2.0 + 16.0 + 16.0
-    if sweeps_per_interval < 1:
-        raise ValueError("sweeps_per_interval must be >= 1")
-    return 2.0 / sweeps_per_interval
+    from repro.hlo.traffic import hbm_bytes_per_cell_sweep as model
+
+    return model(
+        fused=fused, sweeps_per_interval=sweeps_per_interval,
+        state_bytes=2.0, uniform_plane_bytes=16.0,
+    )

@@ -96,6 +96,7 @@ def entry_runspec(
     seed: int = 0,
     exchange: str | ExchangeSpec | None = None,
     system_params: dict | None = None,
+    mesh=None,
 ) -> RunSpec:
     """Compile a zoo entry to the declarative `RunSpec` conformance executes.
 
@@ -110,7 +111,10 @@ def entry_runspec(
     one-argument sweep.  ``system_params`` overlays the entry's constructor
     params — how kernel-option variants (e.g. ``use_fused=True``, whose
     random stream is deliberately *not* bit-equal to the per-sweep path)
-    join the same matrix without duplicating zoo entries.
+    join the same matrix without duplicating zoo entries.  ``mesh`` (a
+    `repro.core.distributed.MeshSpec`) runs the same conformance simulation
+    through the sharded shard_map mega-step — the multi-device entry of the
+    matrix.
     """
     if exchange is None:
         exchange = ExchangeSpec()
@@ -140,6 +144,7 @@ def entry_runspec(
             swap_interval=entry.swap_interval,
             chunk_intervals=entry.chunk_intervals,
             n_chains=entry.n_chains,
+            mesh=mesh,
         ),
         exchange=exchange,
         adapt=AdaptSpec(
@@ -157,12 +162,14 @@ def run_conformance(
     exact_fn=None,
     exchange=None,
     system_params: dict | None = None,
+    mesh=None,
 ) -> ConformanceReport:
     """Run one zoo entry through the adaptive ensemble Session vs ground truth."""
     if exact_fn is None:
         exact_fn = EXACT[entry.name]
     spec = entry_runspec(
-        entry, seed=seed, exchange=exchange, system_params=system_params
+        entry, seed=seed, exchange=exchange, system_params=system_params,
+        mesh=mesh,
     )
 
     # A tiny callback freezes the post-burn ladder so the measurement phases

@@ -1,0 +1,90 @@
+"""Child process for tests/test_distributed.py: runs on 8 simulated devices.
+
+Tier-1 tests run on the single real CPU device (tests/conftest.py), and
+``--xla_force_host_platform_device_count`` must be set before jax is
+imported — so everything multi-device happens here, in a subprocess with
+the flag in its environment.  Usage:
+
+    python tests/_mesh_child.py OUTDIR
+
+Writes ``OUTDIR/mesh8.npz`` with the final state of each scenario (the
+parent re-runs them on one device and asserts bit-equality) and a
+checkpoint under ``OUTDIR/ckpt`` saved mid-run on the 8-device mesh (the
+parent resumes it on one device).
+"""
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+
+import jax
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import ising, ladder
+from repro.core.distributed import MeshSpec
+from repro.engine import Engine, EngineConfig
+
+R, L = 8, 8
+SWEEPS = 60
+CKPT_SWEEPS = 40
+
+
+def _engine(mesh, **sys_kw):
+    system = ising.IsingSystem(length=L, **sys_kw)
+    cfg = EngineConfig(
+        n_replicas=R, swap_interval=5, chunk_intervals=2, mesh=mesh
+    )
+    eng = Engine(system, cfg)
+    state = eng.init(jax.random.key(21), np.asarray(ladder.linear_ladder(R, 1.0, 3.5)))
+    return eng, state
+
+
+def main(outdir: str) -> int:
+    assert jax.device_count() >= 8, (
+        f"child needs 8 simulated devices, got {jax.device_count()}"
+    )
+    out = {}
+    mesh = MeshSpec(ensemble=1, replica=8)
+
+    # DEO, per-sweep path, sharded over all 8 devices
+    eng, st = _engine(mesh)
+    st, _ = eng.run(st, SWEEPS)
+    out["deo_energy"] = np.asarray(st.pt.energy)
+    out["deo_rung"] = np.asarray(st.pt.rung)
+    out["deo_states"] = np.asarray(st.pt.states)
+
+    # interval-fused kernel path (in-kernel counter PRNG + replica offset)
+    eng, st = _engine(mesh, use_fused=True, use_pallas=True)
+    st, _ = eng.run(st, SWEEPS)
+    out["fused_energy"] = np.asarray(st.pt.energy)
+    out["fused_states"] = np.asarray(st.pt.states)
+
+    # capacity: fused-kernel VMEM working set > 16 MB on one chip, runs
+    # sharded (the parent checks the model numbers; here it must execute)
+    big = ising.IsingSystem(length=128)
+    cfg = EngineConfig(
+        n_replicas=64, swap_interval=5, chunk_intervals=2, mesh=mesh
+    )
+    eng_big = Engine(big, cfg)
+    st_big = eng_big.init(
+        jax.random.key(22), np.asarray(ladder.linear_ladder(64, 1.0, 3.5))
+    )
+    st_big, _ = eng_big.run(st_big, 10)
+    out["capacity_energy"] = np.asarray(st_big.pt.energy)
+    out["capacity_t"] = np.asarray(st_big.pt.t)
+
+    # checkpoint saved mid-run on the 8-device mesh
+    mgr = CheckpointManager(os.path.join(outdir, "ckpt"), keep=2)
+    eng, st = _engine(mesh)
+    st, _ = eng.run(st, CKPT_SWEEPS, checkpoint=mgr, checkpoint_every_chunks=1)
+
+    np.savez(os.path.join(outdir, "mesh8.npz"), **out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1]))

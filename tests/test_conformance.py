@@ -122,6 +122,22 @@ def test_exchange_strategy_conforms_to_exact_reference(name, strategy):
     assert_conforms(report, z_max=4.0, geweke_max=4.0)
 
 
+def test_sharded_engine_conforms_to_exact_reference():
+    """The sharded-mega-step entry in the conformance matrix (DESIGN.md
+    §Distributed): the same zoo entry, executed through the shard_map path
+    via ``mesh=`` (1x1 here — tier-1 has one device; the multi-device mesh
+    is bit-equal to it by tests/test_distributed.py), must clear the same
+    exact-reference gate as every other sampler variant."""
+    from repro.core.distributed import MeshSpec
+
+    entry = systems.REGISTRY["ising"]
+    report = run_conformance(
+        entry, seed=0, mesh=MeshSpec(ensemble=1, replica=1)
+    )
+    assert report.n_retunes == entry.adapt_rounds, report.n_retunes
+    assert_conforms(report, z_max=4.0, geweke_max=4.0)
+
+
 @pytest.mark.parametrize("name", [
     "ising",
     # the Potts exact reference enumerates 3^16 configs (~20 s) — same slow

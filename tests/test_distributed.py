@@ -1,0 +1,194 @@
+"""Sharded mega-step correctness (DESIGN.md §Distributed).
+
+In-process tests run on the single real CPU device with a 1x1 mesh — the
+shard_map path must be bit-equal to the plain path there, for every
+exchange strategy.  The real multi-device claims (8-way replica sharding
+bit-equal to one device, beyond-single-chip capacity, checkpoint
+portability across mesh shapes) run in a subprocess via
+``tests/_mesh_child.py`` because ``--xla_force_host_platform_device_count``
+must be set before jax is imported and tier-1 pins the parent to one
+device (tests/conftest.py).
+
+Set ``REPRO_SKIP_MESH_SUBPROCESS=1`` to skip the subprocess half (e.g. on
+a machine where spawning 8 simulated devices is too slow).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import ising, ladder
+from repro.core.distributed import (
+    CHAIN_AXIS,
+    REPLICA_AXIS,
+    MeshSpec,
+    pt_partition_specs,
+)
+from repro.engine import Engine, EngineConfig
+from repro.exchange import available_strategies
+
+R, L = 8, 8
+TEMPS = np.asarray(ladder.linear_ladder(R, 1.0, 3.5))
+
+
+def _run(mesh, *, sweeps=30, exchange="deo", n_chains=1, chunk_intervals=3,
+         **sys_kw):
+    system = ising.IsingSystem(length=L, **sys_kw)
+    cfg = EngineConfig(
+        n_replicas=R, swap_interval=5, chunk_intervals=chunk_intervals,
+        mesh=mesh, exchange=exchange, n_chains=n_chains,
+    )
+    eng = Engine(system, cfg)
+    st = eng.init(jax.random.key(21), TEMPS)
+    return eng.run(st, sweeps)
+
+
+# ---------- MeshSpec --------------------------------------------------------------
+def test_mesh_spec_validation():
+    assert MeshSpec().n_devices == 1
+    assert MeshSpec(ensemble=2, replica=4).n_devices == 8
+    with pytest.raises(ValueError, match=">= 1"):
+        MeshSpec(ensemble=0)
+    with pytest.raises(ValueError, match="divide"):
+        MeshSpec(replica=3).validate(n_replicas=8, n_chains=1)
+    with pytest.raises(ValueError, match="divide"):
+        MeshSpec(ensemble=2).validate(n_replicas=8, n_chains=3)
+    MeshSpec(ensemble=2, replica=4).validate(n_replicas=8, n_chains=2)
+
+
+def test_mesh_build_needs_enough_devices():
+    spec = MeshSpec(ensemble=1, replica=1 + jax.device_count())
+    with pytest.raises(ValueError, match="xla_force_host_platform_device_count"):
+        spec.build()
+
+
+def test_state_mode_rejects_replica_sharding():
+    with pytest.raises(ValueError, match="temp"):
+        EngineConfig(
+            n_replicas=R, swap_interval=5, swap_mode="state",
+            mesh=MeshSpec(ensemble=1, replica=2),
+        )
+
+
+def test_partition_specs_cover_the_state_tree():
+    eng = Engine(ising.IsingSystem(length=L), EngineConfig(
+        n_replicas=R, swap_interval=5, n_chains=2,
+    ))
+    st = eng.init(jax.random.key(0), TEMPS)
+    specs = pt_partition_specs(st.pt, n_chains=2)
+    assert tuple(specs.states)[:2] == (CHAIN_AXIS, REPLICA_AXIS)
+    assert tuple(specs.energy)[:2] == (CHAIN_AXIS, REPLICA_AXIS)
+    # per-chain scalars carry the chain axis only
+    assert tuple(specs.key) == (CHAIN_AXIS,)
+    assert tuple(specs.t) == (CHAIN_AXIS,)
+
+
+# ---------- 1x1 mesh: shard_map path bit-equal in-process -------------------------
+@pytest.mark.parametrize("exchange", sorted(available_strategies()))
+def test_single_device_mesh_bit_equal(exchange):
+    """The shard_map mega-step (gather O(R) rows -> full-ladder decision ->
+    pull back local block) must reproduce the plain path bit-for-bit on a
+    1x1 mesh — same PRNG streams, same swap decisions, same stats."""
+    st_plain, res_plain = _run(None, exchange=exchange)
+    st_mesh, res_mesh = _run(MeshSpec(), exchange=exchange)
+    np.testing.assert_array_equal(
+        np.asarray(st_plain.pt.energy), np.asarray(st_mesh.pt.energy)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(st_plain.pt.rung), np.asarray(st_mesh.pt.rung)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(st_plain.pt.states), np.asarray(st_mesh.pt.states)
+    )
+    for k, v in res_plain.summary.items():
+        np.testing.assert_array_equal(
+            np.asarray(v), np.asarray(res_mesh.summary[k]), err_msg=k
+        )
+
+
+def test_single_device_mesh_bit_equal_fused():
+    st_plain, _ = _run(None, use_fused=True, use_pallas=True)
+    st_mesh, _ = _run(MeshSpec(), use_fused=True, use_pallas=True)
+    np.testing.assert_array_equal(
+        np.asarray(st_plain.pt.states), np.asarray(st_mesh.pt.states)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(st_plain.pt.rung), np.asarray(st_mesh.pt.rung)
+    )
+
+
+# ---------- 8 simulated devices (subprocess) --------------------------------------
+_SKIP_SUB = os.environ.get("REPRO_SKIP_MESH_SUBPROCESS") == "1"
+
+
+@pytest.fixture(scope="module")
+def mesh8(tmp_path_factory):
+    """Run tests/_mesh_child.py once on 8 simulated devices; yield its
+    output dir (mesh8.npz + a checkpoint saved on the 8-device mesh)."""
+    if _SKIP_SUB:
+        pytest.skip("REPRO_SKIP_MESH_SUBPROCESS=1")
+    outdir = tmp_path_factory.mktemp("mesh8")
+    child = os.path.join(os.path.dirname(__file__), "_mesh_child.py")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run(
+        [sys.executable, child, str(outdir)],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, (
+        f"mesh child failed\nstdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    )
+    return outdir
+
+
+def test_sharded_deo_bit_equal_to_single_device(mesh8):
+    """Same seeds, 8-way replica sharding: the child's trajectory must be
+    bit-identical to this (single-device, unsharded) run."""
+    out = np.load(mesh8 / "mesh8.npz")
+    st, _ = _run(None, sweeps=60, chunk_intervals=2)
+    np.testing.assert_array_equal(np.asarray(st.pt.energy), out["deo_energy"])
+    np.testing.assert_array_equal(np.asarray(st.pt.rung), out["deo_rung"])
+    np.testing.assert_array_equal(np.asarray(st.pt.states), out["deo_states"])
+
+
+def test_sharded_fused_bit_equal_to_single_device(mesh8):
+    """The fused kernel's counter PRNG keys on the *global* replica slot
+    (replica_offset), so sharding must not change its stream."""
+    out = np.load(mesh8 / "mesh8.npz")
+    st, _ = _run(None, sweeps=60, chunk_intervals=2,
+                 use_fused=True, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(st.pt.energy), out["fused_energy"])
+    np.testing.assert_array_equal(np.asarray(st.pt.states), out["fused_states"])
+
+
+def test_capacity_beyond_single_chip_vmem(mesh8):
+    """The child ran an (R=64, L=128) ladder whose fused working set the
+    static model puts past one chip's 16 MB VMEM; per-shard it fits."""
+    from repro.kernels.ising_sweep import vmem_working_set_bytes_fused
+
+    assert vmem_working_set_bytes_fused(64, 128) > 16 * 2**20
+    assert vmem_working_set_bytes_fused(64 // 8, 128) <= 16 * 2**20
+    out = np.load(mesh8 / "mesh8.npz")
+    assert out["capacity_energy"].shape == (64,)
+    assert np.all(np.isfinite(out["capacity_energy"]))
+    assert int(out["capacity_t"]) == 10
+
+
+def test_checkpoint_from_mesh_resumes_on_one_device(mesh8):
+    """Checkpoints are mesh-shape independent: one saved mid-run on the
+    8-device mesh restores on a single device and finishes bit-equal to an
+    uninterrupted single-device run."""
+    out = np.load(mesh8 / "mesh8.npz")
+    system = ising.IsingSystem(length=L)
+    cfg = EngineConfig(n_replicas=R, swap_interval=5, chunk_intervals=2)
+    eng = Engine(system, cfg)
+    restored, meta = eng.restore(CheckpointManager(str(mesh8 / "ckpt")))
+    assert meta["step"] == 40
+    resumed, _ = eng.run(restored, 20)
+    np.testing.assert_array_equal(np.asarray(resumed.pt.energy), out["deo_energy"])
+    np.testing.assert_array_equal(np.asarray(resumed.pt.states), out["deo_states"])

@@ -203,21 +203,37 @@ def test_ensemble_chains_independent_of_ensemble_size():
 
 
 def test_ensemble_composes_with_sharding():
-    """With n_chains > 1 the shard pins the leading chain axis (whole chains
-    per device); the constraint must survive init -> mega-step -> results."""
-    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    """With n_chains > 1, `cfg.mesh` places whole chains on the ensemble
+    axis and routes the run through the shard_map mega-step; on a 1x1 mesh
+    the sharded trajectory must stay bit-equal to the plain path (real
+    multi-device meshes are covered by tests/test_distributed.py)."""
+    from repro.core.distributed import MeshSpec
 
-    mesh = Mesh(np.asarray(jax.devices()[:1]), ("x",))
-    shard = NamedSharding(mesh, P("x"))
     system = ising.IsingSystem(length=L)
-    cfg = EngineConfig(n_replicas=R, swap_interval=5, chunk_intervals=2, n_chains=2)
-    eng = Engine(system, cfg, observables=OBS, shard=shard)
-    st = eng.init(jax.random.key(11), TEMPS)
-    assert st.pt.states.sharding.is_equivalent_to(shard, st.pt.states.ndim)
-    st, res = eng.run(st, 20)
+    out = {}
+    for mesh in (None, MeshSpec(ensemble=1, replica=1)):
+        cfg = EngineConfig(
+            n_replicas=R, swap_interval=5, chunk_intervals=2, n_chains=2,
+            mesh=mesh,
+        )
+        eng = Engine(system, cfg, observables=OBS)
+        st = eng.init(jax.random.key(11), TEMPS)
+        st, res = eng.run(st, 20)
+        out[mesh is not None] = (st, res)
+    st, res = out[True]
     assert np.asarray(st.pt.states).shape == (2, R, L, L)
-    assert st.pt.states.sharding.is_equivalent_to(shard, st.pt.states.ndim)
     assert res.summary["mean_energy"].shape == (2, R)
+    plain, plain_res = out[False]
+    np.testing.assert_array_equal(
+        np.asarray(st.pt.energy), np.asarray(plain.pt.energy)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(st.pt.states), np.asarray(plain.pt.states)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.summary["mean_energy"]),
+        np.asarray(plain_res.summary["mean_energy"]),
+    )
 
 
 def test_ensemble_shapes_and_pooling():
