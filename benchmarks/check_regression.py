@@ -35,11 +35,12 @@ import sys
 EXACT = {
     "n_devices", "n_replicas", "length", "sweeps", "n_sweeps", "r_blk",
     "fits_vmem", "lattice_independent", "shard_fits", "exceeds_single_chip",
+    "rounds_per_launch",
 }
 MODEL = {
     "hbm_bytes_per_cell_sweep", "traffic_reduction_x", "vmem_bytes",
-    "vmem_bytes_fused", "vmem_bytes_single_chip", "vmem_bytes_per_shard",
-    "modeled_hbm_bytes_per_sweep",
+    "vmem_bytes_fused", "vmem_bytes_packed", "vmem_bytes_single_chip",
+    "vmem_bytes_per_shard", "modeled_hbm_bytes_per_sweep",
 }
 MEASURED = {
     "swap_acceptance", "round_trips", "collective_bytes_per_exchange",
@@ -92,6 +93,26 @@ def compare_group(group: str, baseline_dir: str, fresh_dir: str):
                 yield "fail", f"{group}/{name}.{metric}: metric disappeared"
                 continue
             fval = fm[metric]
+            # Non-numeric metrics never reach the drift arithmetic: strings
+            # (e.g. a backend/layout tag a future bench carries) are compared
+            # for identity only and warn — they are provenance, not perf —
+            # and booleans are structural facts, so any boolean outside the
+            # EXACT set is still classified exact rather than floor-divided
+            # into the float tolerance classes.
+            if isinstance(bval, str) or isinstance(fval, str):
+                if bval != fval:
+                    yield "warn", (
+                        f"{group}/{name}.{metric}: string metric changed "
+                        f"{bval!r} -> {fval!r} (skipped drift check)"
+                    )
+                continue
+            if isinstance(bval, bool) or isinstance(fval, bool):
+                if bval != fval:
+                    yield "fail", (
+                        f"{group}/{name}.{metric}: boolean metric changed "
+                        f"{bval} -> {fval}"
+                    )
+                continue
             drift = _rel_drift(bval, fval)
             if metric in EXACT:
                 if bval != fval:

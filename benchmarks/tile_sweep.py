@@ -19,11 +19,13 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_call, write_bench_json
+from repro.core.ising import lattice_energy
 from repro.kernels import ops, ref
 from repro.kernels.ising_sweep import (
     hbm_bytes_per_cell_sweep,
     vmem_working_set_bytes,
     vmem_working_set_bytes_fused,
+    vmem_working_set_bytes_packed,
 )
 
 VMEM_BYTES = 16 * 2**20
@@ -87,6 +89,56 @@ def run(length: int = 300, r: int = 64, out_dir=None):
                      "hbm_bytes_per_cell_sweep": bytes_fused,
                      "traffic_reduction_x": speedup,
                      "modeled_hbm_bytes_per_sweep": bytes_fused * r * cells},
+        )
+
+    # -- bit-plane packing axis (multispin storage inside the fused kernel) ----
+    # Packing is a VMEM/ALU density knob, bitwise-identical in trajectory:
+    # 1 bit/replica spin planes cut the in-kernel state + neighbour-count
+    # working set, letting larger replica tiles fit the 16 MB budget.
+    for r_blk in (8, 32):
+        ws_packed = vmem_working_set_bytes_packed(r_blk, length)
+        ws_fused = vmem_working_set_bytes_fused(r_blk, length)
+        fits = "fits" if ws_packed <= VMEM_BYTES else "EXCEEDS"
+        emit(
+            f"fig6_packed_rblk{r_blk}", ws_packed / 819e9,
+            f"vmem_bytes_packed={ws_packed};vmem_bytes_fused={ws_fused};{fits}",
+            group=GROUP,
+            metrics={"r_blk": r_blk, "vmem_bytes_packed": ws_packed,
+                     "vmem_bytes_fused": ws_fused,
+                     "fits_vmem": float(ws_packed <= VMEM_BYTES)},
+        )
+
+    # -- rounds-per-launch axis (the whole-round fusion knob) ------------------
+    # One launch = K full PT rounds (sweeps + in-kernel DEO exchange): the
+    # state block amortizes over S*K sweeps, and no swap ever exits to host.
+    # The pure-JAX round reference is the timed executable (interpret-mode
+    # kernel timing is meaningless here); traffic is the analytic model.
+    n_sweeps = 4
+    rung = jnp.arange(r, dtype=jnp.int32)
+    energy = lattice_energy(spins, 1.0, 0.0)
+    betas_rung = jnp.sort(betas)[::-1]  # rung order: cold (max beta) -> hot
+    for n_rounds in (1, 2, 4):
+        round_fn = jax.jit(lambda s, k, ru, e, b, _n=n_rounds: ops.ising_round_fused(
+            s, k, jnp.int32(0), jnp.int32(0), ru, e, b,
+            n_sweeps=n_sweeps, n_rounds=_n, use_pallas=False
+        ))
+        t_round = time_call(round_fn, spins, key, rung, energy, betas_rung)
+        bytes_round = hbm_bytes_per_cell_sweep(
+            fused=True, sweeps_per_interval=n_sweeps,
+            rounds_per_launch=n_rounds,
+        )
+        speedup = hbm_bytes_per_cell_sweep(fused=False) / bytes_round
+        emit(
+            f"fig6_round_k{n_rounds}", t_round / (n_sweeps * n_rounds),
+            f"L={length};R={r};S={n_sweeps}"
+            f";hbm_B_cell_sweep={bytes_round:.3f};traffic_x{speedup:.0f}",
+            group=GROUP,
+            metrics={"rounds_per_launch": n_rounds, "n_sweeps": n_sweeps,
+                     "length": length, "n_replicas": r,
+                     "seconds_per_sweep": t_round / (n_sweeps * n_rounds),
+                     "hbm_bytes_per_cell_sweep": bytes_round,
+                     "traffic_reduction_x": speedup,
+                     "modeled_hbm_bytes_per_sweep": bytes_round * r * cells},
         )
 
     path = write_bench_json(GROUP, out_dir)

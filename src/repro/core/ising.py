@@ -89,6 +89,16 @@ class IsingSystem:
         conformance suite, not bit-equal — DESIGN.md §6); with
         ``use_pallas=False`` the fused pure-JAX reference runs instead,
         bit-exact with the fused kernel.
+      use_fused_round: checkerboard + temp-mode DEO/SEO only — fuse whole PT
+        rounds (sweeps *plus* the exchange) into one launch via
+        `repro.kernels.ops.ising_round_fused`; the swap uniforms come from
+        the counter PRNG's swap stream instead of the engine's
+        ``fold_in(key, 2t+1)`` draw (gated statistically by conformance,
+        like ``use_fused``; bit-equality is pinned against the round
+        kernel's own pure-JAX oracle).  Implies the ``use_fused`` sweep
+        stream for the sweeps.
+      pack_bits: fused paths only — bit-plane multispin spin storage inside
+        the kernel (bitwise-identical trajectory; VMEM/ALU density knob).
       accept_rule: "metropolis" (paper Eq. 1) or "glauber" (heat-bath) —
         glauber keeps simultaneous checkerboard updates strictly stochastic
         (see repro.kernels.ref.accept_prob for the ergodicity caveat).
@@ -105,6 +115,8 @@ class IsingSystem:
     flips_per_step: int = 1
     use_pallas: bool = False
     use_fused: bool = False
+    use_fused_round: bool = False
+    pack_bits: bool = False
     accept_rule: str = "metropolis"
     init_balance: float = 0.5
     r_blk: int = 8
@@ -122,6 +134,12 @@ class IsingSystem:
             raise ValueError(
                 "use_fused=True needs update='checkerboard' (the fused "
                 "kernel is an interval of checkerboard sweeps)"
+            )
+        if self.use_fused_round and not self.use_fused:
+            raise ValueError(
+                "use_fused_round=True needs use_fused=True (the round "
+                "kernel is the interval-fused kernel plus an in-kernel "
+                "exchange)"
             )
 
     # -- System protocol ---------------------------------------------------
@@ -217,5 +235,26 @@ class IsingSystem:
             spins, key, t, betas, n_sweeps=n_sweeps,
             replica_offset=replica_offset, j=self.j, b=self.b,
             rule=self.accept_rule, r_blk=self.r_blk,
-            use_pallas=self.use_pallas,
+            pack_bits=self.pack_bits, use_pallas=self.use_pallas,
+        )
+
+    # -- whole-round fast path (used when use_fused_round=True) --------------
+    def batched_mcmc_round(self, key, t, phase, spins, rung, energy, betas,
+                           *, n_sweeps, n_rounds=1, criterion="logistic",
+                           pairing="deo"):
+        """``n_rounds`` whole PT rounds (sweeps + temp-mode exchange) fused.
+
+        ``phase`` is the global swap-iteration counter (keys the in-kernel
+        swap draw), ``rung``/``energy`` the per-slot rung map and energies,
+        ``betas`` the rung-ordered ladder.  Returns ``(spins', rung',
+        energy', n_accepted, accept, prob, attempt)`` — see
+        `repro.kernels.ops.ising_round_fused`.
+        """
+        from repro.kernels import ops as kops
+
+        return kops.ising_round_fused(
+            spins, key, t, phase, rung, energy, betas,
+            n_sweeps=n_sweeps, n_rounds=n_rounds, j=self.j, b=self.b,
+            rule=self.accept_rule, criterion=criterion, pairing=pairing,
+            pack_bits=self.pack_bits, use_pallas=self.use_pallas,
         )

@@ -76,6 +76,13 @@ class PottsSystem:
         generated in-kernel.  The random stream differs from the per-sweep
         path (statistically gated, not bit-equal — DESIGN.md §6); with
         ``use_pallas=False`` the bit-exact fused pure-JAX reference runs.
+      use_fused_round: temp-mode DEO/SEO only — fuse whole PT rounds
+        (sweeps *plus* the exchange) into one launch via
+        `repro.kernels.ops.potts_round_fused` (see
+        `repro.core.ising.IsingSystem` for the stream contract).
+      pack_bits: fused paths only — keep the lattice in dense int8 lanes
+        in-kernel instead of widening to int32 (bitwise-identical; needs
+        q ≤ 64).
       accept_rule: "metropolis" or "glauber" (see repro.kernels.ref).
       r_blk: replicas per Pallas grid step; 4 is the documented VMEM-safe
         block at the paper's L=300 (`kernels.potts_sweep`).
@@ -86,6 +93,8 @@ class PottsSystem:
     j: float = 1.0
     use_pallas: bool = False
     use_fused: bool = False
+    use_fused_round: bool = False
+    pack_bits: bool = False
     accept_rule: str = "metropolis"
     r_blk: int = 4
 
@@ -99,6 +108,16 @@ class PottsSystem:
             )
         if self.q < 2:
             raise ValueError(f"Potts needs q >= 2, got q={self.q}")
+        if self.use_fused_round and not self.use_fused:
+            raise ValueError(
+                "use_fused_round=True needs use_fused=True (the round "
+                "kernel is the interval-fused kernel plus an in-kernel "
+                "exchange)"
+            )
+        if self.pack_bits and self.q > 64:
+            raise ValueError(
+                f"pack_bits needs q <= 64 (int8 lanes), got q={self.q}"
+            )
 
     # -- System protocol ---------------------------------------------------
     def init_state(self, key: jax.Array) -> jnp.ndarray:
@@ -142,5 +161,20 @@ class PottsSystem:
             states, key, t, betas, n_sweeps=n_sweeps, q=self.q,
             replica_offset=replica_offset, j=self.j,
             rule=self.accept_rule, r_blk=self.r_blk,
-            use_pallas=self.use_pallas,
+            pack_bits=self.pack_bits, use_pallas=self.use_pallas,
+        )
+
+    # -- whole-round fast path (used when use_fused_round=True) --------------
+    def batched_mcmc_round(self, key, t, phase, states, rung, energy, betas,
+                           *, n_sweeps, n_rounds=1, criterion="logistic",
+                           pairing="deo"):
+        """``n_rounds`` whole PT rounds fused (see
+        `repro.core.ising.IsingSystem.batched_mcmc_round`)."""
+        from repro.kernels import ops as kops
+
+        return kops.potts_round_fused(
+            states, key, t, phase, rung, energy, betas,
+            n_sweeps=n_sweeps, q=self.q, n_rounds=n_rounds, j=self.j,
+            rule=self.accept_rule, criterion=criterion, pairing=pairing,
+            pack_bits=self.pack_bits, use_pallas=self.use_pallas,
         )

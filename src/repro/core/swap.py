@@ -85,6 +85,8 @@ def accept_pairs(
     betas: jnp.ndarray,
     energies: jnp.ndarray,
     criterion: Criterion = "logistic",
+    *,
+    uniforms: jnp.ndarray | None = None,
 ):
     """Accept/reject every proposed pair of an involution, in parallel.
 
@@ -93,12 +95,17 @@ def accept_pairs(
     one decision per pair made at the *lower* member and broadcast to both.
 
     Args:
-      key: PRNG key for the iteration (one uniform per rung).
+      key: PRNG key for the iteration (one uniform per rung).  Ignored when
+        ``uniforms`` is given (may then be None).
       partner: (R,) involution — ``partner[i] = j`` iff ``{i, j}`` is a
         proposed pair, ``partner[i] = i`` for unpaired rungs.  Pairs need
         not be ladder-adjacent (windowed strategies propose distant rungs).
       betas: (R,) inverse temperatures *in rung order* (cold→hot).
       energies: (R,) energy of the replica currently holding each rung.
+      uniforms: optional (R,) f32 acceptance uniforms to use instead of
+        drawing from ``key`` — the hook that lets the whole-round fused
+        kernels' counter-stream exchange (`repro.kernels.exchange`) be
+        pinned bit-equal against this oracle at the same draws.
 
     Returns:
       perm: (R,) permutation in rung space — ``perm[r]`` is the rung whose
@@ -120,7 +127,10 @@ def accept_pairs(
     p = swap_probability(
         betas, betas[partner], energies, energies[partner], criterion=criterion
     )
-    u = jax.random.uniform(key, (n,), dtype=jnp.float32)
+    if uniforms is None:
+        u = jax.random.uniform(key, (n,), dtype=jnp.float32)
+    else:
+        u = uniforms
     # Decision is made once per pair, at the lower index, then broadcast.
     accept_at_lower = (u < p) & is_lower
     pair_accept = accept_at_lower[lower] & (partner != idx)

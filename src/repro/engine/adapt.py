@@ -180,10 +180,22 @@ def flow_optimized_ladder(
     # per-gap drop, floored so η stays positive (flat windows would
     # otherwise collapse rungs onto each other)
     df = np.maximum(f[:-1] - f[1:], 1e-6)
-    d_t = np.diff(temps)
+    # Gap floor: a previous aggressive retune (rate=1.0 over a flat flow
+    # profile) can leave two interior rungs (near-)coincident; an unfloored
+    # d_t then makes η inf/NaN, which cum-normalization propagates into every
+    # rung — and the poisoned betas are *traced* engine inputs, so the whole
+    # rest of the run silently samples garbage.  η·d_t = sqrt(df·d_t) stays
+    # finite (and ~0) for a degenerate gap, which is the right weight: a
+    # zero-width gap should attract no rung density.
+    d_t = np.maximum(np.diff(temps), 1e-12)
     eta = np.sqrt(df / d_t)
     cum = np.concatenate([[0.0], np.cumsum(eta * d_t)])
-    cum /= cum[-1]
+    total = cum[-1]
+    if not np.isfinite(total) or total <= 0.0:
+        # Fully degenerate ladder (all gaps collapsed): no usable density
+        # signal — keep the current ladder rather than dividing by zero.
+        return temps.astype(np.float32)
+    cum /= total
     optimal = np.interp(np.linspace(0.0, 1.0, r), cum, temps)
     new = np.exp((1.0 - rate) * np.log(temps) + rate * np.log(optimal))
     new[0], new[-1] = temps[0], temps[-1]

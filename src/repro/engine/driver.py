@@ -55,6 +55,8 @@ from repro.core.systems import System
 from repro.engine import stats as stats_lib
 from repro.engine.adapt import AdaptConfig, AdaptState, maybe_adapt
 from repro.exchange import DEO, ExchangeStrategy, make_strategy
+from repro.kernels import exchange as kernel_exchange
+from repro.kernels import prng as kernel_prng
 
 __all__ = [
     "StepSpec",
@@ -127,6 +129,41 @@ def _batched_interval(system: System):
     if not getattr(system, "use_fused", False):
         return None
     return getattr(system, "batched_mcmc_interval", None)
+
+
+def _round_interval(system: System, spec: StepSpec):
+    """The whole-round fused fast path, when selected by the system.
+
+    Systems expose ``batched_mcmc_round(key, t, phase, states, rung, energy,
+    betas, *, n_sweeps, criterion, pairing)`` — the interval's sweeps *plus*
+    the temp-mode exchange in one kernel launch, with the swap uniforms drawn
+    from the counter PRNG's swap stream (`repro.kernels.prng.swap_uniforms`)
+    instead of the engine's ``fold_in(key, 2t+1)`` draw.  Opt-in via
+    ``use_fused_round=True``; only the kernel-resident subset of the exchange
+    zoo is supported — temp-mode DEO/SEO with swaps on (see
+    `repro.kernels.exchange` for why the rest stays on the strategy path) —
+    and an incompatible spec is a loud error, not a silent fallback.
+    """
+    if not getattr(system, "use_fused_round", False):
+        return None
+    fn = getattr(system, "batched_mcmc_round", None)
+    if fn is None:
+        return None
+    pairing = getattr(spec.exchange, "name", None)
+    supported = (
+        spec.do_swap
+        and spec.swap_mode == "temp"
+        and pairing in kernel_exchange.PAIRINGS
+        and spec.exchange.n_virtual == 1
+    )
+    if not supported:
+        raise ValueError(
+            "use_fused_round=True folds the exchange into the kernel and "
+            "supports only temp-mode DEO/SEO with swaps on; got "
+            f"do_swap={spec.do_swap}, swap_mode={spec.swap_mode!r}, "
+            f"exchange={pairing!r} (n_virtual={spec.exchange.n_virtual})"
+        )
+    return fn
 
 
 def _sweep_once(system, spec: StepSpec, betas, st: PTState, shard=None) -> PTState:
@@ -224,6 +261,7 @@ def make_interval_step(
     observables = dict(observables or {})
     recycle = spec.do_swap and spec.exchange.n_virtual > 1
     fused = _batched_interval(system)
+    fused_round = _round_interval(system, spec)
 
     def constrain(st):
         # keep the replica axis sharded through the loop — without this the
@@ -236,6 +274,33 @@ def make_interval_step(
         return shard_state(st, shard)
 
     def interval_step(st: PTState, betas):
+        if fused_round is not None:
+            # One launch for the whole PT round: the kernel owns the sweep
+            # loop AND the temp-mode exchange (swap uniforms from the counter
+            # PRNG's swap stream, keyed on st.phase), so nothing but the
+            # post-round state crosses the launch boundary.
+            states, rung, energy, _, acc, prob, att = fused_round(
+                st.key, st.t, st.phase, st.states, st.rung, st.energy,
+                betas, n_sweeps=spec.sweeps_per_interval,
+                criterion=spec.criterion, pairing=spec.exchange.name,
+            )
+            st = constrain(dataclasses.replace(
+                st,
+                states=states,
+                rung=rung,
+                energy=energy,
+                t=st.t + spec.sweeps_per_interval,
+                phase=st.phase + 1,
+            ))
+            rec = dict(_observe(system, observables, st))
+            # diag rows come back (n_rounds, R); the engine runs one round
+            # per interval, so row 0 is the interval's swap diagnostics.
+            rec.update({
+                "swap_accept": acc[0],
+                "swap_prob": prob[0],
+                "swap_attempt": att[0],
+            })
+            return constrain(st), rec
         if fused is not None:
             # One launch for the whole interval: the kernel owns the sweep
             # loop (VMEM-resident states, in-kernel counter PRNG keyed on the
@@ -340,6 +405,7 @@ def make_sharded_interval_step(
     observables = dict(observables or {})
     recycle = spec.do_swap and spec.exchange.n_virtual > 1
     fused = _batched_interval(system)
+    fused_round = _round_interval(system, spec)
     r = spec.n_replicas
 
     def gather(x):
@@ -400,6 +466,30 @@ def make_sharded_interval_step(
                 )
             return local
 
+        if fused_round is not None:
+            # The replica axis cannot be sharded *through* an exchange, so
+            # the multi-device analogue of the whole-round kernel is the
+            # per-shard fused sweeps above plus this device-resident exchange
+            # on the gathered rows — drawn from the SAME counter-PRNG swap
+            # stream the round kernel uses (`repro.kernels.exchange`), which
+            # keeps a sharded ``use_fused_round`` run bit-equal to the
+            # single-device whole-round launch at identical seeds.
+            new_rung, acc, prob, att, _ = kernel_exchange.exchange_step(
+                full.rung, full.energy, betas, st.phase,
+                kernel_prng.key_words(st.key),
+                pairing=spec.exchange.name, criterion=spec.criterion,
+            )
+            full = dataclasses.replace(
+                full, rung=new_rung, phase=full.phase + 1
+            )
+            st = pull_back(st, full)
+            rec = dict(_observe_full(observables, st, full))
+            rec.update({
+                "swap_accept": acc,
+                "swap_prob": prob,
+                "swap_attempt": att,
+            })
+            return st, rec, full.rung
         if recycle:
             partner, perm, swap_diag = _swap_decision(spec, betas, full)
             weights = spec.exchange.estimator_weights(

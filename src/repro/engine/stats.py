@@ -173,7 +173,11 @@ def _assemble(n, wsum, means, m2s, attempts, accepts, round_trips, up, labeled):
     # Per-rung weight totals drive the variance denominator; for classical
     # (unweighted) runs wsum == n at every rung, so this is the familiar
     # n - 1.  VMPT weights sum to 1 per record, so the same identity holds.
-    denom = np.maximum(wsum - 1.0, 1.0)
+    # Guard explicitly at wsum <= 1 (zero/one records: variance undefined,
+    # report m2 as-is) instead of max(wsum-1, 1), which also silently clamped
+    # every fractional pooled weight in (1, 2) — early-run VMPT — inflating
+    # the denominator and underestimating the variance there.
+    denom = np.where(wsum > 1.0, wsum - 1.0, 1.0)
     for k in means:
         out[f"mean_{k}"] = means[k]
         out[f"var_{k}"] = m2s[k] / denom
@@ -221,7 +225,14 @@ def combine_chains(stats: OnlineStats) -> dict[str, np.ndarray]:
     n = n_c.sum()
     ws_c = np.asarray(stats.weight_sum, np.float64)  # (C, R)
     ws = ws_c.sum(axis=0)  # (R,)
-    w = ws_c / np.maximum(ws, 1.0)  # (C, R) per-rung chain weights
+    # Per-rung chain weights must sum to exactly 1 over chains wherever any
+    # weight exists: normalizing by max(ws, 1) made them sum to ws < 1 when a
+    # rung's pooled estimator weight was below 1 (VMPT early in a run, where
+    # per-record weights are fractional), biasing the grand mean toward zero.
+    # Normalize by the true total with an explicit zero guard instead.
+    w = np.divide(
+        ws_c, ws, out=np.zeros_like(ws_c), where=ws > 0
+    )  # (C, R) per-rung chain weights
     means, m2s = {}, {}
     for k in stats.mean:
         cm = np.asarray(stats.mean[k], np.float64)  # (C, R)

@@ -30,6 +30,7 @@ def hbm_bytes_per_cell_sweep(
     *,
     fused: bool,
     sweeps_per_interval: int = 1,
+    rounds_per_launch: int = 1,
     state_bytes: float = 2.0,
     uniform_plane_bytes: float = 8.0,
 ) -> float:
@@ -38,9 +39,11 @@ def hbm_bytes_per_cell_sweep(
     Per-sweep path: ``state_bytes`` (int8 state in + out) **plus the
     uniforms stream** — ``uniform_plane_bytes`` written per cell by the
     external generator and the same read back by the kernel.  Fused path:
-    the state block crosses HBM once each way per *interval*
-    (``state_bytes`` amortized over ``sweeps_per_interval`` sweeps); the
-    randoms come from the in-kernel counter PRNG and never exist in HBM.
+    the state block crosses HBM once each way per *launch*
+    (``state_bytes`` amortized over ``sweeps_per_interval`` sweeps per PT
+    round × ``rounds_per_launch`` rounds — the whole-round kernels fold the
+    exchange in, so a multi-round launch never touches HBM between rounds);
+    the randoms come from the in-kernel counter PRNG and never exist in HBM.
 
     Defaults model the Ising kernel (one f32 uniform per cell per colour =
     8 B/cell/sweep each way -> 18 B/cell/sweep unfused); Potts passes
@@ -50,7 +53,9 @@ def hbm_bytes_per_cell_sweep(
         return state_bytes + 2.0 * uniform_plane_bytes
     if sweeps_per_interval < 1:
         raise ValueError("sweeps_per_interval must be >= 1")
-    return state_bytes / sweeps_per_interval
+    if rounds_per_launch < 1:
+        raise ValueError("rounds_per_launch must be >= 1")
+    return state_bytes / (sweeps_per_interval * rounds_per_launch)
 
 _FREE_OPS = (
     "parameter(", "constant(", "tuple(", "get-tuple-element(", "bitcast(",

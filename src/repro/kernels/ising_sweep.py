@@ -12,7 +12,7 @@ re-thought for the TPU memory hierarchy (DESIGN.md §2/§6):
 * spins are int8 in HBM (8× denser than the f32 math dtype) and are widened
   to f32 only inside VMEM.
 
-Two kernels share that tile strategy (DESIGN.md §6):
+Three kernels share that tile strategy (DESIGN.md §6):
 
 * ``ising_sweep_pallas`` — **one sweep per launch**; the random uniforms are
   a kernel *input* stream ``(R, 2, L, L)`` f32, so the CPU
@@ -30,6 +30,18 @@ Two kernels share that tile strategy (DESIGN.md §6):
   recipe) applied to the TPU memory hierarchy.  The stream is deterministic
   pure-uint32 arithmetic, so interpret mode is bit-exact with repeated
   `ref.ising_sweep` application fed `prng.ising_sweep_uniforms`.
+* ``ising_round_fused_pallas`` — **one launch = whole PT round(s)**: sweeps
+  *plus* the temp-mode DEO/SEO exchange, with the swap uniforms drawn from
+  the counter PRNG's swap stream (`prng.swap_uniforms`) and the slot↔rung
+  permutation applied in-kernel (`repro.kernels.exchange`).  Eliminates the
+  per-swap kernel exit + host round-trip entirely; with ``n_rounds > 1``
+  the spin block stays VMEM-resident across multiple exchanges.
+
+All fused variants take ``pack_bits``: bit-plane **multispin packing** of
+the replica axis (Weigel, arXiv:1004.0023) — spins live as 1 bit per
+replica in uint32 words, neighbour counts come from a bitwise full-adder
+tree, and ΔE is table-selected per replica; bitwise-identical trajectories
+to the unpacked path (pinned by tests).
 
 VMEM working set per grid step (bytes; pinned by tests/test_kernels.py and
 checked by the tile sweep):
@@ -53,6 +65,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import exchange as _kx
 from repro.kernels import prng
 
 
@@ -150,9 +163,171 @@ def ising_sweep_pallas(
     )(spins, u, betas)
 
 
+def _parity(l: int) -> jnp.ndarray:
+    """(l, l) checkerboard colour map from 2-D iotas (Mosaic-safe)."""
+    ii = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    return (ii + jj) % 2
+
+
+def _ising_sweep_body(s, beta, parity, w0, w1, *, j, b, rule):
+    """One checkerboard sweep (two half-sweeps) on a widened f32 spin block.
+
+    Shared by the interval-fused and whole-round kernels; the op sequence is
+    byte-for-byte the per-sweep kernel's, which is what keeps every fused
+    variant bit-exact against repeated `ref.ising_sweep` application.
+    Returns ``(s', delta_e (r,), n_accepted (r,))``.
+    """
+    l = parity.shape[-1]
+    beta3 = beta[:, None, None]
+    ds = jnp.zeros(s.shape[0], jnp.float32)
+    na = jnp.zeros(s.shape[0], jnp.int32)
+    for color in (0, 1):  # static unroll, exactly as the per-sweep kernel
+        u = prng.plane_uniforms(w0, w1, color, l, l)
+        nbr = (
+            _roll1(s, 1, 1) + _roll1(s, -1, 1)
+            + _roll1(s, 1, 2) + _roll1(s, -1, 2)
+        )
+        de = 2.0 * s * (j * nbr - b)
+        accept = (u < _accept_prob(de, beta3, rule)) & (parity == color)
+        s = jnp.where(accept, -s, s)
+        ds = ds + jnp.sum(jnp.where(accept, de, 0.0), axis=(1, 2))
+        na = na + jnp.sum(accept.astype(jnp.int32), axis=(1, 2))
+    return s, ds, na
+
+
+# -- bit-plane multispin packing (Weigel, arXiv:1004.0023 §multi-spin) ---------
+#
+# An Ising spin is one bit; storing a replica block as f32 planes spends 32×
+# the state bytes and runs the neighbour reduction on r_blk separate f32
+# planes.  Packing the *replica axis* into uint32 bit-plane words (spin k of
+# word w = replica 32w+k; up=1) lets one logical op update 32 replicas'
+# worth of lattice at once: the 4-neighbour up-count (0..4) comes from a
+# bitwise full-adder tree over the 4 rolled word planes, and ΔE is selected
+# per replica from the 10 possible values (s ∈ {−1,+1} × count ∈ 0..4) by
+# nested `where`s on the count's 3 bit-planes.  The table entries are built
+# with the *same f32 op sequence* as the unpacked ``2.0 * s * (j*nbr - b)``
+# and the accept/ΔE planes are restacked to (r, l, l) before the *same* sum
+# reductions, so the packed path is bit-equal to the unpacked one — pinned
+# by tests/test_kernels.py.
+
+
+def _pack_spins(s: jnp.ndarray):
+    """(r, l, l) ±1 f32 → tuple of ⌈r/32⌉ (l, l) uint32 bit-plane words."""
+    r = s.shape[0]
+    words = []
+    for w in range((r + 31) // 32):
+        acc = jnp.zeros(s.shape[1:], jnp.uint32)
+        for k in range(min(32, r - 32 * w)):
+            bit = (s[32 * w + k] > 0).astype(jnp.uint32)
+            acc = acc | (bit << jnp.uint32(k))
+        words.append(acc)
+    return tuple(words)
+
+
+def _unpack_spins(words, r: int) -> jnp.ndarray:
+    """Inverse of `_pack_spins`: bit-plane words → (r, l, l) ±1 f32."""
+    planes = []
+    for i in range(r):
+        bit = (words[i // 32] >> jnp.uint32(i % 32)) & jnp.uint32(1)
+        planes.append(2.0 * bit.astype(jnp.float32) - 1.0)
+    return jnp.stack(planes)
+
+
+def _majority(a, b, c):
+    return (a & b) | (a & c) | (b & c)
+
+
+def _sel_cnt(n0, n1, n2, vals):
+    """Select ``vals[cnt]`` from the count's bit-planes (cnt = n0+2·n1+4·n2).
+
+    cnt ∈ 0..4, so n2 set implies n0 = n1 = 0; two nested `where` levels
+    cover all five values without a gather.
+    """
+    lo = jnp.where(n0 > 0, vals[1], vals[0])
+    mid = jnp.where(n0 > 0, vals[3], vals[2])
+    x = jnp.where(n1 > 0, mid, lo)
+    return jnp.where(n2 > 0, vals[4], x)
+
+
+def _ising_de_tables(j, b):
+    """ΔE(s, count) lookup rows, one per spin sign, f32-op-identical.
+
+    Entry ``cnt`` is ``2.0 * s * (j * nbr - b)`` with ``nbr = 2·cnt − 4``,
+    evaluated with the same jnp f32 op order as the unpacked body so the
+    selected values match it bitwise.
+    """
+    rows = {}
+    for sv in (-1.0, 1.0):
+        s = jnp.float32(sv)
+        rows[sv] = [
+            2.0 * s * (j * jnp.float32(2 * cnt - 4) - b) for cnt in range(5)
+        ]
+    return rows[-1.0], rows[1.0]
+
+
+def _ising_sweep_body_packed(words, beta, parity, w0, w1, *, j, b, rule):
+    """`_ising_sweep_body` on bit-plane-packed spins (same pytree protocol).
+
+    ``words`` is the `_pack_spins` tuple; r is recovered from the per-replica
+    sweep-key shape.  The uniforms draw, acceptance comparison, and ΔE /
+    acceptance reductions reuse the exact unpacked expressions on restacked
+    (r, l, l) planes — only the spin storage and neighbour count differ.
+    """
+    r = w0.shape[0]
+    neg_tab, pos_tab = _ising_de_tables(j, b)
+    one = jnp.uint32(1)
+    ds = jnp.zeros(r, jnp.float32)
+    na = jnp.zeros(r, jnp.int32)
+    for color in (0, 1):
+        u = prng.plane_uniforms(w0, w1, color, parity.shape[-1], parity.shape[-1])
+        new_words = []
+        de_planes = []
+        acc_planes = []
+        for wi, word in enumerate(words):
+            # 4-neighbour up-count via a bitwise full adder on rolled planes:
+            # count bit-planes (n0, n1, n2) hold cnt = n0 + 2·n1 + 4·n2.
+            up = _roll1(word, 1, 0)
+            dn = _roll1(word, -1, 0)
+            lf = _roll1(word, 1, 1)
+            rt = _roll1(word, -1, 1)
+            s0, c0 = up ^ dn, up & dn
+            s1, c1 = lf ^ rt, lf & rt
+            n0 = s0 ^ s1
+            c2 = s0 & s1
+            n1 = c0 ^ c1 ^ c2
+            n2 = _majority(c0, c1, c2)
+            flips = jnp.zeros_like(word)
+            for k in range(min(32, r - 32 * wi)):
+                i = 32 * wi + k
+                kk = jnp.uint32(k)
+                sbit = (word >> kk) & one
+                b0 = (n0 >> kk) & one
+                b1 = (n1 >> kk) & one
+                b2 = (n2 >> kk) & one
+                de = jnp.where(
+                    sbit > 0,
+                    _sel_cnt(b0, b1, b2, pos_tab),
+                    _sel_cnt(b0, b1, b2, neg_tab),
+                )
+                accept = (u[i] < _accept_prob(de, beta[i], rule)) & (
+                    parity == color
+                )
+                flips = flips | (accept.astype(jnp.uint32) << kk)
+                de_planes.append(de)
+                acc_planes.append(accept)
+            new_words.append(word ^ flips)
+        words = tuple(new_words)
+        de = jnp.stack(de_planes)
+        accept = jnp.stack(acc_planes)
+        ds = ds + jnp.sum(jnp.where(accept, de, 0.0), axis=(1, 2))
+        na = na + jnp.sum(accept.astype(jnp.int32), axis=(1, 2))
+    return words, ds, na
+
+
 def _ising_sweep_fused_kernel(
     spins_ref, beta_ref, kw_ref, t0_ref, off_ref, out_ref, de_ref, nacc_ref,
-    *, n_sweeps, r_blk, j, b, rule,
+    *, n_sweeps, r_blk, j, b, rule, pack_bits,
 ):
     """``n_sweeps`` checkerboard sweeps over an (r_blk, L, L) block.
 
@@ -164,14 +339,14 @@ def _ising_sweep_fused_kernel(
     the streams the single-device launch would.  ΔE/acceptance accumulate
     per replica with the *same association order* as per-sweep oracle
     application (per-colour within a sweep, then per-sweep), so the f32
-    totals are bit-equal too.
+    totals are bit-equal too.  With ``pack_bits`` the in-VMEM spin storage
+    is bit-plane packed along the replica axis (multispin coding); the
+    trajectory is unchanged bitwise.
     """
     s = spins_ref[...].astype(jnp.float32)  # widen in VMEM only
     l = s.shape[-1]
-    ii = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
-    jj = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
-    parity = (ii + jj) % 2
-    beta = beta_ref[...].astype(jnp.float32)[:, None, None]
+    parity = _parity(l)
+    beta = beta_ref[...].astype(jnp.float32)
     sk0, sk1 = prng.stream_key(kw_ref[...])
     rep = (
         jax.lax.broadcasted_iota(jnp.uint32, (r_blk,), 0)
@@ -179,29 +354,21 @@ def _ising_sweep_fused_kernel(
         + off_ref[0]
     )
     t0 = t0_ref[0]
+    body = _ising_sweep_body_packed if pack_bits else _ising_sweep_body
+    carry0 = _pack_spins(s) if pack_bits else s
 
     def sweep(i, carry):
         s, de_total, n_acc = carry
         w0, w1 = prng.sweep_key(sk0, sk1, t0 + i.astype(jnp.uint32), rep)
-        ds = jnp.zeros(r_blk, jnp.float32)
-        na = jnp.zeros(r_blk, jnp.int32)
-        for color in (0, 1):  # static unroll, exactly as the per-sweep kernel
-            u = prng.plane_uniforms(w0, w1, color, l, l)
-            nbr = (
-                _roll1(s, 1, 1) + _roll1(s, -1, 1)
-                + _roll1(s, 1, 2) + _roll1(s, -1, 2)
-            )
-            de = 2.0 * s * (j * nbr - b)
-            accept = (u < _accept_prob(de, beta, rule)) & (parity == color)
-            s = jnp.where(accept, -s, s)
-            ds = ds + jnp.sum(jnp.where(accept, de, 0.0), axis=(1, 2))
-            na = na + jnp.sum(accept.astype(jnp.int32), axis=(1, 2))
+        s, ds, na = body(s, beta, parity, w0, w1, j=j, b=b, rule=rule)
         return s, de_total + ds, n_acc + na
 
     s, de_total, n_acc = jax.lax.fori_loop(
         0, n_sweeps, sweep,
-        (s, jnp.zeros(r_blk, jnp.float32), jnp.zeros(r_blk, jnp.int32)),
+        (carry0, jnp.zeros(r_blk, jnp.float32), jnp.zeros(r_blk, jnp.int32)),
     )
+    if pack_bits:
+        s = _unpack_spins(s, r_blk)
     out_ref[...] = s.astype(jnp.int8)
     de_ref[...] = de_total
     nacc_ref[...] = n_acc
@@ -219,6 +386,7 @@ def ising_sweep_fused_pallas(
     b: float = 0.0,
     rule: str = "metropolis",
     r_blk: int = 8,
+    pack_bits: bool = False,
     interpret: bool = True,
 ):
     """Interval-fused pallas_call wrapper (see module docstring).
@@ -232,6 +400,8 @@ def ising_sweep_fused_pallas(
       replica_offset: (1,) uint32 global index of local slot 0 (sharded
         replica axis); default 0 keeps single-device streams unchanged.
       r_blk: replicas per grid step (the Fig.-6 "block size" analogue).
+      pack_bits: bit-plane-pack the replica axis inside the kernel
+        (multispin coding); bitwise-identical trajectory, denser VMEM.
       interpret: True on CPU; False on real TPU.
 
     Returns ``(spins', delta_e, n_accepted)`` with ΔE/acceptance summed over
@@ -245,6 +415,7 @@ def ising_sweep_fused_pallas(
     kernel = functools.partial(
         _ising_sweep_fused_kernel,
         n_sweeps=n_sweeps, r_blk=r_blk, j=j, b=b, rule=rule,
+        pack_bits=pack_bits,
     )
     return pl.pallas_call(
         kernel,
@@ -268,6 +439,160 @@ def ising_sweep_fused_pallas(
         ],
         interpret=interpret,
     )(spins, betas, key_words, t0, replica_offset)
+
+
+def _ising_round_fused_kernel(
+    spins_ref, beta_ref, kw_ref, t0_ref, ph0_ref, rung_ref, energy_ref,
+    out_ref, rung_out_ref, energy_out_ref, nacc_ref, acc_ref, prob_ref,
+    att_ref,
+    *, n_sweeps, n_rounds, r, j, b, rule, criterion, pairing, pack_bits,
+):
+    """``n_rounds`` full PT rounds — sweeps *and* exchange — in one launch.
+
+    Each round is ``n_sweeps`` checkerboard sweeps (the shared
+    `_ising_sweep_body`, at each slot's current rung temperature) followed by
+    one temp-mode DEO/SEO exchange (`exchange.exchange_step`) on the
+    in-VMEM energy row, drawn from the counter PRNG's swap stream at the
+    global swap-phase counter.  The exchange couples every replica, so the
+    whole ladder is one grid step (``grid=(1,)``; no r_blk tiling, no
+    padding) — exactly the regime whole-round fusion targets: R·L² small
+    enough that per-swap kernel exits, not compute, dominate.
+
+    ``beta_ref`` is the (R,) rung-ordered ladder; the per-slot sweep
+    temperature is its one-hot gather at the slot's rung, bitwise the
+    ``betas[rung]`` the interval-fused driver path feeds the sweep kernel.
+    Diagnostics (`accept/prob/attempt` in `core.swap.accept_pairs`
+    conventions) are written per round; int32 stands in for bool on the
+    accept/attempt planes (kernel outputs stay in Mosaic-friendly dtypes).
+    """
+    s = spins_ref[...].astype(jnp.float32)
+    l = s.shape[-1]
+    parity = _parity(l)
+    betas_rung = beta_ref[...].astype(jnp.float32)
+    kw = kw_ref[...]
+    sk0, sk1 = prng.stream_key(kw)
+    rep = jax.lax.broadcasted_iota(jnp.uint32, (r,), 0)
+    t0 = t0_ref[0]
+    ph0 = ph0_ref[0]
+    rung = rung_ref[...]
+    energy = energy_ref[...]
+    body = _ising_sweep_body_packed if pack_bits else _ising_sweep_body
+    carry = _pack_spins(s) if pack_bits else s
+    nacc_total = jnp.zeros(r, jnp.int32)
+
+    for k in range(n_rounds):  # static unroll: one exchange per round
+        beta_slot = _kx.onehot_gather(betas_rung, rung.astype(jnp.int32))
+        t_base = t0 + jnp.uint32(k * n_sweeps)
+
+        def sweep(i, c, _beta=beta_slot, _t=t_base):
+            s, de_total, n_acc = c
+            w0, w1 = prng.sweep_key(sk0, sk1, _t + i.astype(jnp.uint32), rep)
+            s, ds, na = body(s, _beta, parity, w0, w1, j=j, b=b, rule=rule)
+            return s, de_total + ds, n_acc + na
+
+        carry, de_total, na = jax.lax.fori_loop(
+            0, n_sweeps, sweep,
+            (carry, jnp.zeros(r, jnp.float32), jnp.zeros(r, jnp.int32)),
+        )
+        # Same accumulation order as the driver: interval ΔE summed in the
+        # sweep loop, then one f32 add onto the running per-slot energy.
+        energy = energy + de_total
+        nacc_total = nacc_total + na
+        rung, acc, prob, att, _ = _kx.exchange_step(
+            rung, energy, betas_rung, ph0 + jnp.int32(k), kw,
+            pairing=pairing, criterion=criterion,
+        )
+        acc_ref[k, :] = acc.astype(jnp.int32)
+        prob_ref[k, :] = prob
+        att_ref[k, :] = att.astype(jnp.int32)
+
+    if pack_bits:
+        carry = _unpack_spins(carry, r)
+    out_ref[...] = carry.astype(jnp.int8)
+    rung_out_ref[...] = rung
+    energy_out_ref[...] = energy
+    nacc_ref[...] = nacc_total
+
+
+def ising_round_fused_pallas(
+    spins: jnp.ndarray,
+    key_words: jnp.ndarray,
+    t0: jnp.ndarray,
+    phase0: jnp.ndarray,
+    rung: jnp.ndarray,
+    energy: jnp.ndarray,
+    betas: jnp.ndarray,
+    *,
+    n_sweeps: int,
+    n_rounds: int = 1,
+    j: float = 1.0,
+    b: float = 0.0,
+    rule: str = "metropolis",
+    criterion: str = "logistic",
+    pairing: str = "deo",
+    pack_bits: bool = False,
+    interpret: bool = True,
+):
+    """Whole-PT-round pallas_call wrapper: one launch = ``n_rounds`` rounds.
+
+    Args:
+      spins: (R, L, L) int8 (whole ladder; no r_blk padding — the exchange
+        couples all replicas, so the launch is a single grid step).
+      key_words: (2,) uint32 run-key words (`prng.key_words`).
+      t0: (1,) uint32 global sweep counter at entry.
+      phase0: (1,) int32 global swap-phase counter at entry.
+      rung: (R,) int32 slot→rung map; energy: (R,) f32 per-slot energies.
+      betas: (R,) f32 inverse temperatures in rung order (cold→hot).
+      n_sweeps: sweeps per round (the swap interval, static).
+      n_rounds: PT rounds fused into this launch (static).
+      pairing: "deo" | "seo"; criterion: "logistic" | "metropolis".
+      pack_bits: bit-plane multispin storage in VMEM (bitwise-identical).
+      interpret: True on CPU; False on real TPU.
+
+    Returns ``(spins', rung', energy', n_accepted, accept, prob, attempt)``
+    with the three diagnostic rows shaped (n_rounds, R) (accept/attempt as
+    int32 0/1).
+    """
+    r, l, _ = spins.shape
+    kernel = functools.partial(
+        _ising_round_fused_kernel,
+        n_sweeps=n_sweeps, n_rounds=n_rounds, r=r, j=j, b=b, rule=rule,
+        criterion=criterion, pairing=pairing, pack_bits=pack_bits,
+    )
+    row = pl.BlockSpec((r,), lambda i: (0,))
+    diag = pl.BlockSpec((n_rounds, r), lambda i: (0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),  # the exchange couples all replicas: one grid step
+        in_specs=[
+            pl.BlockSpec((r, l, l), lambda i: (0, 0, 0)),
+            row,
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            row,
+            row,
+        ],
+        out_specs=[
+            pl.BlockSpec((r, l, l), lambda i: (0, 0, 0)),
+            row,
+            row,
+            row,
+            diag,
+            diag,
+            diag,
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, l, l), jnp.int8),
+            jax.ShapeDtypeStruct((r,), jnp.int32),
+            jax.ShapeDtypeStruct((r,), jnp.float32),
+            jax.ShapeDtypeStruct((r,), jnp.int32),
+            jax.ShapeDtypeStruct((n_rounds, r), jnp.int32),
+            jax.ShapeDtypeStruct((n_rounds, r), jnp.float32),
+            jax.ShapeDtypeStruct((n_rounds, r), jnp.int32),
+        ],
+        interpret=interpret,
+    )(spins, betas, key_words, t0, phase0, rung, energy)
 
 
 def vmem_working_set_bytes(r_blk: int, length: int) -> int:
@@ -299,16 +624,48 @@ def vmem_working_set_bytes_fused(r_blk: int, length: int) -> int:
     return spins_in + bits + uniforms + widened + nbr + out + rng_state
 
 
+def vmem_working_set_bytes_packed(r_blk: int, length: int) -> int:
+    """VMEM budget of the fused kernel with bit-plane multispin packing.
+
+    The f32 widened carry (4 B/cell) and the f32 neighbour-sum plane
+    (4 B/cell) are replaced by ⌈r_blk/32⌉ uint32 bit-plane words plus the
+    full-adder count planes (rolled plane + 3 count bit-planes, all uint32)
+    and per-replica selected-ΔE / accept planes (4 + 1 B/cell).  Net:
+    18 → 15 + 20·⌈r_blk/32⌉·L²/cells B/cell (17.5 at r_blk=8, 15.6 at 32) —
+    a modest VMEM saving; the real packing win is the neighbour reduction
+    running on uint32 words (32 replica lanes per logical op) instead of
+    r_blk separate f32 planes.
+    """
+    cells = r_blk * length * length
+    plane = length * length
+    n_words = -(-r_blk // 32)
+    spins_in = cells  # int8 in
+    packed = 4 * n_words * plane  # bit-plane spin carry (replaces f32 widened)
+    adder = 4 * 4 * n_words * plane  # rolled plane + 3 count bit-planes
+    bits = cells * 4  # uint32 PRNG draw, active colour
+    uniforms = cells * 4  # f32 uniforms, active colour
+    de_sel = cells * 4  # selected-ΔE planes (replaces f32 neighbour sum)
+    accept = cells  # accept planes (bool)
+    out = cells  # int8 out
+    rng_state = 4 * 4 * r_blk
+    return (
+        spins_in + packed + adder + bits + uniforms + de_sel + accept + out
+        + rng_state
+    )
+
+
 def hbm_bytes_per_cell_sweep(
-    *, fused: bool, sweeps_per_interval: int = 1
+    *, fused: bool, sweeps_per_interval: int = 1, rounds_per_launch: int = 1
 ) -> float:
     """Modeled HBM bytes per lattice cell per sweep (O(R) scalars excluded).
 
     Per-sweep path: int8 spins in+out (2 B) **plus the uniforms stream** —
     8 B/cell written by the external generator and 8 B/cell read back by the
     kernel — 18 B/cell/sweep.  Fused path: the spin block crosses HBM once
-    each way per *interval*, so 2 B/cell amortized over
-    ``sweeps_per_interval`` sweeps; the randoms never exist in HBM.
+    each way per *launch*, so 2 B/cell amortized over ``sweeps_per_interval
+    × rounds_per_launch`` sweeps (the whole-round kernels fold the exchange
+    in too, so multi-round launches never touch HBM between rounds); the
+    randoms never exist in HBM.
 
     Delegates to `repro.hlo.traffic.hbm_bytes_per_cell_sweep` — the shared
     model the roofline report and traffic assertions also consume.
@@ -317,5 +674,6 @@ def hbm_bytes_per_cell_sweep(
 
     return model(
         fused=fused, sweeps_per_interval=sweeps_per_interval,
+        rounds_per_launch=rounds_per_launch,
         state_bytes=2.0, uniform_plane_bytes=8.0,
     )

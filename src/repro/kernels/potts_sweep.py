@@ -8,16 +8,27 @@ to int32 only inside VMEM.  The proposal randoms ride alongside the
 acceptance randoms as kernel inputs, so the CPU `interpret=True` path is
 bit-exact with `ref.potts_sweep`.
 
-Like the Ising kernel, two variants share the tile strategy (DESIGN.md §6):
+Like the Ising kernel, the variants share the tile strategy (DESIGN.md §6):
 ``potts_sweep_pallas`` (one sweep per launch, uniforms as an input stream —
-bit-exact vs `ref.potts_sweep`) and ``potts_sweep_fused_pallas`` (one swap
+bit-exact vs `ref.potts_sweep`), ``potts_sweep_fused_pallas`` (one swap
 *interval* per launch: all ``n_sweeps`` sweeps with the colour block
 VMEM-resident, the four uniform planes per sweep generated in-kernel by the
 counter PRNG `repro.kernels.prng` at ``(key, sweep, replica, 2*colour +
-(proposal|accept))``, ΔE/acceptance accumulated in-kernel).  Modeled HBM
-traffic drops from 34 B/cell/sweep (int8 in/out + 16 B of uniforms written
-externally + 16 B read back) to 2 B/cell/*interval* plus O(R) scalars
+(proposal|accept))``, ΔE/acceptance accumulated in-kernel), and
+``potts_round_fused_pallas`` (one launch = whole PT round(s): sweeps plus
+the temp-mode DEO/SEO exchange via `repro.kernels.exchange`, swap uniforms
+from the counter PRNG's swap stream).  Modeled HBM traffic drops from
+34 B/cell/sweep (int8 in/out + 16 B of uniforms written externally + 16 B
+read back) to 2 B/cell/*launch* plus O(R) scalars
 (`hbm_bytes_per_cell_sweep`).
+
+The fused variants take ``pack_bits``: a Potts colour does not compress to
+one bit, so "packing" here keeps the lattice in its dense **int8 lanes**
+through the whole update (proposal, trial, equality comparisons) instead of
+widening to int32 — 4× denser working state, valid for ``q ≤ 64`` (the
+int8 intermediate ``s + d`` peaks at ``2q − 2``).  Comparisons and selects
+on int8 produce the same booleans, so the trajectory is bitwise identical
+(pinned by tests).
 
 VMEM working set per grid step ≈ r_blk · H · W · (2 int8 in/out + 4·4 u-f32 +
 2·4 i32 working copies + 4 de-f32) = 30·r_blk·H·W bytes — roughly 2.3× the
@@ -36,6 +47,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import exchange as _kx
 from repro.kernels import prng
 
 
@@ -142,9 +154,54 @@ def potts_sweep_pallas(
     )(states, u, betas)
 
 
+def _parity(h: int, w: int) -> jnp.ndarray:
+    """(h, w) checkerboard colour map from 2-D iotas (Mosaic-safe)."""
+    ii = jax.lax.broadcasted_iota(jnp.int32, (h, w), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (h, w), 1)
+    return (ii + jj) % 2
+
+
+def _potts_sweep_body(s, beta, parity, w0, w1, *, q, j, rule, packed):
+    """One checkerboard Potts sweep on the in-VMEM colour block.
+
+    Shared by the interval-fused and whole-round kernels.  ``packed`` keeps
+    the update in int8 lanes (multispin-style dense storage, q ≤ 64)
+    instead of the int32 working copy; equality comparisons and the accept
+    select produce identical booleans either way, so the two modes are
+    bitwise-identical — only the VMEM working set differs.
+    Returns ``(s', delta_e (r,), n_accepted (r,))``.
+    """
+    h, w = parity.shape
+    beta3 = beta[:, None, None]
+    ds = jnp.zeros(s.shape[0], jnp.float32)
+    na = jnp.zeros(s.shape[0], jnp.int32)
+    for color in (0, 1):  # static unroll, exactly as the per-sweep kernel
+        u_prop = prng.plane_uniforms(w0, w1, 2 * color + 0, h, w)
+        u_acc = prng.plane_uniforms(w0, w1, 2 * color + 1, h, w)
+        if packed:
+            # int8 lanes throughout: s + d peaks at 2q-2 <= 126 for q <= 64
+            d = 1 + jnp.floor(u_prop * (q - 1)).astype(jnp.int8)
+            trial = jax.lax.rem((s + d).astype(jnp.int8), jnp.int8(q))
+        else:
+            d = 1 + jnp.floor(u_prop * (q - 1)).astype(jnp.int32)
+            trial = jax.lax.rem(s + d, q)
+        de = jnp.zeros(s.shape, jnp.float32)
+        for axis, shift in ((1, 1), (1, -1), (2, 1), (2, -1)):
+            nbr = _roll1(s, shift, axis)
+            de = de + j * (
+                (s == nbr).astype(jnp.float32)
+                - (trial == nbr).astype(jnp.float32)
+            )
+        accept = (u_acc < _accept_prob(de, beta3, rule)) & (parity == color)
+        s = jnp.where(accept, trial, s)
+        ds = ds + jnp.sum(jnp.where(accept, de, 0.0), axis=(1, 2))
+        na = na + jnp.sum(accept.astype(jnp.int32), axis=(1, 2))
+    return s, ds, na
+
+
 def _potts_sweep_fused_kernel(
     states_ref, beta_ref, kw_ref, t0_ref, off_ref, out_ref, de_ref, nacc_ref,
-    *, n_sweeps, r_blk, q, j, rule,
+    *, n_sweeps, r_blk, q, j, rule, pack_bits,
 ):
     """``n_sweeps`` checkerboard Potts sweeps over an (r_blk, H, W) block.
 
@@ -153,14 +210,13 @@ def _potts_sweep_fused_kernel(
     (plane ``2*colour + (0 proposal | 1 accept)``) keyed on the *global*
     replica counter (block offset + ``off_ref`` under replica-axis sharding),
     and ΔE/acceptance accumulate in the per-sweep oracle's association order
-    (bit-equal f32).
+    (bit-equal f32).  ``pack_bits`` keeps the lattice in int8 lanes instead
+    of widening to int32 (same trajectory bitwise, q ≤ 64).
     """
-    s = states_ref[...].astype(jnp.int32)  # widen in VMEM only
+    s = states_ref[...] if pack_bits else states_ref[...].astype(jnp.int32)
     h, w = s.shape[-2], s.shape[-1]
-    ii = jax.lax.broadcasted_iota(jnp.int32, (h, w), 0)
-    jj = jax.lax.broadcasted_iota(jnp.int32, (h, w), 1)
-    parity = (ii + jj) % 2
-    beta = beta_ref[...].astype(jnp.float32)[:, None, None]
+    parity = _parity(h, w)
+    beta = beta_ref[...].astype(jnp.float32)
     sk0, sk1 = prng.stream_key(kw_ref[...])
     rep = (
         jax.lax.broadcasted_iota(jnp.uint32, (r_blk,), 0)
@@ -172,24 +228,9 @@ def _potts_sweep_fused_kernel(
     def sweep(i, carry):
         s, de_total, n_acc = carry
         w0, w1 = prng.sweep_key(sk0, sk1, t0 + i.astype(jnp.uint32), rep)
-        ds = jnp.zeros(r_blk, jnp.float32)
-        na = jnp.zeros(r_blk, jnp.int32)
-        for color in (0, 1):  # static unroll, exactly as the per-sweep kernel
-            u_prop = prng.plane_uniforms(w0, w1, 2 * color + 0, h, w)
-            u_acc = prng.plane_uniforms(w0, w1, 2 * color + 1, h, w)
-            d = 1 + jnp.floor(u_prop * (q - 1)).astype(jnp.int32)
-            trial = jax.lax.rem(s + d, q)
-            de = jnp.zeros(s.shape, jnp.float32)
-            for axis, shift in ((1, 1), (1, -1), (2, 1), (2, -1)):
-                nbr = _roll1(s, shift, axis)
-                de = de + j * (
-                    (s == nbr).astype(jnp.float32)
-                    - (trial == nbr).astype(jnp.float32)
-                )
-            accept = (u_acc < _accept_prob(de, beta, rule)) & (parity == color)
-            s = jnp.where(accept, trial, s)
-            ds = ds + jnp.sum(jnp.where(accept, de, 0.0), axis=(1, 2))
-            na = na + jnp.sum(accept.astype(jnp.int32), axis=(1, 2))
+        s, ds, na = _potts_sweep_body(
+            s, beta, parity, w0, w1, q=q, j=j, rule=rule, packed=pack_bits
+        )
         return s, de_total + ds, n_acc + na
 
     s, de_total, n_acc = jax.lax.fori_loop(
@@ -213,6 +254,7 @@ def potts_sweep_fused_pallas(
     j: float = 1.0,
     rule: str = "metropolis",
     r_blk: int = 4,
+    pack_bits: bool = False,
     interpret: bool = True,
 ):
     """Interval-fused pallas_call wrapper (see module docstring).
@@ -225,17 +267,21 @@ def potts_sweep_fused_pallas(
       betas: (R,) f32;  n_sweeps / q: static.
       replica_offset: (1,) uint32 global index of local slot 0 (sharded
         replica axis); default 0 keeps single-device streams unchanged.
+      pack_bits: dense int8-lane storage in VMEM (bitwise-identical; q ≤ 64).
 
     Returns ``(states', delta_e, n_accepted)`` summed over the interval.
     """
     r, h, w = states.shape
     assert r % r_blk == 0, (r, r_blk)
+    if pack_bits and q > 64:
+        raise ValueError(f"pack_bits needs q <= 64 (int8 lanes), got q={q}")
     if replica_offset is None:
         replica_offset = jnp.zeros((1,), jnp.uint32)
     grid = (r // r_blk,)
     kernel = functools.partial(
         _potts_sweep_fused_kernel,
         n_sweeps=n_sweeps, r_blk=r_blk, q=q, j=j, rule=rule,
+        pack_bits=pack_bits,
     )
     return pl.pallas_call(
         kernel,
@@ -259,6 +305,138 @@ def potts_sweep_fused_pallas(
         ],
         interpret=interpret,
     )(states, betas, key_words, t0, replica_offset)
+
+
+def _potts_round_fused_kernel(
+    states_ref, beta_ref, kw_ref, t0_ref, ph0_ref, rung_ref, energy_ref,
+    out_ref, rung_out_ref, energy_out_ref, nacc_ref, acc_ref, prob_ref,
+    att_ref,
+    *, n_sweeps, n_rounds, r, q, j, rule, criterion, pairing, pack_bits,
+):
+    """``n_rounds`` full PT rounds (sweeps + temp-mode exchange) per launch.
+
+    Potts analogue of `_ising_round_fused_kernel` (see that docstring):
+    whole ladder in one grid step, per-slot sweep temperature one-hot
+    gathered from the rung-ordered ladder each round, exchange via the
+    shared `exchange.exchange_step` on the in-VMEM energy row at the global
+    swap-phase counter.
+    """
+    s = states_ref[...] if pack_bits else states_ref[...].astype(jnp.int32)
+    h, w = s.shape[-2], s.shape[-1]
+    parity = _parity(h, w)
+    betas_rung = beta_ref[...].astype(jnp.float32)
+    kw = kw_ref[...]
+    sk0, sk1 = prng.stream_key(kw)
+    rep = jax.lax.broadcasted_iota(jnp.uint32, (r,), 0)
+    t0 = t0_ref[0]
+    ph0 = ph0_ref[0]
+    rung = rung_ref[...]
+    energy = energy_ref[...]
+    nacc_total = jnp.zeros(r, jnp.int32)
+
+    for k in range(n_rounds):  # static unroll: one exchange per round
+        beta_slot = _kx.onehot_gather(betas_rung, rung)
+        t_base = t0 + jnp.uint32(k * n_sweeps)
+
+        def sweep(i, c, _beta=beta_slot, _t=t_base):
+            s, de_total, n_acc = c
+            w0, w1 = prng.sweep_key(sk0, sk1, _t + i.astype(jnp.uint32), rep)
+            s, ds, na = _potts_sweep_body(
+                s, _beta, parity, w0, w1, q=q, j=j, rule=rule,
+                packed=pack_bits,
+            )
+            return s, de_total + ds, n_acc + na
+
+        s, de_total, na = jax.lax.fori_loop(
+            0, n_sweeps, sweep,
+            (s, jnp.zeros(r, jnp.float32), jnp.zeros(r, jnp.int32)),
+        )
+        # Same accumulation order as the driver: interval ΔE summed in the
+        # sweep loop, then one f32 add onto the running per-slot energy.
+        energy = energy + de_total
+        nacc_total = nacc_total + na
+        rung, acc, prob, att, _ = _kx.exchange_step(
+            rung, energy, betas_rung, ph0 + jnp.int32(k), kw,
+            pairing=pairing, criterion=criterion,
+        )
+        acc_ref[k, :] = acc.astype(jnp.int32)
+        prob_ref[k, :] = prob
+        att_ref[k, :] = att.astype(jnp.int32)
+
+    out_ref[...] = s.astype(jnp.int8)
+    rung_out_ref[...] = rung
+    energy_out_ref[...] = energy
+    nacc_ref[...] = nacc_total
+
+
+def potts_round_fused_pallas(
+    states: jnp.ndarray,
+    key_words: jnp.ndarray,
+    t0: jnp.ndarray,
+    phase0: jnp.ndarray,
+    rung: jnp.ndarray,
+    energy: jnp.ndarray,
+    betas: jnp.ndarray,
+    *,
+    n_sweeps: int,
+    q: int,
+    n_rounds: int = 1,
+    j: float = 1.0,
+    rule: str = "metropolis",
+    criterion: str = "logistic",
+    pairing: str = "deo",
+    pack_bits: bool = False,
+    interpret: bool = True,
+):
+    """Whole-PT-round pallas_call wrapper (Potts).
+
+    Same contract as `ising_sweep.ising_round_fused_pallas`: whole ladder,
+    single grid step, returns ``(states', rung', energy', n_accepted,
+    accept, prob, attempt)`` with diagnostics shaped (n_rounds, R)
+    (accept/attempt as int32 0/1).
+    """
+    r, h, w = states.shape
+    if pack_bits and q > 64:
+        raise ValueError(f"pack_bits needs q <= 64 (int8 lanes), got q={q}")
+    kernel = functools.partial(
+        _potts_round_fused_kernel,
+        n_sweeps=n_sweeps, n_rounds=n_rounds, r=r, q=q, j=j, rule=rule,
+        criterion=criterion, pairing=pairing, pack_bits=pack_bits,
+    )
+    row = pl.BlockSpec((r,), lambda i: (0,))
+    diag = pl.BlockSpec((n_rounds, r), lambda i: (0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),  # the exchange couples all replicas: one grid step
+        in_specs=[
+            pl.BlockSpec((r, h, w), lambda i: (0, 0, 0)),
+            row,
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            row,
+            row,
+        ],
+        out_specs=[
+            pl.BlockSpec((r, h, w), lambda i: (0, 0, 0)),
+            row,
+            row,
+            row,
+            diag,
+            diag,
+            diag,
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, h, w), jnp.int8),
+            jax.ShapeDtypeStruct((r,), jnp.int32),
+            jax.ShapeDtypeStruct((r,), jnp.float32),
+            jax.ShapeDtypeStruct((r,), jnp.int32),
+            jax.ShapeDtypeStruct((n_rounds, r), jnp.int32),
+            jax.ShapeDtypeStruct((n_rounds, r), jnp.float32),
+            jax.ShapeDtypeStruct((n_rounds, r), jnp.int32),
+        ],
+        interpret=interpret,
+    )(states, betas, key_words, t0, phase0, rung, energy)
 
 
 def vmem_working_set_bytes(r_blk: int, height: int, width: int) -> int:
@@ -292,15 +470,34 @@ def vmem_working_set_bytes_fused(r_blk: int, height: int, width: int) -> int:
     return states_in + bits + uniforms + widened + trial + de + out + rng_state
 
 
+def vmem_working_set_bytes_packed(r_blk: int, height: int, width: int) -> int:
+    """VMEM budget of the fused Potts kernel with int8-lane packing.
+
+    The i32 working copy and i32 trial lattice (4 B/cell each) stay int8
+    (1 B each): 22 → 16 B/cell.
+    """
+    cells = r_blk * height * width
+    states_in = cells  # int8
+    bits = cells * 4  # uint32 PRNG draw, active plane
+    uniforms = cells * 4  # f32 uniforms, active plane
+    working = cells  # int8 lanes (replaces i32 working copy)
+    trial = cells  # int8 proposal lattice (replaces i32)
+    de = cells * 4  # f32 per-site energy delta
+    out = cells
+    rng_state = 4 * 4 * r_blk
+    return states_in + bits + uniforms + working + trial + de + out + rng_state
+
+
 def hbm_bytes_per_cell_sweep(
-    *, fused: bool, sweeps_per_interval: int = 1
+    *, fused: bool, sweeps_per_interval: int = 1, rounds_per_launch: int = 1
 ) -> float:
     """Modeled HBM bytes per cell per sweep (O(R) scalars excluded).
 
     Per-sweep path: int8 in+out (2 B) + 16 B/cell of uniforms written by the
     external generator + 16 B read back = 34 B/cell/sweep.  Fused: the
-    colour block crosses HBM once each way per interval (2 B/cell amortized
-    over ``sweeps_per_interval``); randoms never exist in HBM.
+    colour block crosses HBM once each way per launch (2 B/cell amortized
+    over ``sweeps_per_interval × rounds_per_launch``); randoms never exist
+    in HBM.
 
     Delegates to `repro.hlo.traffic.hbm_bytes_per_cell_sweep` — the shared
     model the roofline report and traffic assertions also consume.
@@ -309,5 +506,6 @@ def hbm_bytes_per_cell_sweep(
 
     return model(
         fused=fused, sweeps_per_interval=sweeps_per_interval,
+        rounds_per_launch=rounds_per_launch,
         state_bytes=2.0, uniform_plane_bytes=16.0,
     )

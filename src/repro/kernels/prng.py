@@ -43,6 +43,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "DOMAIN",
+    "SWAP_DOMAIN",
     "threefry2x32",
     "key_words",
     "stream_key",
@@ -50,11 +51,22 @@ __all__ = [
     "plane_uniforms",
     "ising_sweep_uniforms",
     "potts_sweep_uniforms",
+    "swap_stream_key",
+    "swap_key",
+    "swap_uniforms",
+    "seo_coin",
 ]
 
 # Domain-separation constant for the fused-sweep stream (arbitrary, fixed
 # forever: changing it changes every fused trajectory).
 DOMAIN = 0x46555345  # ascii "FUSE"
+# Domain-separation constant for the in-kernel *exchange* stream of the
+# whole-round fused kernels.  The round kernel draws its per-rung swap
+# uniforms from (run key, swap-phase counter, rung) inside the launch; this
+# constant keeps those draws disjoint from both the sweep stream above and
+# every `jax.random` fold-in of the same root key.  Like DOMAIN: arbitrary,
+# fixed forever.
+SWAP_DOMAIN = 0x53574150  # ascii "SWAP"
 
 _KS_PARITY = 0x1BD11BDA  # Threefry key-schedule constant
 # Threefry-2x32 rotation schedule: groups of four rounds alternate between
@@ -150,6 +162,56 @@ def ising_sweep_uniforms(words, t, replica_ids, length: int) -> jnp.ndarray:
     return jnp.stack(
         [plane_uniforms(w0, w1, c, length, length) for c in (0, 1)], axis=1
     )
+
+
+# -- counter-based exchange stream (the in-kernel swap draw) -------------------
+#
+# Derivation mirrors the sweep stream, keyed on the swap-*phase* counter
+# (one increment per exchange attempt) instead of the sweep counter:
+#
+#     swap stream key = threefry(key_words, (SWAP_DOMAIN, SWAP_DOMAIN))
+#     swap step key   = threefry(swap stream key, (phase, 0))
+#     rung uniforms   = threefry(swap step key, (0, rung))     # plane 0
+#     SEO phase coin  = threefry(swap step key, (1, 0)) & 1    # plane 1
+#
+# Keying on `phase` (not t) makes the stream invariant to how sweeps are
+# grouped into launches: round k of a multi-round launch draws exactly what
+# k successive single-round launches would.  The stream deliberately differs
+# from the engine's `fold_in(key, 2t+1)` swap draw — like the fused sweep
+# stream, whole-round fusion is gated *statistically* (conformance), with
+# bit-equality pinned against this stream's own pure-JAX oracle.
+
+
+def swap_stream_key(words: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Domain-separated root of the in-kernel exchange stream."""
+    return threefry2x32(words[0], words[1], SWAP_DOMAIN, SWAP_DOMAIN)
+
+
+def swap_key(s0, s1, phase):
+    """Per-swap-iteration subkey; ``phase`` is the global swap counter."""
+    return threefry2x32(s0, s1, jnp.asarray(phase, jnp.uint32), jnp.uint32(0))
+
+
+def swap_uniforms(words: jnp.ndarray, phase, n: int) -> jnp.ndarray:
+    """(n,) f32 in [0,1): one acceptance uniform per rung for swap ``phase``.
+
+    Same top-24-bit scaling as `plane_uniforms`; the counter is the rung
+    index, so the draw at rung r is independent of R (ladder growth never
+    perturbs existing rungs' streams).
+    """
+    s0, s1 = swap_stream_key(words)
+    w0, w1 = swap_key(s0, s1, phase)
+    rung = jax.lax.broadcasted_iota(jnp.uint32, (n,), 0)
+    b0, _ = threefry2x32(w0, w1, jnp.uint32(0), rung)
+    return (b0 >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def seo_coin(words: jnp.ndarray, phase) -> jnp.ndarray:
+    """Scalar int32 in {0, 1}: the SEO even/odd pairing coin for ``phase``."""
+    s0, s1 = swap_stream_key(words)
+    w0, w1 = swap_key(s0, s1, phase)
+    b0, _ = threefry2x32(w0, w1, jnp.uint32(1), jnp.uint32(0))
+    return (b0 & jnp.uint32(1)).astype(jnp.int32)
 
 
 def potts_sweep_uniforms(words, t, replica_ids, h: int, w: int) -> jnp.ndarray:

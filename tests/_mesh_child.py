@@ -63,6 +63,18 @@ def main(outdir: str) -> int:
     out["fused_energy"] = np.asarray(st.pt.energy)
     out["fused_states"] = np.asarray(st.pt.states)
 
+    # whole-round fused path (sharded analogue: per-shard fused sweeps with
+    # replica_offset + device-resident counter-stream exchange); r_local=1
+    # at r_blk=8 also exercises pad > R_local with a nonzero offset, packed
+    eng, st = _engine(
+        mesh, use_fused=True, use_pallas=True, use_fused_round=True,
+        pack_bits=True,
+    )
+    st, _ = eng.run(st, SWEEPS)
+    out["round_energy"] = np.asarray(st.pt.energy)
+    out["round_rung"] = np.asarray(st.pt.rung)
+    out["round_states"] = np.asarray(st.pt.states)
+
     # capacity: fused-kernel VMEM working set > 16 MB on one chip, runs
     # sharded (the parent checks the model numbers; here it must execute)
     big = ising.IsingSystem(length=128)

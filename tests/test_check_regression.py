@@ -1,0 +1,111 @@
+"""Unit tests for the perf-trajectory gate (benchmarks/check_regression.py):
+tolerance-class routing, and the non-numeric hardening — string metrics are
+provenance (warn + skip the drift arithmetic), booleans are structural facts
+(exact-fail on change even outside the EXACT name set)."""
+import json
+import sys
+
+import pytest
+
+sys.path.insert(0, ".")  # repo root: benchmarks is a plain package
+from benchmarks.check_regression import compare_group, main  # noqa: E402
+
+
+def _write(dirpath, records):
+    (dirpath / "BENCH_kernels.json").write_text(
+        json.dumps({"records": records})
+    )
+
+
+def _rows(base_rec, fresh_rec, tmp_path):
+    b, f = tmp_path / "base", tmp_path / "fresh"
+    b.mkdir(), f.mkdir()
+    _write(b, [base_rec])
+    _write(f, [fresh_rec])
+    return list(compare_group("kernels", str(b), str(f)))
+
+
+def _severities(rows):
+    return [s for s, _ in rows]
+
+
+def test_string_metric_change_warns_and_skips_drift(tmp_path):
+    """A string metric (e.g. a backend/layout tag) must never reach the
+    float drift arithmetic: changed -> warn, not a TypeError or a fail."""
+    rows = _rows(
+        {"name": "r1", "metrics": {"backend": "interpret", "n_sweeps": 4}},
+        {"name": "r1", "metrics": {"backend": "mosaic", "n_sweeps": 4}},
+        tmp_path,
+    )
+    assert _severities(rows) == ["warn", "ok"]
+    assert "skipped drift check" in rows[0][1]
+
+
+def test_equal_string_metric_is_silent(tmp_path):
+    rows = _rows(
+        {"name": "r1", "metrics": {"backend": "interpret"}},
+        {"name": "r1", "metrics": {"backend": "interpret"}},
+        tmp_path,
+    )
+    assert _severities(rows) == ["ok"]
+
+
+def test_boolean_metric_change_fails_even_outside_exact_set(tmp_path):
+    """Booleans are structural facts: a True->False flip on a name NOT in
+    the EXACT set must still fail instead of floor-dividing into the float
+    tolerance classes (bool is an int subclass — 1.0 vs 0.0 would have
+    sailed through the advisory branch)."""
+    rows = _rows(
+        {"name": "r1", "metrics": {"packing_ok": True}},
+        {"name": "r1", "metrics": {"packing_ok": False}},
+        tmp_path,
+    )
+    assert _severities(rows) == ["fail", "ok"]
+    assert "boolean metric changed" in rows[0][1]
+
+
+def test_exact_and_model_classes_route_correctly(tmp_path):
+    rows = _rows(
+        {"name": "r1", "metrics": {
+            "rounds_per_launch": 2,       # EXACT
+            "vmem_bytes_packed": 1000.0,  # MODEL (1%)
+            "seconds_per_sweep": 1.0,     # advisory
+        }},
+        {"name": "r1", "metrics": {
+            "rounds_per_launch": 4,
+            "vmem_bytes_packed": 1020.0,
+            "seconds_per_sweep": 40.0,
+        }},
+        tmp_path,
+    )
+    sev = dict.fromkeys(("fail", "warn"), 0)
+    for s, _ in rows:
+        if s in sev:
+            sev[s] += 1
+    assert sev["fail"] == 2  # exact change + 2% model drift
+    assert sev["warn"] == 1  # advisory timing note
+
+
+def test_missing_record_and_missing_metric_fail(tmp_path):
+    b, f = tmp_path / "base", tmp_path / "fresh"
+    b.mkdir(), f.mkdir()
+    _write(b, [
+        {"name": "gone", "metrics": {}},
+        {"name": "kept", "metrics": {"n_sweeps": 4}},
+    ])
+    _write(f, [{"name": "kept", "metrics": {}}])
+    rows = list(compare_group("kernels", str(b), str(f)))
+    fails = [m for s, m in rows if s == "fail"]
+    assert any("record missing" in m for m in fails)
+    assert any("metric disappeared" in m for m in fails)
+
+
+def test_main_exit_codes(tmp_path):
+    b, f = tmp_path / "base", tmp_path / "fresh"
+    b.mkdir(), f.mkdir()
+    _write(b, [{"name": "r1", "metrics": {"n_sweeps": 4}}])
+    _write(f, [{"name": "r1", "metrics": {"n_sweeps": 4}}])
+    argv = ["--baseline-dir", str(b), "--fresh-dir", str(f), "kernels"]
+    assert main(argv) == 0
+    _write(f, [{"name": "r1", "metrics": {"n_sweeps": 8}}])
+    assert main(argv) == 1

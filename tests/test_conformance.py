@@ -163,6 +163,26 @@ def test_fused_kernel_conforms_to_exact_reference(name):
     assert_conforms(report, z_max=4.0, geweke_max=4.0)
 
 
+def test_round_fused_kernel_conforms_to_exact_reference():
+    """The whole-round kernel gate (DESIGN.md §6): folding the exchange into
+    the launch replaces the engine's ``fold_in(key, 2t+1)`` swap draw with
+    the counter PRNG's swap stream, so like ``use_fused`` it cannot be
+    bit-equal to the strategy path and must clear the statistical gate —
+    with ``pack_bits=True`` riding along, since packing is pinned bitwise
+    elsewhere and this is its end-to-end conformance entry."""
+    entry = systems.REGISTRY["ising"]
+    report = run_conformance(
+        entry, seed=0,
+        system_params={"use_fused": True, "use_pallas": True,
+                       "use_fused_round": True, "pack_bits": True},
+    )
+    assert report.n_retunes == entry.adapt_rounds, report.n_retunes
+    np.testing.assert_allclose(report.temps[0], entry.temps[0], rtol=1e-5)
+    np.testing.assert_allclose(report.temps[-1], entry.temps[-1], rtol=1e-4)
+    assert np.all(np.diff(report.temps) > 0)
+    assert_conforms(report, z_max=4.0, geweke_max=4.0)
+
+
 def test_conformance_catches_a_wrong_sampler():
     """Negative control: a deliberately biased reference must fail the gate —
     otherwise the 4xMCSE tolerance is too loose to mean anything."""

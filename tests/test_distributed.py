@@ -166,6 +166,20 @@ def test_sharded_fused_bit_equal_to_single_device(mesh8):
     np.testing.assert_array_equal(np.asarray(st.pt.states), out["fused_states"])
 
 
+def test_sharded_round_fused_bit_equal_to_single_device(mesh8):
+    """The whole-round path sharded 8 ways (r_local=1, so the r_blk=8 kernel
+    pads past R_local and the counter streams ride a nonzero replica_offset;
+    the exchange reruns redundantly per device from the counter-PRNG swap
+    stream) must be bit-identical to the single-device round launch."""
+    out = np.load(mesh8 / "mesh8.npz")
+    st, _ = _run(None, sweeps=60, chunk_intervals=2,
+                 use_fused=True, use_pallas=True, use_fused_round=True,
+                 pack_bits=True)
+    np.testing.assert_array_equal(np.asarray(st.pt.energy), out["round_energy"])
+    np.testing.assert_array_equal(np.asarray(st.pt.rung), out["round_rung"])
+    np.testing.assert_array_equal(np.asarray(st.pt.states), out["round_states"])
+
+
 def test_capacity_beyond_single_chip_vmem(mesh8):
     """The child ran an (R=64, L=128) ladder whose fused working set the
     static model puts past one chip's 16 MB VMEM; per-shard it fits."""

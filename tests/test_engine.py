@@ -142,6 +142,31 @@ def test_welford_combine_chains_matches_concatenated_data(rng):
     )
 
 
+def test_combine_chains_fractional_weights_unbiased():
+    """Regression: per-rung chain weights were normalized by ``max(ws, 1)``,
+    so a pooled estimator weight below 1 (early-run VMPT, fractional
+    per-record weights) scaled the grand mean by ws — biasing it toward
+    zero; and the variance-denominator clamp ``max(wsum - 1, 1)`` silently
+    inflated the denominator for pooled weights in (1, 2)."""
+    r = 3
+    s = init_stats(r, ["energy"], n_chains=2)
+    ws = jnp.asarray([[0.3, 1.0, 0.0], [0.1, 0.5, 0.0]], jnp.float32)
+    means = jnp.asarray([[10.0, 10.0, 0.0], [20.0, 16.0, 0.0]], jnp.float32)
+    s = dataclasses.replace(
+        s, weight_sum=ws, mean={"energy": means},
+        n_records=jnp.asarray([4, 4], jnp.int32),
+    )
+    pooled = combine_chains(s)
+    # rung 0 (pooled weight 0.4 < 1): true weighted mean, not 0.4x of it
+    np.testing.assert_allclose(pooled["mean_energy"][0], 12.5, rtol=1e-6)
+    np.testing.assert_allclose(pooled["mean_energy"][1], 12.0, rtol=1e-6)
+    # rung 1 (pooled weight 1.5): denominator is wsum - 1 = 0.5, not the
+    # clamped 1; m2 here is purely the between-chain spread = 12
+    np.testing.assert_allclose(pooled["var_energy"][1], 24.0, rtol=1e-6)
+    # a rung with zero total weight stays finite (explicit zero guard)
+    assert pooled["mean_energy"][2] == 0.0
+
+
 # ---------- in-loop adaptive ladders --------------------------------------------
 def test_adaptive_ladder_moves_acceptance_toward_target():
     """Feedback between chunks should pull the measured per-pair acceptance

@@ -271,6 +271,28 @@ def test_flow_optimized_ladder_concentrates_rungs_at_the_bottleneck():
     assert 2.4 <= new[k] and new[k + 1] <= 3.1, new
 
 
+def test_flow_optimized_ladder_survives_degenerate_gap():
+    """Regression: an earlier aggressive retune can leave two interior rungs
+    coincident; the unfloored gap then made η infinite, the cum-integral
+    normalization turned every rung NaN, and the poisoned betas (traced
+    engine inputs) silently corrupted the rest of the run.  A degenerate gap
+    must attract ~no rung density and the retune must stay finite/monotone."""
+    temps = np.asarray([1.0, 2.0, 2.0, 2.7, 3.5])
+    f = np.asarray([1.0, 0.6, 0.6, 0.3, 0.0])
+    new = flow_optimized_ladder(temps, f, rate=1.0)
+    assert np.all(np.isfinite(new))
+    np.testing.assert_allclose(new[0], temps[0], rtol=1e-6)
+    np.testing.assert_allclose(new[-1], temps[-1], rtol=1e-6)
+    assert np.all(np.diff(new) >= 0)
+    # partially blended retunes stay finite too
+    assert np.all(np.isfinite(flow_optimized_ladder(temps, f, rate=0.5)))
+    # fully collapsed interior: still finite, endpoints pinned
+    flat = np.asarray([1.0, 2.0, 2.0, 2.0, 3.5])
+    out = flow_optimized_ladder(flat, f, rate=1.0)
+    assert np.all(np.isfinite(out))
+    assert out[0] == 1.0 and out[-1] == 3.5
+
+
 def test_maybe_adapt_flow_mode_gates_and_consumes_flow_counters():
     temps = np.linspace(1.0, 4.0, 5)
     adapt = AdaptConfig(mode="flow", flow_min_visits=10, rate=1.0)

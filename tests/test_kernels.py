@@ -264,6 +264,52 @@ def test_vmem_fused_documented_budget():
     assert potts <= psk.vmem_working_set_bytes(4, 300, 300)
 
 
+def test_vmem_packed_documented_budget():
+    """The packed working-set models must match their module docstrings: the
+    bit-plane Ising kernel lands at 17.5 B/cell for r_blk=8 (vs 18 unpacked)
+    and the int8-lane Potts kernel at 16 B/cell (vs 22) — packing never
+    costs VMEM at the documented blocks."""
+    ising_packed = isk.vmem_working_set_bytes_packed(8, 300)
+    assert ising_packed == 12_600_128  # 17.5 B/cell + RNG state at L=300
+    assert ising_packed < isk.vmem_working_set_bytes_fused(8, 300)
+    assert ising_packed < 16 * 2**20
+    # a second uint32 word only appears past 32 replicas per block
+    per_cell_32 = (isk.vmem_working_set_bytes_packed(32, 300) - 16 * 32) / (
+        32 * 300 * 300
+    )
+    assert per_cell_32 == pytest.approx(15.625)
+    potts_packed = psk.vmem_working_set_bytes_packed(4, 300, 300)
+    assert potts_packed == 16 * 4 * 300 * 300 + 16 * 4
+    assert potts_packed < psk.vmem_working_set_bytes_fused(4, 300, 300)
+    assert potts_packed < 16 * 2**20
+
+
+def test_hbm_traffic_model_rounds_axis():
+    """Whole-round fusion extends the amortization to S*K sweeps per launch,
+    in both kernel modules and the shared `hlo.traffic` source of truth."""
+    from repro.hlo import traffic
+
+    assert isk.hbm_bytes_per_cell_sweep(
+        fused=True, sweeps_per_interval=4, rounds_per_launch=2
+    ) == pytest.approx(0.25)
+    for s, k in ((1, 1), (4, 2), (5, 16)):
+        want = 2.0 / (s * k)
+        for fn in (
+            isk.hbm_bytes_per_cell_sweep,
+            psk.hbm_bytes_per_cell_sweep,
+            lambda **kw: traffic.hbm_bytes_per_cell_sweep(**kw),
+        ):
+            assert fn(
+                fused=True, sweeps_per_interval=s, rounds_per_launch=k
+            ) == pytest.approx(want)
+    # rounds never change the unfused model, and zero rounds is an error
+    assert isk.hbm_bytes_per_cell_sweep(fused=False) == 18.0
+    with pytest.raises(ValueError, match="rounds_per_launch"):
+        isk.hbm_bytes_per_cell_sweep(
+            fused=True, sweeps_per_interval=1, rounds_per_launch=0
+        )
+
+
 def test_hbm_traffic_model_fused_speedup():
     """The acceptance bar for this optimisation: modeled HBM bytes per cell
     per sweep must drop >= 5x on the fused Ising path — already 9x at one
