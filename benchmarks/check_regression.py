@@ -36,6 +36,9 @@ EXACT = {
     "n_devices", "n_replicas", "length", "sweeps", "n_sweeps", "r_blk",
     "fits_vmem", "lattice_independent", "shard_fits", "exceeds_single_chip",
     "rounds_per_launch",
+    # serve: the compile-amortization contract — N same-shaped jobs must
+    # share exactly one mega-step compile, so this equals the job count
+    "n_jobs", "jobs_packed_per_compile",
 }
 MODEL = {
     "hbm_bytes_per_cell_sweep", "traffic_reduction_x", "vmem_bytes",

@@ -69,11 +69,14 @@ def write_bench_json(group: str, out_dir: str | None = None) -> str:
         "jax_backend": jax.default_backend(),
         "jax_version": jax.__version__,
         "created_unix": time.time(),
-        "records": _RECORDS.pop(group, []),
+        # drained only after the rename lands (below): a failed write leaves
+        # the accumulator intact, so the caller can retry without losing rows
+        "records": list(_RECORDS.get(group, [])),
     }
     path = os.path.join(out_dir, f"BENCH_{group}.json")
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     os.replace(tmp, path)
+    _RECORDS.pop(group, None)
     return path

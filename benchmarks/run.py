@@ -7,6 +7,9 @@
   fig7          swap_overhead.py    swap-interval cost + acceptance
   zoo           systems_bench.py    per-system sweep throughput (system zoo)
   ptlm          ptlm_bench.py       paper technique on the LM pool
+  serve         serve_load.py       multi-tenant packed scheduler vs naive
+                                    one-Session-per-job (jobs/sec, latency,
+                                    jobs-packed-per-compile)
   roofline      roofline_report.py  §Roofline tables from the dry-run JSONs
   shard         shard_scaling.py    multi-device weak/strong scaling +
                                     collective bytes (invoke the module
@@ -27,7 +30,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import convergence, ptlm_bench, roofline_report, speedup
-    from benchmarks import shard_scaling, swap_overhead, systems_bench, tile_sweep
+    from benchmarks import serve_load, shard_scaling, swap_overhead
+    from benchmarks import systems_bench, tile_sweep
 
     suites = {
         "fig3": convergence.run,
@@ -38,6 +42,7 @@ def main() -> None:
         "ptlm": ptlm_bench.run,
         "roofline": roofline_report.run,
         "shard": shard_scaling.run,
+        "serve": serve_load.run,
     }
     only = [s for s in args.only.split(",") if s]
     print("name,us_per_call,derived")

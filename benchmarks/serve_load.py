@@ -1,0 +1,180 @@
+"""Serve-layer load benchmark: packed scheduler vs one-Session-per-job.
+
+The serving claim (DESIGN.md §Serve): for N same-shaped tenant jobs, the
+`repro.serve.Scheduler` packs all N along the mega-step's ensemble axis and
+compiles **once**, while the naive path — a fresh `Session` per job — pays
+the compile N times and serializes the sweeps.  This suite submits an
+open-loop burst of N seed-variant Ising jobs and records both paths:
+
+* ``jobs_per_sec`` (packed and naive) and the packed/naive ``speedup_x`` —
+  wall-clock, so advisory in `benchmarks.check_regression`'s class scheme
+  (the repo's timing tolerance class: printed, never fatal);
+* per-job completion ``latency_p50_s`` / ``latency_p99_s`` from submission
+  to `JobResult` delivery (advisory, same class);
+* ``jobs_packed_per_compile`` — N jobs / mega-step compiles
+  (`Engine.n_compiles`).  This is the *structural* compile-amortization
+  contract and is checked EXACT: the whole burst must land in one bucket on
+  one executable, so the value equals N.  Any drop means the packing broke.
+
+Rows land in ``BENCH_serve.json``; CI runs this at smoke size and gates on
+the committed baseline.  ``--assert-speedup X`` makes the packed/naive ratio
+a hard failure locally (not used in CI — timing there is advisory).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, write_bench_json
+from repro.api.session import Session
+from repro.api.spec import (
+    EngineSpec,
+    LadderSpec,
+    PhaseSpec,
+    RunSpec,
+    ScheduleSpec,
+    SystemSpec,
+)
+from repro.serve import Scheduler
+
+GROUP = "serve"
+
+
+def make_spec(seed: int, length: int, r: int, sweeps: int,
+              swap_interval: int, chunk_intervals: int) -> RunSpec:
+    burn = max(swap_interval, (sweeps // 4) // swap_interval * swap_interval)
+    measure = max(swap_interval, (sweeps - burn) // swap_interval * swap_interval)
+    return RunSpec(
+        system=SystemSpec("ising", {"length": length}),
+        ladder=LadderSpec(kind="geometric", n_replicas=r, t_min=1.5, t_max=4.5),
+        engine=EngineSpec(
+            swap_interval=swap_interval, chunk_intervals=chunk_intervals
+        ),
+        schedule=ScheduleSpec(phases=(
+            PhaseSpec("burn", burn),
+            PhaseSpec("measure", measure, reset_stats=True),
+        )),
+        observables=("absmag",),
+        seed=seed,
+    )
+
+
+def run_packed(specs, quantum_chunks: int):
+    """All jobs through one scheduler; per-job latency from the step loop."""
+    sched = Scheduler(quantum_chunks=quantum_chunks)
+    t0 = time.perf_counter()
+    handles = [sched.submit(s) for s in specs]
+    finish: dict[str, float] = {}
+    while not sched.idle():
+        sched.step()
+        now = time.perf_counter()
+        for job in handles:
+            if job.done() and job.id not in finish:
+                finish[job.id] = now
+    wall = time.perf_counter() - t0
+    for job in handles:
+        job.result(timeout=0)  # raise if anything failed
+    latencies = np.asarray([finish[j.id] - t0 for j in handles])
+    return wall, latencies, sched.stats()
+
+
+def run_naive(specs):
+    """The baseline the scheduler replaces: a fresh Session per job,
+    executed back-to-back (every job pays its own mega-step compile)."""
+    t0 = time.perf_counter()
+    latencies = []
+    compiles = 0
+    for spec in specs:
+        session = Session(spec)
+        session.run()
+        compiles += session.engine.n_compiles
+        latencies.append(time.perf_counter() - t0)
+    wall = time.perf_counter() - t0
+    return wall, np.asarray(latencies), compiles
+
+
+def run(n_jobs: int = 8, length: int = 8, r: int = 4, sweeps: int = 320,
+        swap_interval: int = 8, chunk_intervals: int = 5,
+        quantum_chunks: int = 2, out_dir=None, assert_speedup: float = 0.0):
+    specs = [
+        make_spec(seed, length, r, sweeps, swap_interval, chunk_intervals)
+        for seed in range(n_jobs)
+    ]
+    # schedule sweeps divide into whole chunks so the packed engine needs no
+    # remainder executable — the one-compile contract below is exact
+    total = specs[0].schedule.total_sweeps
+
+    packed_wall, packed_lat, stats = run_packed(specs, quantum_chunks)
+    naive_wall, naive_lat, naive_compiles = run_naive(specs)
+
+    packed_rate = n_jobs / packed_wall
+    naive_rate = n_jobs / naive_wall
+    speedup = packed_rate / naive_rate
+    per_compile = n_jobs / stats["n_compiles"]
+    assert stats["n_compiles"] == 1, (
+        f"packing broke: {n_jobs} same-shaped jobs cost "
+        f"{stats['n_compiles']} mega-step compiles (expected 1)"
+    )
+    emit(
+        "serve_packed", packed_wall,
+        f"jobs={n_jobs};sweeps={total};jobs_per_s={packed_rate:.2f}"
+        f";compiles={stats['n_compiles']};p99={packed_lat.max():.3f}s",
+        group=GROUP,
+        metrics={
+            "n_jobs": n_jobs,
+            "sweeps": total,
+            "jobs_packed_per_compile": per_compile,
+            "jobs_per_sec": packed_rate,
+            "latency_p50_s": float(np.percentile(packed_lat, 50)),
+            "latency_p99_s": float(np.percentile(packed_lat, 99)),
+            "n_quanta": float(stats["n_quanta"]),
+        },
+    )
+    emit(
+        "serve_naive", naive_wall,
+        f"jobs={n_jobs};sweeps={total};jobs_per_s={naive_rate:.2f}"
+        f";compiles={naive_compiles}",
+        group=GROUP,
+        metrics={
+            "n_jobs": n_jobs,
+            "sweeps": total,
+            "jobs_per_sec": naive_rate,
+            "latency_p50_s": float(np.percentile(naive_lat, 50)),
+            "latency_p99_s": float(np.percentile(naive_lat, 99)),
+            "compiles_naive": float(naive_compiles),
+        },
+    )
+    emit(
+        "serve_speedup", 0.0,
+        f"packed_vs_naive={speedup:.2f}x;jobs={n_jobs}",
+        group=GROUP,
+        metrics={"n_jobs": n_jobs, "speedup_x": speedup},
+    )
+    if assert_speedup > 0:
+        assert speedup >= assert_speedup, (
+            f"packed/naive speedup {speedup:.2f}x < required {assert_speedup}x"
+        )
+    path = write_bench_json(GROUP, out_dir)
+    print(f"# wrote {path}", flush=True)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--jobs", type=int, default=8)
+    ap.add_argument("--length", type=int, default=8)
+    ap.add_argument("--replicas", type=int, default=4)
+    ap.add_argument("--sweeps", type=int, default=320)
+    ap.add_argument("--quantum-chunks", type=int, default=2)
+    ap.add_argument("--assert-speedup", type=float, default=0.0,
+                    help="fail unless packed/naive >= this ratio (local use)")
+    ap.add_argument("--out-dir", default=None,
+                    help="where BENCH_serve.json lands (default: $BENCH_OUT_DIR or .)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(n_jobs=args.jobs, length=args.length, r=args.replicas,
+        sweeps=args.sweeps, quantum_chunks=args.quantum_chunks,
+        out_dir=args.out_dir, assert_speedup=args.assert_speedup)

@@ -10,6 +10,10 @@ Subcommands (DESIGN.md §API):
                                 its exact reference (exit 1 on failure);
                                 --exchange gates a non-default strategy,
                                 --fused the interval-fused kernel path
+  serve SPEC.json [...]         multi-tenant scheduler: submit --jobs seed
+                                variants of each spec, pack same-shaped jobs
+                                into one compiled mega-step (`repro.serve`),
+                                write per-job results + service counters
   list-systems                  registered systems, params and observables
   list-strategies               registered replica-exchange strategies
 
@@ -170,6 +174,55 @@ def _cmd_validate(args) -> int:
     return 0
 
 
+def _cmd_serve(args) -> int:
+    # Lazy import: the serve layer builds on api (Session-equivalent packing),
+    # importing it at module scope would cycle through repro.api.
+    from repro.serve import JobFailedError, Scheduler
+
+    sched = Scheduler(
+        checkpoint_dir=args.checkpoint_dir,
+        quantum_chunks=args.quantum_chunks,
+        pack_window=args.pack_window,
+        checkpoint_every_quanta=args.checkpoint_every,
+    )
+    handles = []
+    for path in args.specs:
+        with open(path) as f:
+            spec = RunSpec.from_json(f.read())
+        stem = os.path.splitext(os.path.basename(path))[0]
+        for i in range(args.jobs):
+            tenant = dataclasses.replace(spec, seed=args.seed0 + i)
+            handles.append(sched.submit(
+                tenant, job_id=f"{stem}-seed{args.seed0 + i}"
+            ))
+    sched.run_until_idle()
+    stats = sched.stats()
+    results, failed = {}, {}
+    for job in handles:
+        try:
+            results[job.id] = sched.result(job, timeout=0).manifest()
+        except JobFailedError as e:
+            failed[job.id] = repr(e)
+    out = args.out or "runs/serve"
+    os.makedirs(out, exist_ok=True)
+    path = os.path.join(out, "serve_results.json")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(
+            {"scheduler": stats, "results": results, "failed": failed},
+            f, indent=2, sort_keys=True,
+        )
+    os.replace(tmp, path)
+    if not args.quiet:
+        print(
+            f"{stats['n_jobs']} jobs, {stats['n_engines']} packed engine(s), "
+            f"{stats['n_compiles']} compile(s), {stats['n_quanta']} quanta",
+            file=sys.stderr,
+        )
+    print(path)
+    return 1 if failed else 0
+
+
 def _cmd_list_systems(args) -> int:
     from repro.core import systems
 
@@ -236,6 +289,28 @@ def build_parser() -> argparse.ArgumentParser:
                         "its counter-PRNG stream is gated statistically)")
     p.add_argument("--out", default=None, help="also write the report JSON here")
     p.set_defaults(fn=_cmd_validate)
+
+    p = sub.add_parser(
+        "serve", help="pack seed-variant jobs of each spec into shared "
+                      "mega-steps (repro.serve scheduler)"
+    )
+    p.add_argument("specs", nargs="+", help="spec JSONs; same-shaped specs "
+                                            "share one compiled engine")
+    p.add_argument("--jobs", type=int, default=4,
+                   help="seed variants submitted per spec (default 4)")
+    p.add_argument("--seed0", type=int, default=0, help="first tenant seed")
+    p.add_argument("--out", default=None,
+                   help="output dir for serve_results.json (default runs/serve)")
+    p.add_argument("--quantum-chunks", type=int, default=1,
+                   help="compiled chunks per scheduler time-slice")
+    p.add_argument("--pack-window", type=float, default=0.0,
+                   help="seconds to hold a new shape open for bucket-mates")
+    p.add_argument("--checkpoint-dir", default=None,
+                   help="enable preemption persistence under this root")
+    p.add_argument("--checkpoint-every", type=int, default=0,
+                   help="quanta between bucket checkpoints (0 = seal/finish only)")
+    p.add_argument("--quiet", action="store_true")
+    p.set_defaults(fn=_cmd_serve)
 
     p = sub.add_parser("list-systems", help="registered systems + observables")
     p.set_defaults(fn=_cmd_list_systems)

@@ -13,7 +13,13 @@ Layout:  <dir>/step_<N>/arrays.npz + meta.json   (+ .tmp staging dirs)
   joins the previous writer first (bounded queue of 1);
 * **multi-host layout**: each process writes `arrays_p<proc>.npz`; restore
   reads the local process' file (single-process here, but the layout is the
-  production one).
+  production one);
+* **concurrent multi-job use**: staging directories carry a unique token
+  (``step_N.<token>.tmp``) and the final rename is serialized through a
+  per-directory in-process lock, so several managers in one process (the
+  `repro.serve` scheduler runs one per bucket) never clobber each other's
+  step dirs even when they target the same directory and step.  `child`
+  derives a manager rooted in a per-job subdirectory.
 
 PT states, train states, engine states and data-cursor metadata all go
 through the same pytree path-flattening, so any registered dataclass
@@ -24,6 +30,7 @@ a resumed engine run continues the *same* random streams mid-run.
 """
 from __future__ import annotations
 
+import itertools
 import json
 import os
 import shutil
@@ -33,6 +40,21 @@ from typing import Any
 
 import jax
 import numpy as np
+
+# In-process serialization of the final tmp -> step_N swap, per directory.
+# Two managers pointed at the same directory stage into *unique* tmp dirs,
+# but the replace-over-existing dance (rmtree + os.replace) is not atomic —
+# without the lock an interleaving can rmtree the dir the other manager just
+# renamed into place, or make os.replace fail on a re-materialized target.
+_DIR_LOCKS: dict[str, threading.Lock] = {}
+_DIR_LOCKS_GUARD = threading.Lock()
+_TMP_COUNTER = itertools.count()
+
+
+def _dir_lock(directory: str) -> threading.Lock:
+    key = os.path.realpath(directory)
+    with _DIR_LOCKS_GUARD:
+        return _DIR_LOCKS.setdefault(key, threading.Lock())
 
 
 def _is_prng_key(leaf) -> bool:
@@ -86,6 +108,23 @@ class CheckpointManager:
     def _step_dir(self, step: int) -> str:
         return os.path.join(self.dir, f"step_{step:010d}")
 
+    def _staging_dir(self, step: int) -> str:
+        # unique per save: pid + a process-wide counter, so concurrent
+        # managers (same process or not) never write into one staging dir
+        token = f"{os.getpid()}-{next(_TMP_COUNTER)}"
+        return f"{self._step_dir(step)}.{token}.tmp"
+
+    def child(self, name: str) -> "CheckpointManager":
+        """A manager rooted in the subdirectory ``name`` (same retention).
+
+        The multi-job layout: the serve scheduler gives every bucket/job its
+        own subdirectory so concurrent runs keep disjoint step namespaces.
+        """
+        return CheckpointManager(
+            os.path.join(self.dir, name), keep=self.keep,
+            process_index=self.proc,
+        )
+
     def steps(self) -> list[int]:
         out = []
         for name in os.listdir(self.dir):
@@ -107,7 +146,8 @@ class CheckpointManager:
         """
         text = spec if isinstance(spec, str) else json.dumps(spec, indent=2)
         json.loads(text)  # fail fast on non-JSON input
-        tmp = os.path.join(self.dir, "spec.json.tmp")
+        token = f"{os.getpid()}-{next(_TMP_COUNTER)}"
+        tmp = os.path.join(self.dir, f"spec.json.{token}.tmp")
         with open(tmp, "w") as f:
             f.write(text)
         os.replace(tmp, os.path.join(self.dir, "spec.json"))
@@ -130,16 +170,21 @@ class CheckpointManager:
         self.wait()  # bound async queue at depth 1
 
         def write():
-            tmp = self._step_dir(step) + ".tmp"
+            tmp = self._staging_dir(step)
             os.makedirs(tmp, exist_ok=True)
             np.savez(os.path.join(tmp, f"arrays_p{self.proc}.npz"), **arrays)
             with open(os.path.join(tmp, "meta.json"), "w") as f:
                 json.dump(meta, f)
             final = self._step_dir(step)
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.replace(tmp, final)
-            self._gc()
+            # the write-then-rename swap: staged files are complete before
+            # the step dir ever exists, and the swap itself (plus retention
+            # GC) is serialized per directory so concurrent managers leave
+            # every step dir either absent or whole
+            with _dir_lock(self.dir):
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.replace(tmp, final)
+                self._gc()
 
         if blocking:
             write()

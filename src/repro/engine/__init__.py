@@ -23,6 +23,8 @@ from repro.engine.driver import (
 )
 from repro.engine.stats import (
     OnlineStats,
+    chain_block,
+    chain_slice,
     combine_chains,
     init_stats,
     summarize,
@@ -39,6 +41,8 @@ __all__ = [
     "OnlineStats",
     "RunResult",
     "StepSpec",
+    "chain_block",
+    "chain_slice",
     "combine_chains",
     "init_stats",
     "summarize",

@@ -40,7 +40,7 @@ monolithic `repro.core.pt.run` — chunk boundaries are invisible to the chain.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Mapping
+from typing import Any, Callable, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -721,6 +721,11 @@ class Engine:
         self._mesh = None if config.mesh is None else config.mesh.build()
         self._names = ["energy"] + sorted(self.observables)
         self._executables: dict[int, Any] = {}
+        # mega-step compiles performed by this engine — the instrumentation
+        # the serving layer's compile-amortization contract is asserted
+        # against (repro.serve packs N tenants into one engine, so N jobs
+        # must show exactly one compile here)
+        self.n_compiles = 0
         # retune count for AdaptConfig.max_rounds — per Engine (i.e. per
         # ladder lifetime), not per run() call, so repeated/resumed runs
         # respect the cap cumulatively
@@ -760,6 +765,43 @@ class Engine:
         # baselines from a previous state would starve the feedback loop
         self._adapt_state = None
         return self.place(self._fresh_state(key, temps))
+
+    def init_ensemble(self, keys: Sequence[jax.Array], temps) -> EngineState:
+        """Fresh state where chain ``c`` is seeded from ``keys[c]`` verbatim.
+
+        This is the packing hook for `repro.serve`: a multi-tenant bucket
+        hands each chain slot the exact key a *solo* ``n_chains=1`` run would
+        start from (``jax.random.key(seed)``), so every packed chain's
+        trajectory is bit-equal to running its spec alone.  The per-chain
+        states are built one at a time and stacked — bit-equality with the
+        solo `init` holds by construction, not by a vmap-equivalence
+        argument.  ``len(keys)`` must equal ``config.n_chains``.
+        """
+        if len(keys) != self.config.n_chains:
+            raise ValueError(
+                f"init_ensemble got {len(keys)} keys != "
+                f"n_chains={self.config.n_chains}"
+            )
+        temps = np.asarray(temps, np.float64)
+        if temps.shape != (self.config.n_replicas,):
+            raise ValueError(
+                f"ladder shape {temps.shape} != (n_replicas={self.config.n_replicas},)"
+            )
+        self._temps = temps.copy()
+        self._adapt_state = None
+        c = self.config.n_chains
+        per_chain = [self._init_single(k) for k in keys]
+        if c == 1:
+            pt_st = per_chain[0]
+        else:
+            pt_st = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *per_chain
+            )
+        stats = stats_lib.init_stats(
+            self.config.n_replicas, self._names, n_chains=0 if c == 1 else c
+        )
+        betas = jnp.asarray(1.0 / temps, jnp.float32)
+        return self.place(EngineState(pt=pt_st, stats=stats, betas=betas))
 
     def _fresh_state(self, key: jax.Array, temps) -> EngineState:
         """`init` minus placement/host bookkeeping (eval_shape-safe)."""
@@ -904,6 +946,7 @@ class Engine:
                 sds(state.pt), sds(state.stats), sds(state.betas)
             ).compile()
             self._executables[chunk_len] = exe
+            self.n_compiles += 1
         return exe
 
     # -- the host loop ---------------------------------------------------------

@@ -42,6 +42,8 @@ __all__ = [
     "update_stats",
     "summarize",
     "combine_chains",
+    "chain_slice",
+    "chain_block",
 ]
 
 
@@ -162,6 +164,36 @@ def update_stats(stats: OnlineStats, rec, rung: jax.Array) -> OnlineStats:
         up_visits=stats.up_visits.at[rung].add(up),
         labeled_visits=stats.labeled_visits.at[rung].add(labeled),
     )
+
+
+# -- ensemble-slice extraction -------------------------------------------------
+#
+# The serving layer (repro.serve) packs many tenants' chains along the
+# ensemble axis of ONE OnlineStats pytree; each tenant must read back exactly
+# the accumulators a solo run of its spec would have produced.  These
+# helpers carve a chain (or a contiguous block of chains) back out with the
+# leaf shapes the solo run would carry, so `summarize` on the slice is
+# bit-equal to the solo summary.
+
+
+def _map_leaves(stats: OnlineStats, fn) -> OnlineStats:
+    kw = {
+        f.name: jax.tree_util.tree_map(fn, getattr(stats, f.name))
+        for f in dataclasses.fields(OnlineStats)
+    }
+    return OnlineStats(**kw)
+
+
+def chain_slice(stats: OnlineStats, index: int) -> OnlineStats:
+    """Chain ``index`` of an ensemble accumulator, as un-batched ``(R,)``
+    leaves — the shape a solo ``n_chains=1`` run carries."""
+    return _map_leaves(stats, lambda x: x[index])
+
+
+def chain_block(stats: OnlineStats, start: int, stop: int) -> OnlineStats:
+    """Chains ``[start, stop)`` of an ensemble accumulator, keeping the
+    ensemble axis — the shape a solo ``n_chains=stop-start`` run carries."""
+    return _map_leaves(stats, lambda x: x[start:stop])
 
 
 # -- host-side summaries -------------------------------------------------------

@@ -1,0 +1,52 @@
+"""PT-as-a-service: multi-tenant async scheduling with shape-bucketed
+job packing (DESIGN.md §Serve).
+
+Many small PT runs share one accelerator by packing same-shaped `RunSpec`s
+along the engine's existing ensemble axis — N tenants, one compiled
+mega-step — while a round-robin host loop time-slices the live buckets in
+chunk-sized quanta:
+
+* `repro.serve.job`       — `Job` lifecycle, streamed `JobUpdate`s, the
+  thread-safe intake `JobQueue`;
+* `repro.serve.bucket`    — `shape_signature` bucketing, the `check_servable`
+  packing preconditions, and `PackedRun` (per-tenant PRNG isolation,
+  streaming, failure isolation, checkpointed preemption);
+* `repro.serve.scheduler` — the `Scheduler`: ``submit()`` / ``result()``
+  client API, pack-window sealing, the compile-amortizing engine cache, and
+  `Scheduler.from_checkpoint` restart.
+
+The isolation contract: a packed job's observables are bit-equal to running
+its spec alone — packing changes throughput, never results.
+
+    >>> from dataclasses import replace
+    >>> from repro.serve import Scheduler
+    >>> sched = Scheduler()
+    >>> handles = [sched.submit(replace(spec, seed=s)) for s in range(8)]
+    >>> sched.run_until_idle()
+    >>> results = [h.result() for h in handles]
+
+CLI front door: ``python -m repro serve --spec spec.json --jobs 8``.
+"""
+from repro.serve.bucket import PackedRun, check_servable, shape_signature
+from repro.serve.job import (
+    Job,
+    JobFailedError,
+    JobQueue,
+    JobResult,
+    JobState,
+    JobUpdate,
+)
+from repro.serve.scheduler import Scheduler
+
+__all__ = [
+    "Job",
+    "JobFailedError",
+    "JobQueue",
+    "JobResult",
+    "JobState",
+    "JobUpdate",
+    "PackedRun",
+    "Scheduler",
+    "check_servable",
+    "shape_signature",
+]

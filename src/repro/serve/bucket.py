@@ -1,0 +1,353 @@
+"""Shape-bucketed job packing: N same-shaped tenants, one compiled mega-step.
+
+The serving layer's core economics (DESIGN.md §Serve): compiling the PT
+mega-step costs seconds while running a chunk costs milliseconds, so jobs
+whose specs share every *shape-relevant* field are packed along the engine's
+existing ensemble axis and advanced by a single executable.  The pieces:
+
+* `shape_signature` — the bucket key: the spec's `to_dict()` minus ``seed``,
+  canonically serialized and hashed.  Everything except the seed is
+  shape-relevant: system params and ``L`` fix lattice shapes, the ladder
+  fixes the *shared* ``(R,)`` betas row (`EngineState.betas` has no ensemble
+  axis, so two jobs on different ladders can never share a mega-step),
+  engine/exchange knobs and the phase schedule fix the compiled program.
+* `check_servable` — the packing preconditions, rejected loudly at submit
+  time: no adaptive phases (`repro.engine.adapt` pools swap counters over
+  the whole ensemble and retunes the shared ladder — one tenant's feedback
+  would perturb every other tenant's trajectory) and no explicit device mesh
+  (the scheduler owns placement).
+* `PackedRun` — one live bucket: the packed `EngineState`, the job -> chain
+  slot map, the schedule cursor, per-job observable streaming and failure
+  isolation, and checkpoint save/restore for preemption.
+
+**Isolation contract** (pinned by ``tests/test_serve.py``): chain slot ``c``
+of a packed job runs on exactly the key a solo run would use —
+``jax.random.key(seed)`` for an ``n_chains=1`` spec, ``fold_in(·, c)`` for an
+ensemble spec (`Engine.init_ensemble`) — and the vmapped mega-step applies
+the same per-chain program, so every tenant's energies, states and online
+statistics are bit-equal to running its spec alone.  Packing changes
+throughput, never results.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine import stats as stats_lib
+from repro.serve.job import Job, JobResult, JobUpdate
+
+__all__ = [
+    "shape_signature",
+    "check_servable",
+    "PackedRun",
+    "MANIFEST_NAME",
+]
+
+MANIFEST_NAME = "serve.json"
+
+
+def shape_signature(spec) -> tuple[str, dict]:
+    """Bucket key for a `RunSpec`: ``(digest, sans_seed_dict)``.
+
+    Two specs pack into one mega-step iff their digests match.  The seed is
+    the *only* field excluded — it selects the PRNG stream, which is
+    per-chain data, not program shape.
+    """
+    d = spec.to_dict()
+    d.pop("seed", None)
+    payload = json.dumps(d, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha1(payload.encode()).hexdigest()[:12], d
+
+
+def check_servable(spec) -> None:
+    """Raise ValueError if the spec cannot run under the packing contract."""
+    for phase in spec.schedule.phases:
+        if phase.adapt:
+            raise ValueError(
+                f"phase {phase.name!r} sets adapt=True: adaptive ladders "
+                "pool swap counters across the whole ensemble and retune "
+                "the shared betas row, so one tenant's feedback would "
+                "perturb its bucket-mates' trajectories.  Adapt offline "
+                "(a solo Session run), then serve the tuned custom ladder."
+            )
+    if spec.engine.mesh is not None:
+        raise ValueError(
+            "spec.engine.mesh is set: the serve scheduler owns device "
+            "placement; submit specs with mesh=None"
+        )
+
+
+class PackedRun:
+    """One live bucket: same-signature jobs packed along the ensemble axis.
+
+    Chain-slot layout is submission order — job ``i`` owns the contiguous
+    block ``[offset_i, offset_i + n_chains_i)``.  The engine is built by the
+    scheduler with ``n_chains == sum(n_chains_i)`` and is *shared across
+    bucket generations* of the same ``(signature, width)``, so the mega-step
+    compiles once per shape, not once per bucket.
+    """
+
+    def __init__(self, digest: str, template, jobs: Sequence[Job],
+                 engine, manager=None):
+        if not jobs:
+            raise ValueError("a bucket needs at least one job")
+        self.digest = digest
+        self.template = template  # any member spec (sans-seed identical)
+        self.jobs = list(jobs)
+        self.engine = engine
+        self.manager = manager  # per-bucket CheckpointManager (or None)
+        self.temps = template.ladder.build()
+        self._slices: list[tuple[int, int]] = []
+        off = 0
+        for j in self.jobs:
+            self._slices.append((off, j.n_chains))
+            off += j.n_chains
+        self.n_chains = off
+        if engine.config.n_chains != self.n_chains:
+            raise ValueError(
+                f"engine packs {engine.config.n_chains} chains but the "
+                f"bucket holds {self.n_chains}"
+            )
+        self.total_sweeps = template.schedule.total_sweeps
+        self.sweeps_done = 0
+        self.state = None
+        self.finished = False
+        self._failed: set[str] = set()
+        # job.id -> {phase name -> summarize() dict}; phases completed before
+        # a scheduler restart are absent (same contract as Session resume)
+        self._phase_summaries: dict[str, dict[str, dict]] = {}
+        self._current_phase = None
+        self._base_sweeps = 0
+
+    # -- construction ----------------------------------------------------------
+    def chain_keys(self) -> list[jax.Array]:
+        """Per-slot PRNG keys, exactly as each job's solo run derives them."""
+        keys = []
+        for j in self.jobs:
+            base = jax.random.key(j.seed)
+            if j.n_chains == 1:
+                keys.append(base)
+            else:
+                for c in range(j.n_chains):
+                    keys.append(jax.random.fold_in(base, jnp.uint32(c)))
+        return keys
+
+    def init(self) -> None:
+        self.state = self.engine.init_ensemble(self.chain_keys(), self.temps)
+
+    def write_manifest(self) -> None:
+        """Persist the bucket composition next to its checkpoints (atomic).
+
+        ``serve.json`` + the newest step dir is everything
+        `PackedRun.restore` / `Scheduler.from_checkpoint` needs to resume
+        the bucket after a process restart.
+        """
+        if self.manager is None:
+            return
+        payload = {
+            "signature": self.digest,
+            "template": self.template.to_dict(),
+            "jobs": [{"id": j.id, "spec": j.spec.to_dict()} for j in self.jobs],
+        }
+        path = os.path.join(self.manager.dir, MANIFEST_NAME)
+        tmp = f"{path}.{os.getpid()}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        os.replace(tmp, path)
+
+    @classmethod
+    def restore(cls, digest: str, template, jobs: Sequence[Job],
+                engine, manager) -> "PackedRun":
+        """Rebuild a bucket from its checkpoint directory.
+
+        Restores the newest packed `EngineState` (bit-equal resume — PR 3's
+        checkpoint contract) and relocates the schedule cursor from the
+        state's own sweep counter.  With no restorable step the bucket simply
+        starts fresh on its next quantum.
+        """
+        run = cls(digest, template, jobs, engine, manager=manager)
+        out = engine.restore(manager)
+        if out is not None:
+            state, meta = out
+            run.state = state
+            if "temps" in meta:
+                # authoritative f64 ladder (f32 betas aren't exactly invertible)
+                engine._temps = np.asarray(meta["temps"], np.float64)
+            run.sweeps_done = int(np.asarray(state.pt.t).reshape(-1)[0])
+            if run.sweeps_done >= run.total_sweeps:
+                # schedule already complete at checkpoint time: deliver now
+                run._finalize()
+        return run
+
+    def checkpoint(self) -> None:
+        if self.manager is None or self.state is None:
+            return
+        meta = {"temps": [float(t) for t in self.temps]}
+        self.manager.save(self.sweeps_done, self.state, meta=meta)
+
+    # -- schedule bookkeeping ---------------------------------------------------
+    def _locate(self, sweep: int):
+        """The phase containing ``sweep`` and its [start, end) window."""
+        start = 0
+        for phase in self.template.schedule.phases:
+            end = start + phase.n_sweeps
+            if sweep < end:
+                return phase, start, end
+            start = end
+        raise ValueError(f"sweep {sweep} beyond the schedule ({start})")
+
+    def live_jobs(self) -> list[Job]:
+        return [j for j in self.jobs if j.id not in self._failed]
+
+    # -- execution --------------------------------------------------------------
+    def run_quantum(self, max_chunks: int = 1) -> bool:
+        """Advance the bucket by at most ``max_chunks`` compiled chunks.
+
+        The scheduler's time-slice: the engine host loop is entered with the
+        current phase's remaining budget and stopped through the ``on_chunk``
+        hook once the quantum is spent, so preemption cost is bounded by one
+        chunk.  Quanta never split a compiled chunk and chunk boundaries are
+        invisible to the PRNG stream (keys derive from the state's sweep
+        counter), so any preemption pattern yields bit-identical results.
+        Returns True when the whole schedule is done (results delivered).
+        """
+        if self.finished:
+            return True
+        if self.state is None:
+            self.init()
+        spent = [0]
+
+        def hook(info):
+            self._stream(info)
+            spent[0] += 1
+            return spent[0] >= max_chunks
+
+        while self.sweeps_done < self.total_sweeps:
+            phase, start, end = self._locate(self.sweeps_done)
+            self._current_phase = phase
+            if phase.reset_stats and self.sweeps_done == start:
+                # entering the phase fresh (also holds when resuming from a
+                # checkpoint cut exactly at the boundary — the uninterrupted
+                # loop resets at the same point); a mid-phase resume keeps
+                # the checkpointed accumulators, as Session.run does
+                self.state = self.engine.reset_stats(self.state)
+            self._base_sweeps = self.sweeps_done
+            self.state, result = self.engine.run(
+                self.state,
+                end - self.sweeps_done,
+                on_chunk=hook,
+                keep_trace=False,
+            )
+            self.sweeps_done += result.n_sweeps
+            if self.sweeps_done == end:
+                self._record_phase(phase)
+            if spent[0] >= max_chunks and self.sweeps_done < self.total_sweeps:
+                break
+        self._current_phase = None
+        if self.sweeps_done >= self.total_sweeps and not self.finished:
+            self._finalize()
+        return self.finished
+
+    # -- per-tenant views -------------------------------------------------------
+    def _ensemble(self, arr: np.ndarray) -> np.ndarray:
+        """Normalize a state/trace leaf to a leading chain axis."""
+        return arr[None] if self.n_chains == 1 else arr
+
+    def _job_energy(self, energy: np.ndarray, rung: np.ndarray,
+                    index: int) -> np.ndarray:
+        """Job ``index``'s rung-ordered (cold->hot) energies: (R,) or (C,R)."""
+        off, width = self._slices[index]
+        e = self._ensemble(energy)[off:off + width]
+        r = self._ensemble(rung)[off:off + width]
+        out = np.take_along_axis(e, np.argsort(r, axis=1), axis=1)
+        return out[0] if self.jobs[index].n_chains == 1 else out
+
+    def _job_trace(self, trace, index: int):
+        if trace is None:
+            return None
+        off, width = self._slices[index]
+        solo = self.jobs[index].n_chains == 1
+        out = {}
+        for k, v in trace.items():
+            block = self._ensemble(v)[off:off + width]
+            out[k] = block[0] if solo else block
+        return out
+
+    def _stream(self, info) -> None:
+        """Fan one compiled chunk out to every live tenant's callback.
+
+        A callback exception — or a non-finite energy in the job's own chain
+        block — FAILs that job alone; its slots keep simulating as dead lanes
+        (the compiled shape cannot shrink mid-run) and every other tenant is
+        untouched.
+        """
+        energy = np.asarray(info.state.pt.energy)
+        rung = np.asarray(info.state.pt.rung)
+        phase = self._current_phase.name if self._current_phase else ""
+        for i, job in enumerate(self.jobs):
+            if job.id in self._failed:
+                continue
+            try:
+                e = self._job_energy(energy, rung, i)
+                if not np.all(np.isfinite(e)):
+                    raise FloatingPointError(
+                        f"non-finite energy in job {job.id} at sweep "
+                        f"{self._base_sweeps + info.sweeps_done}"
+                    )
+                job._notify(JobUpdate(
+                    sweeps_done=self._base_sweeps + info.sweeps_done,
+                    total_sweeps=self.total_sweeps,
+                    phase=phase,
+                    energy=e,
+                    trace=self._job_trace(info.trace, i),
+                ))
+            except BaseException as err:  # isolate: never take down the bucket
+                self._failed.add(job.id)
+                job._fail(err)
+
+    # -- results ----------------------------------------------------------------
+    def _job_stats(self, index: int):
+        off, width = self._slices[index]
+        stats = self.state.stats
+        if self.n_chains == 1:
+            return stats  # single-slot bucket: leaves are already (R,)
+        if self.jobs[index].n_chains == 1:
+            return stats_lib.chain_slice(stats, off)
+        return stats_lib.chain_block(stats, off, off + width)
+
+    def _record_phase(self, phase) -> None:
+        for i, job in enumerate(self.jobs):
+            if job.id in self._failed:
+                continue
+            summary = stats_lib.summarize(self._job_stats(i))
+            self._phase_summaries.setdefault(job.id, {})[phase.name] = {
+                k: np.asarray(v).copy() for k, v in summary.items()
+            }
+
+    def _finalize(self) -> None:
+        energy = np.asarray(self.state.pt.energy)
+        rung = np.asarray(self.state.pt.rung)
+        for i, job in enumerate(self.jobs):
+            if job.id in self._failed:
+                continue
+            job._deliver(JobResult(
+                job_id=job.id,
+                spec=job.spec,
+                phases=self._phase_summaries.get(job.id, {}),
+                final_energy=self._job_energy(energy, rung, i),
+                n_sweeps=self.sweeps_done,
+            ))
+        self.finished = True
+
+    def __repr__(self):
+        return (
+            f"PackedRun({self.digest}, jobs={len(self.jobs)}, "
+            f"chains={self.n_chains}, sweep={self.sweeps_done}/"
+            f"{self.total_sweeps})"
+        )

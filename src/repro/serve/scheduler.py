@@ -1,0 +1,325 @@
+"""The multi-tenant PT scheduler: intake, packing, time-slicing, resume.
+
+One `Scheduler` owns a `JobQueue`, a cache of packed engines, and a
+round-robin deque of live `PackedRun` buckets.  The host loop:
+
+1. **intake** — drain the queue; servability-check each spec
+   (`check_servable` — a bad spec FAILs its job at submit time, it never
+   poisons a bucket) and stage it under its `shape_signature`;
+2. **seal** — once a signature's pack window closes, snapshot the staged
+   jobs into a `PackedRun`.  The packed engine is cached by
+   ``(signature, total chains)``, so bucket generation N+1 of the same shape
+   reuses generation N's compiled executables — the "exactly one compile for
+   N jobs" contract `benchmarks/serve_load.py` measures;
+3. **time-slice** — pop the head bucket, run one quantum
+   (``quantum_chunks`` compiled chunks), checkpoint it, and rotate it to the
+   tail (strict FIFO requeue == round-robin: with B live buckets every
+   bucket runs every B quanta — no starvation, pinned by
+   ``tests/test_serve.py``).
+
+Preemption rides the PR 3 checkpoint machinery: each bucket owns a
+`CheckpointManager` subdirectory (``<root>/<signature>-<seq>/``) holding a
+``serve.json`` composition manifest plus ordinary engine step dirs, and
+`Scheduler.from_checkpoint` rebuilds every unfinished bucket bit-equal after
+a process restart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+import os
+import threading
+import time
+from collections import deque
+from typing import Any, Callable
+
+from repro.api.spec import RunSpec
+from repro.checkpoint.manager import CheckpointManager
+from repro.engine import Engine
+from repro.serve.bucket import (
+    MANIFEST_NAME,
+    PackedRun,
+    check_servable,
+    shape_signature,
+)
+from repro.serve.job import Job, JobQueue, JobResult, JobState, JobUpdate
+
+__all__ = ["Scheduler"]
+
+
+@dataclasses.dataclass
+class _Staged:
+    """Jobs of one signature waiting for their pack window to close."""
+
+    template: RunSpec
+    jobs: list
+    since: float  # monotonic time of first arrival
+
+
+class Scheduler:
+    """PT-as-a-service: submit `RunSpec`s, receive per-tenant `JobResult`s.
+
+    Args:
+      checkpoint_dir: root directory for per-bucket checkpoint subdirs;
+        None disables preemption persistence (buckets stay memory-resident).
+      quantum_chunks: compiled chunks per time-slice — the fairness quantum.
+      pack_window: seconds a new signature's first job waits for bucket-mates
+        before sealing.  0 seals as soon as the loop observes the jobs, which
+        still packs everything submitted before the loop runs (the
+        batch-submission pattern of `run_until_idle`).
+      checkpoint_every_quanta: bucket-checkpoint cadence (0 = only at seal
+        and finish).
+      keep: checkpoint retention per bucket.
+
+    Use either synchronously (``submit(...)`` then ``run_until_idle()``) or
+    as a service (``start()`` spawns the host loop thread; ``submit`` is
+    thread-safe; ``shutdown()`` stops it).
+    """
+
+    def __init__(
+        self,
+        checkpoint_dir: str | None = None,
+        quantum_chunks: int = 1,
+        pack_window: float = 0.0,
+        checkpoint_every_quanta: int = 0,
+        keep: int = 2,
+    ):
+        if quantum_chunks < 1:
+            raise ValueError("quantum_chunks must be >= 1")
+        self.queue = JobQueue()
+        self.quantum_chunks = quantum_chunks
+        self.pack_window = pack_window
+        self.checkpoint_every_quanta = checkpoint_every_quanta
+        self.keep = keep
+        self._root = None
+        if checkpoint_dir is not None:
+            self._root = CheckpointManager(str(checkpoint_dir), keep=keep)
+        self._staged: dict[str, _Staged] = {}
+        self._buckets: deque[PackedRun] = deque()
+        # (signature, packed width) -> Engine: the compile-amortization cache
+        self._engines: dict[tuple[str, int], Engine] = {}
+        self._job_seq = itertools.count()
+        self._bucket_seq = itertools.count()
+        self._quanta_run: dict[int, int] = {}  # id(bucket) -> quanta count
+        self.quantum_log: list[str] = []  # signature per quantum (fairness)
+        self.jobs: dict[str, Job] = {}
+        self._thread: threading.Thread | None = None
+        self._stop = threading.Event()
+
+    # -- client API --------------------------------------------------------------
+    def submit(
+        self,
+        spec: RunSpec,
+        on_update: Callable[[Job, JobUpdate], Any] | None = None,
+        job_id: str | None = None,
+    ) -> Job:
+        """Enqueue one tenant run; returns immediately with its handle."""
+        if job_id is None:
+            job_id = f"job-{next(self._job_seq):04d}"
+        if job_id in self.jobs:
+            raise ValueError(f"duplicate job id {job_id!r}")
+        job = Job(job_id, spec, on_update=on_update)
+        self.jobs[job_id] = job
+        self.queue.put(job)
+        return job
+
+    def result(self, job: Job | str, timeout: float | None = None) -> JobResult:
+        """Block for one job's result (`Job.result`); accepts id or handle."""
+        if isinstance(job, str):
+            job = self.jobs[job]
+        return job.result(timeout)
+
+    # -- intake / packing --------------------------------------------------------
+    def _intake(self) -> None:
+        now = time.monotonic()
+        for job in self.queue.drain():
+            try:
+                check_servable(job.spec)
+            except ValueError as err:
+                job._fail(err)
+                continue
+            digest, _ = shape_signature(job.spec)
+            staged = self._staged.get(digest)
+            if staged is None:
+                staged = self._staged[digest] = _Staged(
+                    template=job.spec, jobs=[], since=now
+                )
+            staged.jobs.append(job)
+
+    def _seal(self, force: bool = False) -> None:
+        now = time.monotonic()
+        for digest in list(self._staged):
+            staged = self._staged[digest]
+            if not force and now - staged.since < self.pack_window:
+                continue
+            del self._staged[digest]
+            self._buckets.append(self._make_bucket(digest, staged))
+
+    def _engine_for(self, digest: str, template: RunSpec, width: int) -> Engine:
+        key = (digest, width)
+        engine = self._engines.get(key)
+        if engine is None:
+            system = template.system.build()
+            config = dataclasses.replace(
+                template.engine.build(
+                    template.ladder.n_replicas,
+                    exchange=template.exchange.build(),
+                ),
+                n_chains=width,
+            )
+            engine = Engine(
+                system,
+                config,
+                observables=template.system.observables(
+                    system, template.observables
+                ),
+            )
+            self._engines[key] = engine
+        return engine
+
+    def _bucket_manager(self, name: str):
+        return None if self._root is None else self._root.child(name)
+
+    def _make_bucket(self, digest: str, staged: _Staged) -> PackedRun:
+        width = sum(j.n_chains for j in staged.jobs)
+        engine = self._engine_for(digest, staged.template, width)
+        name = f"{digest}-{next(self._bucket_seq):04d}"
+        bucket = PackedRun(
+            digest, staged.template, staged.jobs, engine,
+            manager=self._bucket_manager(name),
+        )
+        bucket.write_manifest()
+        return bucket
+
+    # -- the host loop -----------------------------------------------------------
+    def step(self) -> bool:
+        """One scheduler step: intake, seal, run one quantum.  True if any
+        bucket advanced."""
+        self._intake()
+        self._seal(force=self.pack_window <= 0)
+        if not self._buckets:
+            return False
+        bucket = self._buckets.popleft()
+        for job in bucket.live_jobs():
+            job.state = JobState.RUNNING
+        self.quantum_log.append(bucket.digest)
+        finished = bucket.run_quantum(self.quantum_chunks)
+        n = self._quanta_run.get(id(bucket), 0) + 1
+        self._quanta_run[id(bucket)] = n
+        if finished:
+            self._quanta_run.pop(id(bucket), None)
+            bucket.checkpoint()  # final state: restart delivers instantly
+        else:
+            if self.checkpoint_every_quanta and (
+                n % self.checkpoint_every_quanta == 0
+            ):
+                bucket.checkpoint()
+            for job in bucket.live_jobs():
+                job.state = JobState.PREEMPTED
+            self._buckets.append(bucket)
+        return True
+
+    def idle(self) -> bool:
+        return not (self._buckets or self._staged or len(self.queue))
+
+    def run_until_idle(self, max_quanta: int | None = None) -> None:
+        """Drive the loop synchronously until every submitted job resolves."""
+        quanta = 0
+        while not self.idle():
+            if not self.step():
+                continue
+            quanta += 1
+            if max_quanta is not None and quanta >= max_quanta:
+                return
+
+    def start(self) -> None:
+        """Run the host loop on a background thread (service mode)."""
+        if self._thread is not None:
+            raise RuntimeError("scheduler already started")
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                if not self.step() and self.idle():
+                    # nothing live: sleep until a submission (or stop poke)
+                    self.queue.wait(timeout=0.05)
+
+        self._thread = threading.Thread(
+            target=loop, name="repro-serve", daemon=True
+        )
+        self._thread.start()
+
+    def shutdown(self, wait: bool = True) -> None:
+        """Stop the host loop.  With ``wait``, drain all live work first."""
+        if self._thread is None:
+            return
+        if wait:
+            while not self.idle():
+                time.sleep(0.01)
+        self._stop.set()
+        self._thread.join()
+        self._thread = None
+
+    # -- introspection -----------------------------------------------------------
+    def stats(self) -> dict:
+        """Service counters (the serve benchmark's instrumentation source)."""
+        return {
+            "n_jobs": len(self.jobs),
+            "n_buckets_live": len(self._buckets),
+            "n_engines": len(self._engines),
+            "n_compiles": sum(e.n_compiles for e in self._engines.values()),
+            "n_quanta": len(self.quantum_log),
+            "states": {
+                s.value: sum(1 for j in self.jobs.values() if j.state is s)
+                for s in JobState
+            },
+        }
+
+    # -- restart -----------------------------------------------------------------
+    @classmethod
+    def from_checkpoint(cls, checkpoint_dir: str, **kwargs) -> "Scheduler":
+        """Rebuild a scheduler from its checkpoint root after a restart.
+
+        Every subdirectory holding a ``serve.json`` manifest becomes a
+        restored bucket: jobs are re-registered (fresh handles — client
+        callbacks do not survive a process), engines are rebuilt and the
+        newest packed state restored bit-equal.  Buckets whose checkpointed
+        sweep counter already covers the schedule deliver their results
+        immediately; the rest re-enter the round-robin where they left off.
+        Phase summaries recorded before the restart are not replayed — a
+        restored `JobResult.phases` only holds phases that *ended* after the
+        restore point (the `Session.from_checkpoint` contract).
+        """
+        sched = cls(checkpoint_dir=checkpoint_dir, **kwargs)
+        root = sched._root.dir
+        for name in sorted(os.listdir(root)):
+            manifest_path = os.path.join(root, name, MANIFEST_NAME)
+            if not os.path.isfile(manifest_path):
+                continue
+            with open(manifest_path) as f:
+                manifest = json.load(f)
+            digest = manifest["signature"]
+            template = RunSpec.from_dict(manifest["template"])
+            jobs = []
+            for entry in manifest["jobs"]:
+                job = Job(entry["id"], RunSpec.from_dict(entry["spec"]))
+                job.state = JobState.PREEMPTED
+                sched.jobs[job.id] = job
+                jobs.append(job)
+            width = sum(j.n_chains for j in jobs)
+            bucket = PackedRun.restore(
+                digest, template, jobs,
+                sched._engine_for(digest, template, width),
+                sched._root.child(name),
+            )
+            # keep the bucket-name sequence ahead of restored dirs
+            try:
+                seq = int(name.rsplit("-", 1)[1])
+                sched._bucket_seq = itertools.count(seq + 1)
+            except (IndexError, ValueError):
+                pass
+            if bucket.finished:
+                continue
+            sched._buckets.append(bucket)
+        return sched

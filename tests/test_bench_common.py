@@ -1,0 +1,67 @@
+"""`benchmarks.common` record accumulation: drain-on-write semantics.
+
+A suite run twice in one process must produce two clean BENCH_<group>.json
+files — the accumulator drains after a successful write — while a *failed*
+write keeps the rows so the caller can retry without losing them.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, ".")  # repo root: benchmarks is a plain package
+
+from benchmarks.common import _RECORDS, emit, write_bench_json  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def clean_records():
+    _RECORDS.clear()
+    yield
+    _RECORDS.clear()
+
+
+def test_write_drains_the_group(tmp_path, capsys):
+    emit("row_a", 1.5e-6, "d=1", group="g1", metrics={"sweeps": 4})
+    emit("row_b", 2.5e-6, group="g1")
+    emit("other", 1e-6, group="g2")
+    path = write_bench_json("g1", str(tmp_path))
+    with open(path) as f:
+        payload = json.load(f)
+    assert [r["name"] for r in payload["records"]] == ["row_a", "row_b"]
+    assert payload["records"][0]["metrics"] == {"sweeps": 4.0}
+    # g1 drained, g2 untouched
+    assert "g1" not in _RECORDS
+    assert [r["name"] for r in _RECORDS["g2"]] == ["other"]
+    # a second suite pass in the same process starts from zero records
+    emit("row_c", 3.0e-6, group="g1")
+    with open(write_bench_json("g1", str(tmp_path))) as f:
+        second = json.load(f)
+    assert [r["name"] for r in second["records"]] == ["row_c"]
+
+
+def test_write_without_records_produces_empty_file(tmp_path):
+    with open(write_bench_json("empty", str(tmp_path))) as f:
+        payload = json.load(f)
+    assert payload["records"] == []
+    assert payload["group"] == "empty"
+
+
+def test_failed_write_retains_rows(tmp_path):
+    emit("keep_me", 1e-6, group="g3")
+    target = tmp_path / "blocked"
+    target.write_text("a file where the out dir should be")
+    with pytest.raises(OSError):
+        write_bench_json("g3", str(target / "sub"))
+    # the failed write must NOT have drained the accumulator
+    assert [r["name"] for r in _RECORDS["g3"]] == ["keep_me"]
+    path = write_bench_json("g3", str(tmp_path))
+    with open(path) as f:
+        assert [r["name"] for r in json.load(f)["records"]] == ["keep_me"]
+
+
+def test_write_is_atomic_no_tmp_left_behind(tmp_path):
+    emit("row", 1e-6, group="g4")
+    write_bench_json("g4", str(tmp_path))
+    assert sorted(os.listdir(tmp_path)) == ["BENCH_g4.json"]

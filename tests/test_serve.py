@@ -1,0 +1,352 @@
+"""PT-as-a-service (DESIGN.md §Serve): packing isolation, preemption,
+fairness, failure containment.
+
+The contracts pinned here:
+
+* **bit-equality** — a packed tenant's streamed energies, phase summaries
+  and final state are bitwise identical to running its spec alone (packing
+  changes throughput, never results);
+* **one compile** — N same-shaped jobs share exactly one mega-step compile
+  (`Engine.n_compiles`), and bucket generation N+1 reuses generation N's
+  engine;
+* **preemption** — any quantum slicing, and a full process "crash" +
+  `Scheduler.from_checkpoint`, resume bit-equal to an uninterrupted run;
+* **fairness** — strict round-robin: no bucket starves while another runs;
+* **isolation** — a failing tenant (callback raise) FAILs alone; its
+  bucket-mates finish with untouched results.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    AdaptSpec,
+    EngineSpec,
+    LadderSpec,
+    PhaseSpec,
+    RunSpec,
+    ScheduleSpec,
+    Session,
+    SystemSpec,
+)
+from repro.serve import (
+    JobFailedError,
+    JobState,
+    Scheduler,
+    check_servable,
+    shape_signature,
+)
+
+
+def serve_spec(seed=0, length=4, n_chains=1, record_trace=False,
+               sweeps=(8, 8)) -> RunSpec:
+    phases = [PhaseSpec("burn", sweeps[0])]
+    if len(sweeps) > 1:
+        phases.append(PhaseSpec("measure", sweeps[1], reset_stats=True))
+    return RunSpec(
+        system=SystemSpec("ising", {"length": length}),
+        ladder=LadderSpec(kind="geometric", n_replicas=4, t_min=1.5, t_max=3.5),
+        engine=EngineSpec(swap_interval=2, chunk_intervals=2,
+                          n_chains=n_chains, record_trace=record_trace),
+        schedule=ScheduleSpec(phases=tuple(phases)),
+        observables=("mag",),
+        seed=seed,
+    )
+
+
+def solo(spec):
+    return Session(spec).run()
+
+
+def assert_job_matches_solo(result, spec):
+    ref = solo(spec)
+    assert np.array_equal(
+        np.asarray(result.final_energy), ref.final_energies()
+    )
+    for pname, res in ref.phases.items():
+        assert pname in result.phases
+        for k, v in res.summary.items():
+            assert np.array_equal(
+                np.asarray(result.phases[pname][k]), np.asarray(v)
+            ), (pname, k)
+
+
+# -- signature / servability ---------------------------------------------------
+
+
+def test_shape_signature_ignores_only_the_seed():
+    a, b = serve_spec(seed=0), serve_spec(seed=123)
+    assert shape_signature(a)[0] == shape_signature(b)[0]
+    for variant in (
+        serve_spec(length=6),
+        dataclasses.replace(
+            serve_spec(), ladder=LadderSpec(
+                kind="geometric", n_replicas=4, t_min=1.4, t_max=3.5
+            )
+        ),
+        serve_spec(n_chains=2),
+        serve_spec(sweeps=(8, 16)),
+    ):
+        assert shape_signature(a)[0] != shape_signature(variant)[0]
+    assert "seed" not in shape_signature(a)[1]
+
+
+def test_check_servable_rejects_adapt_and_mesh():
+    adaptive = dataclasses.replace(
+        serve_spec(),
+        adapt=AdaptSpec(),
+        schedule=ScheduleSpec(phases=(
+            PhaseSpec("burn", 8, adapt=True), PhaseSpec("measure", 8),
+        )),
+    )
+    with pytest.raises(ValueError, match="adapt"):
+        check_servable(adaptive)
+    meshed = dataclasses.replace(
+        serve_spec(),
+        engine=EngineSpec(swap_interval=2, chunk_intervals=2,
+                          mesh={"ensemble": 1, "replica": 1}),
+    )
+    with pytest.raises(ValueError, match="mesh"):
+        check_servable(meshed)
+    # submit-side rejection fails the job, not the scheduler
+    sched = Scheduler()
+    job = sched.submit(adaptive)
+    sched.run_until_idle()
+    assert job.state is JobState.FAILED
+    with pytest.raises(JobFailedError):
+        job.result(timeout=0)
+
+
+# -- packing bit-equality ------------------------------------------------------
+
+
+def test_packed_jobs_bit_equal_to_solo_with_one_compile():
+    sched = Scheduler(quantum_chunks=1)
+    streamed = {}
+
+    def record(job, update):
+        streamed.setdefault(job.id, []).append(update)
+
+    seeds = (0, 1, 7)
+    handles = [
+        sched.submit(serve_spec(seed=s), on_update=record) for s in seeds
+    ]
+    sched.run_until_idle()
+    stats = sched.stats()
+    assert stats["n_compiles"] == 1  # 3 tenants, one mega-step executable
+    assert stats["n_engines"] == 1
+    for job, seed in zip(handles, seeds):
+        assert job.state is JobState.DONE
+        assert_job_matches_solo(job.result(timeout=5), serve_spec(seed=seed))
+
+
+def test_streamed_observables_bit_equal_to_solo_chunks():
+    """Every per-chunk JobUpdate matches the solo run's ChunkInfo stream."""
+    from repro.api import Callback
+
+    class Capture(Callback):
+        def __init__(self):
+            self.energies = []
+
+        def on_chunk(self, session, info):
+            e = np.asarray(info.state.pt.energy)
+            r = np.asarray(info.state.pt.rung)
+            self.energies.append(e[np.argsort(r)].copy())
+
+    sched = Scheduler(quantum_chunks=1)
+    streamed = {}
+
+    def record(job, update):
+        streamed.setdefault(job.id, []).append(update.energy)
+
+    seeds = (3, 4)
+    handles = [
+        sched.submit(serve_spec(seed=s), on_update=record) for s in seeds
+    ]
+    sched.run_until_idle()
+    for job, seed in zip(handles, seeds):
+        cap = Capture()
+        Session(serve_spec(seed=seed), callbacks=[cap]).run()
+        packed = streamed[job.id]
+        assert len(packed) == len(cap.energies)
+        for got, want in zip(packed, cap.energies):
+            assert np.array_equal(got, want)
+
+
+def test_multi_chain_and_trace_tenants_pack_bit_equal():
+    sched = Scheduler()
+    spec_a = serve_spec(seed=11, n_chains=2, record_trace=True)
+    spec_b = serve_spec(seed=12, n_chains=1, record_trace=True)
+    traces = {}
+
+    def record(job, update):
+        if update.trace is not None:
+            traces.setdefault(job.id, []).append(update.trace)
+
+    ja = sched.submit(spec_a, on_update=record)
+    jb = sched.submit(spec_b, on_update=record)
+    sched.run_until_idle()
+    # different n_chains -> different signatures -> separate buckets
+    assert sched.stats()["n_engines"] == 2
+    assert_job_matches_solo(ja.result(timeout=5), spec_a)
+    assert_job_matches_solo(jb.result(timeout=5), spec_b)
+    # streamed trace slices concatenate to the solo run's full trace
+    for job, spec in ((ja, spec_a), (jb, spec_b)):
+        ref = solo(spec)
+        axis = 1 if spec.engine.n_chains > 1 else 0
+        full = {
+            k: np.concatenate([t[k] for t in traces[job.id]], axis=axis)
+            for k in traces[job.id][0]
+        }
+        # phases run back-to-back on one state: solo stores per-phase traces
+        ref_full = {
+            k: np.concatenate(
+                [ref.phases[p.name].trace[k] for p in spec.schedule.phases],
+                axis=axis,
+            )
+            for k in full
+        }
+        for k in ref_full:
+            assert np.array_equal(full[k], ref_full[k]), (job.id, k)
+
+
+def test_engine_cache_reused_across_bucket_generations():
+    sched = Scheduler()
+    first = sched.submit(serve_spec(seed=0))
+    sched.run_until_idle()
+    second = sched.submit(serve_spec(seed=99))  # same shape, new bucket
+    sched.run_until_idle()
+    stats = sched.stats()
+    assert stats["n_engines"] == 1
+    assert stats["n_compiles"] == 1  # generation 2 reused the executable
+    assert_job_matches_solo(second.result(timeout=5), serve_spec(seed=99))
+    assert first.result(timeout=0).job_id == first.id
+
+
+# -- preemption ----------------------------------------------------------------
+
+
+@pytest.mark.parametrize("quantum_chunks", [1, 3])
+def test_preemption_slicing_is_invisible(quantum_chunks):
+    """Any quantum size yields bit-identical results (chunk boundaries are
+    invisible to the PRNG stream)."""
+    sched = Scheduler(quantum_chunks=quantum_chunks)
+    spec = serve_spec(seed=5, sweeps=(8, 16))
+    job = sched.submit(spec)
+    sched.run_until_idle()
+    assert_job_matches_solo(job.result(timeout=5), spec)
+
+
+def test_crash_restart_resumes_bit_equal(tmp_path):
+    seeds = (0, 2)
+    make = lambda s: serve_spec(seed=s, sweeps=(8, 16))
+    sched = Scheduler(checkpoint_dir=str(tmp_path), quantum_chunks=1,
+                      checkpoint_every_quanta=1)
+    for s in seeds:
+        sched.submit(make(s), job_id=f"j{s}")
+    sched.run_until_idle(max_quanta=2)  # preempt mid-schedule, then "crash"
+    assert all(
+        sched.jobs[f"j{s}"].state is JobState.PREEMPTED for s in seeds
+    )
+    resumed = Scheduler.from_checkpoint(
+        str(tmp_path), quantum_chunks=1, checkpoint_every_quanta=1
+    )
+    assert sorted(resumed.jobs) == [f"j{s}" for s in seeds]
+    resumed.run_until_idle()
+    for s in seeds:
+        res = resumed.result(f"j{s}", timeout=5)
+        ref = solo(make(s))
+        assert np.array_equal(np.asarray(res.final_energy), ref.final_energies())
+        # the measure phase ends after the restore point -> present, bit-equal
+        for k, v in ref.phases["measure"].summary.items():
+            assert np.array_equal(
+                np.asarray(res.phases["measure"][k]), np.asarray(v)
+            ), k
+
+
+def test_restart_of_finished_bucket_delivers_immediately(tmp_path):
+    sched = Scheduler(checkpoint_dir=str(tmp_path))
+    sched.submit(serve_spec(seed=1), job_id="done-job")
+    sched.run_until_idle()
+    resumed = Scheduler.from_checkpoint(str(tmp_path))
+    assert resumed.result("done-job", timeout=0).n_sweeps == 16
+    assert resumed.idle()
+
+
+# -- fairness ------------------------------------------------------------------
+
+
+def test_round_robin_never_starves_a_bucket():
+    sched = Scheduler(quantum_chunks=1)
+    long_spec = serve_spec(seed=0, length=4, sweeps=(8, 16))
+    short_spec = serve_spec(seed=0, length=6, sweeps=(8,))
+    sched.submit(long_spec)
+    sched.submit(short_spec)
+    sched.run_until_idle()
+    sig_long = shape_signature(long_spec)[0]
+    sig_short = shape_signature(short_spec)[0]
+    log = sched.quantum_log
+    assert set(log) == {sig_long, sig_short}
+    # while both buckets are live, quanta strictly alternate (FIFO requeue)
+    n_short = log.count(sig_short)
+    while_both = log[: 2 * n_short]
+    assert all(a != b for a, b in zip(while_both, while_both[1:]))
+    # the long bucket still finished after the short one drained
+    assert log[-1] == sig_long
+
+
+# -- failure isolation ---------------------------------------------------------
+
+
+def test_failing_tenant_does_not_take_down_its_bucket():
+    sched = Scheduler(quantum_chunks=1)
+
+    def explode(job, update):
+        if update.sweeps_done >= 8:
+            raise RuntimeError("tenant bug")
+
+    seeds = (0, 1, 2)
+    bad = sched.submit(serve_spec(seed=seeds[0]), on_update=explode)
+    good = [sched.submit(serve_spec(seed=s)) for s in seeds[1:]]
+    sched.run_until_idle()
+    assert bad.state is JobState.FAILED
+    with pytest.raises(JobFailedError, match="tenant bug"):
+        bad.result(timeout=0)
+    for job, seed in zip(good, seeds[1:]):
+        assert job.state is JobState.DONE
+        assert_job_matches_solo(
+            job.result(timeout=5), serve_spec(seed=seed)
+        )
+
+
+# -- lifecycle / service mode --------------------------------------------------
+
+
+def test_job_lifecycle_states_and_background_thread():
+    sched = Scheduler(quantum_chunks=1)
+    job = sched.submit(serve_spec(seed=8))
+    assert job.state is JobState.PENDING
+    sched.start()
+    try:
+        result = sched.result(job, timeout=60)
+    finally:
+        sched.shutdown()
+    assert job.state is JobState.DONE
+    assert result.n_sweeps == 16
+    assert job.n_updates > 0
+    assert job.last_update.sweeps_done == 16
+    assert_job_matches_solo(result, serve_spec(seed=8))
+
+
+def test_result_manifest_is_jsonable():
+    import json
+
+    sched = Scheduler()
+    job = sched.submit(serve_spec(seed=3))
+    sched.run_until_idle()
+    manifest = job.result(timeout=5).manifest()
+    round_tripped = json.loads(json.dumps(manifest, sort_keys=True))
+    assert round_tripped["job"] == job.id
+    assert round_tripped["n_sweeps"] == 16
+    assert RunSpec.from_dict(round_tripped["spec"]) == serve_spec(seed=3)
