@@ -39,11 +39,20 @@ EXACT = {
     # serve: the compile-amortization contract — N same-shaped jobs must
     # share exactly one mega-step compile, so this equals the job count
     "n_jobs", "jobs_packed_per_compile",
+    # obs: instrumentation is structural — the host loop emits a fixed span
+    # count per chunk, and attaching telemetry must never force a recompile
+    "timeline_events_per_chunk", "n_compiles_obs_off", "n_compiles_obs_on",
 }
 MODEL = {
     "hbm_bytes_per_cell_sweep", "traffic_reduction_x", "vmem_bytes",
     "vmem_bytes_fused", "vmem_bytes_packed", "vmem_bytes_single_chip",
     "vmem_bytes_per_shard", "modeled_hbm_bytes_per_sweep",
+    # the obs <5%-overhead contract as a normalized verdict: 1.0 while the
+    # measured on/off wall ratio is within budget, the raw ratio (an
+    # automatic >1% drift) the moment it breaches — deterministic when the
+    # contract holds, fatal when it doesn't (the raw ratio itself rides
+    # along as advisory `obs_overhead_raw`)
+    "obs_overhead_ratio",
 }
 MEASURED = {
     "swap_acceptance", "round_trips", "collective_bytes_per_exchange",

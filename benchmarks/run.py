@@ -15,6 +15,9 @@
                                     collective bytes (invoke the module
                                     directly with --devices N for a
                                     simulated multi-device mesh)
+  obs           obs_overhead.py     telemetry overhead: obs-on vs obs-off
+                                    wall ratio (<5% contract) + per-chunk
+                                    timeline event count
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only fig7,...]
 """
@@ -29,9 +32,9 @@ def main() -> None:
     ap.add_argument("--only", default="", help="comma-separated subset")
     args = ap.parse_args()
 
-    from benchmarks import convergence, ptlm_bench, roofline_report, speedup
-    from benchmarks import serve_load, shard_scaling, swap_overhead
-    from benchmarks import systems_bench, tile_sweep
+    from benchmarks import convergence, obs_overhead, ptlm_bench
+    from benchmarks import roofline_report, serve_load, shard_scaling
+    from benchmarks import speedup, swap_overhead, systems_bench, tile_sweep
 
     suites = {
         "fig3": convergence.run,
@@ -43,6 +46,7 @@ def main() -> None:
         "roofline": roofline_report.run,
         "shard": shard_scaling.run,
         "serve": serve_load.run,
+        "obs": obs_overhead.run,
     }
     only = [s for s in args.only.split(",") if s]
     print("name,us_per_call,derived")

@@ -24,6 +24,7 @@ from repro.api.session import (
     Callback,
     CheckpointCallback,
     EarlyStopCallback,
+    ObsCallback,
     ProgressCallback,
     Session,
     SessionResult,
@@ -48,6 +49,7 @@ __all__ = [
     "Callback",
     "CheckpointCallback",
     "EarlyStopCallback",
+    "ObsCallback",
     "EngineSpec",
     "ExchangeSpec",
     "LadderSpec",

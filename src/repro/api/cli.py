@@ -30,7 +30,12 @@ import sys
 
 import numpy as np
 
-from repro.api.session import CheckpointCallback, ProgressCallback, Session
+from repro.api.session import (
+    CheckpointCallback,
+    ObsCallback,
+    ProgressCallback,
+    Session,
+)
 from repro.api.spec import RunSpec
 
 __all__ = ["main"]
@@ -63,9 +68,21 @@ def _cmd_run(args) -> int:
         os.path.join(out, "checkpoints"), every_chunks=args.checkpoint_every
     )
     callbacks.append(ckpt)
+    obs_cb = None
+    if args.timeline or args.metrics_out or args.jax_profile:
+        obs_cb = ObsCallback(
+            timeline_path=args.timeline,
+            metrics_path=args.metrics_out,
+            jax_profile_dir=args.jax_profile,
+        )
+        callbacks.append(obs_cb)
     session = Session(spec, callbacks=callbacks)
     result = session.run()
     path = result.write_manifest(os.path.join(out, "manifest.json"))
+    if obs_cb is not None:
+        for kind, p in sorted(obs_cb.write().items()):
+            if not args.quiet:
+                print(f"{kind}: {p}", file=sys.stderr)
     if not args.quiet:
         temps = 1.0 / np.asarray(result.state.betas, np.float64)
         print(f"final ladder: {np.round(temps, 4).tolist()}", file=sys.stderr)
@@ -179,11 +196,21 @@ def _cmd_serve(args) -> int:
     # importing it at module scope would cycle through repro.api.
     from repro.serve import JobFailedError, Scheduler
 
+    out = args.out or "runs/serve"
+    obs = None
+    if args.timeline:
+        from repro.obs import Observability
+
+        obs = Observability.create(timeline=True)
+    metrics_path = args.metrics_out or os.path.join(out, "metrics.prom")
     sched = Scheduler(
         checkpoint_dir=args.checkpoint_dir,
         quantum_chunks=args.quantum_chunks,
         pack_window=args.pack_window,
         checkpoint_every_quanta=args.checkpoint_every,
+        obs=obs,
+        metrics_every=args.metrics_every,
+        metrics_path=metrics_path if args.metrics_every else None,
     )
     handles = []
     for path in args.specs:
@@ -203,8 +230,14 @@ def _cmd_serve(args) -> int:
             results[job.id] = sched.result(job, timeout=0).manifest()
         except JobFailedError as e:
             failed[job.id] = repr(e)
-    out = args.out or "runs/serve"
     os.makedirs(out, exist_ok=True)
+    sched.write_metrics(metrics_path)
+    if obs is not None:
+        obs.timeline.write(args.timeline)
+        if not args.quiet:
+            print(f"timeline: {args.timeline}", file=sys.stderr)
+    if not args.quiet:
+        print(f"metrics: {metrics_path}", file=sys.stderr)
     path = os.path.join(out, "serve_results.json")
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
@@ -266,6 +299,16 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--mesh-replicas", type=int, default=0, metavar="D",
                    help="shard the replica axis over D devices (MeshSpec "
                         "replica axis; overrides the spec's engine.mesh)")
+    p.add_argument("--timeline", default=None, metavar="OUT.trace.json",
+                   help="record a Perfetto/Chrome trace of the run "
+                        "(compile, chunk, device-wait, adapt, checkpoint "
+                        "spans) to this path")
+    p.add_argument("--metrics-out", default=None, metavar="OUT.prom",
+                   help="write the run's metrics (Prometheus text format) "
+                        "to this path")
+    p.add_argument("--jax-profile", default=None, metavar="DIR",
+                   help="wrap one compiled chunk in jax.profiler and write "
+                        "the device profile under DIR")
     p.add_argument("--quiet", action="store_true")
     p.set_defaults(fn=_cmd_run)
 
@@ -309,6 +352,14 @@ def build_parser() -> argparse.ArgumentParser:
                    help="enable preemption persistence under this root")
     p.add_argument("--checkpoint-every", type=int, default=0,
                    help="quanta between bucket checkpoints (0 = seal/finish only)")
+    p.add_argument("--metrics-every", type=int, default=0, metavar="N",
+                   help="rewrite the Prometheus metrics file every N quanta "
+                        "(0 = only once at the end)")
+    p.add_argument("--metrics-out", default=None, metavar="OUT.prom",
+                   help="metrics destination (default <out>/metrics.prom)")
+    p.add_argument("--timeline", default=None, metavar="OUT.trace.json",
+                   help="record a Perfetto trace of the scheduler (quantum "
+                        "lanes, job flows, engine spans)")
     p.add_argument("--quiet", action="store_true")
     p.set_defaults(fn=_cmd_serve)
 

@@ -27,6 +27,7 @@ import dataclasses
 import json
 import os
 import sys
+import time
 from typing import Any, Sequence
 
 import jax
@@ -41,6 +42,7 @@ __all__ = [
     "Callback",
     "CheckpointCallback",
     "EarlyStopCallback",
+    "ObsCallback",
     "ProgressCallback",
     "TraceWriterCallback",
     "Session",
@@ -155,7 +157,12 @@ class CheckpointCallback(Callback):
         adapt_st = session.engine._adapt_state
         if adapt_st is not None:
             meta.update(adapt_st.to_meta())
-        self.manager.save(sweep, state, meta=meta)
+        obs = getattr(session.engine, "obs", None)
+        if obs is not None:
+            with obs.timeline.span("checkpoint", cat="session", sweep=sweep):
+                self.manager.save(sweep, state, meta=meta)
+        else:
+            self.manager.save(sweep, state, meta=meta)
         session.dispatch("on_checkpoint", sweep)
 
     def on_chunk(self, session, info):
@@ -205,6 +212,72 @@ class TraceWriterCallback(Callback):
             f"trace_{session.current_phase.name}_{info.index:06d}.npz",
         )
         np.savez(path, **info.trace)
+
+
+class ObsCallback(Callback):
+    """Attach a `repro.obs.Observability` to the run and export its artifacts.
+
+    The composition point between the callback pipeline and the telemetry
+    layer (DESIGN.md §Observability): on phase start the bundle is attached
+    to the Session's engine (arming the per-chunk spans and metrics inside
+    the host loop), phases land as spans on a ``session`` track, and after
+    *every* phase the timeline/metrics files are (re)written atomically — a
+    run that dies mid-schedule still leaves loadable artifacts on disk.
+
+    Args:
+      obs: an existing `Observability` to ride on; built fresh when None.
+      timeline_path: where `write()` puts the Chrome-trace JSON (skipped
+        when None or when the bundle records no timeline).
+      metrics_path: where `write()` puts the Prometheus text exposition.
+      jax_profile_dir: arm the one-shot ``jax.profiler`` window around the
+        first engine chunk (only honoured when ``obs`` is built here).
+    """
+
+    def __init__(
+        self,
+        obs=None,
+        timeline_path: str | None = None,
+        metrics_path: str | None = None,
+        jax_profile_dir: str | None = None,
+    ):
+        if obs is None:
+            from repro.obs import Observability
+
+            obs = Observability.create(
+                timeline=timeline_path is not None,
+                jax_profile_dir=jax_profile_dir,
+            )
+        self.obs = obs
+        self.timeline_path = timeline_path
+        self.metrics_path = metrics_path
+        self._phase_t0: dict[str, float] = {}
+
+    def on_phase_start(self, session, phase):
+        if session.engine.obs is not self.obs:
+            session.engine.obs = self.obs
+        self._phase_t0[phase.name] = time.perf_counter()
+
+    def on_phase_end(self, session, phase, result):
+        t0 = self._phase_t0.pop(phase.name, None)
+        if t0 is not None:
+            self.obs.timeline.complete(
+                f"phase:{phase.name}", t0, time.perf_counter() - t0,
+                cat="session", track="session",
+                args={"n_sweeps": int(result.n_sweeps),
+                      "stopped_early": bool(result.stopped_early)},
+            )
+        self.write()
+
+    def write(self) -> dict:
+        """Write the requested artifacts (atomic); returns ``{kind: path}``."""
+        out = {}
+        if self.timeline_path and getattr(self.obs.timeline, "enabled", False):
+            out["timeline"] = self.obs.timeline.write(self.timeline_path)
+        if self.metrics_path:
+            from repro.obs import write_prometheus
+
+            out["metrics"] = write_prometheus(self.obs.metrics, self.metrics_path)
+        return out
 
 
 # -- results -------------------------------------------------------------------

@@ -7,6 +7,8 @@ observations behind Fig. 7 are all computed from these.
 """
 from __future__ import annotations
 
+import warnings
+
 import numpy as np
 
 __all__ = [
@@ -30,6 +32,14 @@ def swap_acceptance_rate(trace: dict) -> np.ndarray:
     if "swap_attempt" in trace:
         attempts = np.asarray(trace["swap_attempt"], dtype=np.float64).sum(axis=0)
     else:
+        warnings.warn(
+            "trace has no 'swap_attempt' channel; inferring attempts from "
+            "swap_prob > 0, which undercounts pairs whose acceptance "
+            "probability underflows to 0 in f32 (biasing the rate up). "
+            "Re-record with an engine-era trace for exact counts.",
+            RuntimeWarning,
+            stacklevel=2,
+        )
         prob = np.asarray(trace["swap_prob"], dtype=np.float64)
         attempts = (prob > 0).sum(axis=0)  # (R,)
     accepted = acc.sum(axis=0)

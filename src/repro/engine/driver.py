@@ -40,6 +40,7 @@ monolithic `repro.core.pt.run` — chunk boundaries are invisible to the chain.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Mapping, Sequence
 
 import jax
@@ -683,6 +684,127 @@ class AdaptInfo:
     sweeps_done: int
 
 
+# -- observability (obs-on runs only; see repro.obs) --------------------------
+
+
+class _EngineObs:
+    """Pre-resolved metric handles + timeline for an instrumented engine.
+
+    Built once when an `repro.obs.Observability` is attached (``engine.obs =
+    obs``); never constructed on the obs-off path, which is the structural
+    zero-overhead contract: with ``obs=None`` the host loop performs exactly
+    one ``is None`` test per site and allocates nothing.
+
+    All series here derive from state the engine already holds on host —
+    the O(R) pooled swap/flow counters, wall-clock timestamps, compile
+    bookkeeping.  Nothing in this class touches device buffers beyond the
+    `block_until_ready` the chunk span needs for an honest duration.
+    """
+
+    __slots__ = (
+        "obs", "timeline", "compiles", "compile_seconds", "chunks", "sweeps",
+        "chunk_seconds", "device_seconds", "host_seconds", "sweeps_per_sec",
+        "swap_acc", "flow_up", "adapt_rounds", "checkpoints", "hbm_bytes",
+        "_last_counters",
+    )
+
+    def __init__(self, obs, system, config):
+        self.obs = obs
+        self.timeline = obs.timeline
+        m = obs.metrics
+        self.compiles = m.counter(
+            "engine_compiles_total", "mega-step AOT compiles")
+        self.compile_seconds = m.counter(
+            "engine_compile_seconds_total", "wall seconds spent in AOT compile")
+        self.chunks = m.counter(
+            "engine_chunks_total", "compiled chunks executed")
+        self.sweeps = m.counter(
+            "engine_sweeps_total", "sweeps advanced (per chain)")
+        self.chunk_seconds = m.histogram(
+            "engine_chunk_seconds", "wall time per compiled chunk")
+        self.device_seconds = m.counter(
+            "engine_device_seconds_total",
+            "wall seconds waiting on device inside chunks")
+        self.host_seconds = m.counter(
+            "engine_host_seconds_total",
+            "host-side overhead between device launches (adapt, trace drain, "
+            "checkpoint, callbacks)")
+        self.sweeps_per_sec = m.gauge(
+            "engine_sweeps_per_sec", "throughput of the last chunk")
+        self.adapt_rounds = m.counter(
+            "engine_adapt_rounds_total", "ladder retunes performed")
+        self.checkpoints = m.counter(
+            "engine_checkpoints_total", "engine-loop checkpoint saves")
+        # live per-rung diagnostics from the O(R) pooled counters the adapt
+        # feedback already reads — label children resolved once, not per chunk
+        acc = m.gauge("pt_swap_acceptance",
+                      "live swap acceptance per rung pair", labels=("pair",))
+        flow = m.gauge("pt_flow_up_fraction",
+                       "live up-flow fraction f(k) per rung", labels=("rung",))
+        self.swap_acc = [acc.labels(str(k)) for k in range(config.n_replicas - 1)]
+        self.flow_up = [flow.labels(str(k)) for k in range(config.n_replicas)]
+        # window deltas for the acceptance gauges: cumulative counters would
+        # smear early-run transients over the whole series
+        self._last_counters = None
+        self.hbm_bytes = self._modeled_hbm_bytes(system, config)
+
+    @staticmethod
+    def _modeled_hbm_bytes(system, config) -> float | None:
+        """Modeled HBM bytes per chunk launch (analytic sweep-kernel model).
+
+        Best-effort: only lattice systems exposing ``length`` participate;
+        anything else annotates nothing rather than a wrong number.
+        """
+        L = getattr(system, "length", None)
+        if L is None:
+            return None
+        from repro.hlo.traffic import hbm_bytes_per_cell_sweep
+
+        spi = config.spec.sweeps_per_interval
+        per_cell = hbm_bytes_per_cell_sweep(
+            fused=getattr(system, "use_fused", False),
+            sweeps_per_interval=spi,
+            rounds_per_launch=(
+                config.chunk_intervals
+                if getattr(system, "use_fused_round", False) else 1
+            ),
+            # Potts moves two random planes per sweep (proposal + accept)
+            uniform_plane_bytes=16.0 if hasattr(system, "q") else 8.0,
+        )
+        cells = float(L) * float(L)
+        sweeps = spi * config.chunk_intervals
+        return per_cell * cells * sweeps * config.n_replicas * config.n_chains
+
+    def record_chunk(self, state, *, intervals, spi, device_s, wall_s) -> None:
+        """Per-chunk series: throughput, durations, live rung diagnostics."""
+        sweeps = intervals * spi
+        self.chunks.inc()
+        self.sweeps.inc(sweeps)
+        self.chunk_seconds.observe(wall_s)
+        self.device_seconds.inc(device_s)
+        self.host_seconds.inc(max(wall_s - device_s, 0.0))
+        if wall_s > 0:
+            self.sweeps_per_sec.set(sweeps / wall_s)
+
+    def record_rungs(self, counters: dict[str, np.ndarray]) -> None:
+        """Refresh the per-rung gauges from this chunk's counter deltas."""
+        last = self._last_counters
+        self._last_counters = counters
+        if last is not None:
+            att = counters["attempts"] - last["attempts"]
+            acc = counters["accepts"] - last["accepts"]
+        else:
+            att, acc = counters["attempts"], counters["accepts"]
+        for k, g in enumerate(self.swap_acc):
+            if att[k] > 0:
+                g.set(acc[k] / att[k])
+        lab = counters["labeled"]
+        up = counters["up"]
+        for k, g in enumerate(self.flow_up):
+            if lab[k] > 0:
+                g.set(up[k] / lab[k])
+
+
 # -- the engine ---------------------------------------------------------------
 
 
@@ -700,6 +822,7 @@ class Engine:
         config: EngineConfig,
         observables: Mapping[str, Callable] | None = None,
         adapt: AdaptConfig | None = None,
+        obs=None,
     ):
         if adapt is not None and not config.track_stats:
             raise ValueError(
@@ -742,6 +865,26 @@ class Engine:
         # host loop saw — track the authoritative f64 temps here instead
         # (restored from checkpoint meta on resume)
         self._temps: np.ndarray | None = None
+        # observability handle (repro.obs.Observability) — None keeps every
+        # instrumentation site down to a single `is None` test (the
+        # zero-overhead-off contract pinned by tests/test_obs.py)
+        self._eobs: _EngineObs | None = None
+        if obs is not None:
+            self.obs = obs
+
+    @property
+    def obs(self):
+        """The attached `repro.obs.Observability`, or None (obs off)."""
+        return self._eobs.obs if self._eobs is not None else None
+
+    @obs.setter
+    def obs(self, value):
+        # metric handles resolve once here, so the host loop's obs-on path
+        # is attribute access + float ops — no name lookups per chunk
+        self._eobs = (
+            None if value is None
+            else _EngineObs(value, self.system, self.config)
+        )
 
     # -- state construction ----------------------------------------------------
     def _init_single(self, key: jax.Array) -> PTState:
@@ -937,6 +1080,8 @@ class Engine:
         """
         exe = self._executables.get(chunk_len)
         if exe is None:
+            eo = self._eobs
+            t0 = time.perf_counter() if eo is not None else 0.0
             sds = lambda tree: jax.tree_util.tree_map(
                 lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=getattr(x, "sharding", None)), tree
             )
@@ -947,6 +1092,16 @@ class Engine:
             ).compile()
             self._executables[chunk_len] = exe
             self.n_compiles += 1
+            if eo is not None:
+                dt = time.perf_counter() - t0
+                eo.compiles.inc()
+                eo.compile_seconds.inc(dt)
+                eo.timeline.complete(
+                    "compile", t0, dt, cat="compile",
+                    args={"chunk_intervals": chunk_len,
+                          "n_replicas": self.config.n_replicas,
+                          "n_chains": self.config.n_chains},
+                )
         return exe
 
     # -- the host loop ---------------------------------------------------------
@@ -1022,20 +1177,47 @@ class Engine:
         done = 0
         chunk_idx = 0
         stopped = False
+        eo = self._eobs
         while done < n_intervals:
             this = min(self.config.chunk_intervals, n_intervals - done)
-            pt_st, stats, trace = self._compiled(state, this)(
-                state.pt, state.stats, state.betas
-            )
+            if eo is not None:
+                # instrumented launch: same executable, plus wall/device
+                # timing and the one-shot jax.profiler window if armed.  The
+                # block_until_ready makes the device-wait span honest; its
+                # cost is covered by the <5% obs-on budget and never paid
+                # when obs is off.
+                t_chunk0 = time.perf_counter()
+                exe = self._compiled(state, this)
+                profiling = eo.obs.start_jax_profile()
+                t_launch = time.perf_counter()
+                pt_st, stats, trace = exe(state.pt, state.stats, state.betas)
+                jax.block_until_ready(pt_st)
+                device_s = time.perf_counter() - t_launch
+                if profiling:
+                    eo.obs.stop_jax_profile()
+            else:
+                pt_st, stats, trace = self._compiled(state, this)(
+                    state.pt, state.stats, state.betas
+                )
             state = EngineState(pt=pt_st, stats=stats, betas=state.betas)
             done += this
             chunk_idx += 1
+            if eo is not None:
+                eo.timeline.complete(
+                    "device_wait", t_launch, device_s, cat="engine",
+                    args={"chunk": chunk_idx, "intervals": this},
+                )
             chunk_np = None
             if self.config.record_trace:
-                chunk_np = {k: np.asarray(v) for k, v in trace.items()}
+                if eo is not None:
+                    with eo.timeline.span("trace_drain", chunk=chunk_idx):
+                        chunk_np = {k: np.asarray(v) for k, v in trace.items()}
+                else:
+                    chunk_np = {k: np.asarray(v) for k, v in trace.items()}
                 if keep_trace:
                     chunks.append(chunk_np)
             if self.adapt is not None and done < n_intervals:
+                t_adapt0 = time.perf_counter() if eo is not None else 0.0
                 new_temps, acceptance = maybe_adapt(
                     temps, self._pooled_counters(state), self.adapt, adapt_st
                 )
@@ -1073,6 +1255,15 @@ class Engine:
                             acceptance=np.asarray(acceptance, np.float64),
                             sweeps_done=done * spi,
                         ))
+                if eo is not None:
+                    eo.timeline.complete(
+                        "adapt", t_adapt0, time.perf_counter() - t_adapt0,
+                        cat="engine",
+                        args={"retuned": new_temps is not None,
+                              "round": adapt_st.rounds},
+                    )
+                    if new_temps is not None:
+                        eo.adapt_rounds.inc()
             if (
                 checkpoint is not None
                 and checkpoint_every_chunks > 0
@@ -1088,7 +1279,26 @@ class Engine:
                 }
                 if self._adapt_state is not None:
                     meta.update(self._adapt_state.to_meta())
-                checkpoint.save(sweep, state, meta=meta)
+                if eo is not None:
+                    with eo.timeline.span("checkpoint", sweep=sweep):
+                        checkpoint.save(sweep, state, meta=meta)
+                    eo.checkpoints.inc()
+                else:
+                    checkpoint.save(sweep, state, meta=meta)
+            if eo is not None:
+                wall = time.perf_counter() - t_chunk0
+                args = {"chunk": chunk_idx, "intervals": this,
+                        "sweeps_done": done * spi}
+                if eo.hbm_bytes is not None:
+                    args["modeled_hbm_bytes"] = (
+                        eo.hbm_bytes * this / self.config.chunk_intervals
+                    )
+                eo.timeline.complete("chunk", t_chunk0, wall,
+                                     cat="engine", args=args)
+                eo.record_chunk(state, intervals=this, spi=spi,
+                                device_s=device_s, wall_s=wall)
+                if self.config.track_stats:
+                    eo.record_rungs(self._pooled_counters(state))
             if on_chunk is not None:
                 info = ChunkInfo(
                     index=chunk_idx,

@@ -131,6 +131,10 @@ class Job:
         self.error: BaseException | None = None
         self.last_update: JobUpdate | None = None
         self.n_updates = 0
+        # monotonic submit timestamp, stamped by Scheduler.submit — feeds
+        # the wakeup-latency and time-in-queue histograms (None for jobs
+        # restored from a checkpoint, which were never in this queue)
+        self.submitted_at: float | None = None
         self._result: JobResult | None = None
         self._finished = threading.Event()
 
@@ -192,6 +196,11 @@ class JobQueue:
     def put(self, job: Job) -> None:
         with self._cond:
             self._items.append(job)
+            self._cond.notify_all()
+
+    def poke(self) -> None:
+        """Wake every `wait` caller without enqueueing (stop signalling)."""
+        with self._cond:
             self._cond.notify_all()
 
     def drain(self) -> list[Job]:

@@ -71,6 +71,16 @@ class Scheduler:
       checkpoint_every_quanta: bucket-checkpoint cadence (0 = only at seal
         and finish).
       keep: checkpoint retention per bucket.
+      obs: an optional `repro.obs.Observability` — when given, its timeline
+        gains per-bucket quantum lanes and job-lifecycle flow arrows
+        (PENDING -> RUNNING -> DONE), and every packed engine is attached to
+        it (engine spans land in the same trace).  Metrics are *always*
+        recorded into `Scheduler.metrics()`'s registry, obs or not — the
+        quantum loop is coarse enough (whole compiled chunks) that the cost
+        is noise.
+      metrics_every: write the Prometheus exposition every N quanta (0 = on
+        demand only) to ``metrics_path``.
+      metrics_path: destination for the periodic exposition.
 
     Use either synchronously (``submit(...)`` then ``run_until_idle()``) or
     as a service (``start()`` spawns the host loop thread; ``submit`` is
@@ -84,6 +94,9 @@ class Scheduler:
         pack_window: float = 0.0,
         checkpoint_every_quanta: int = 0,
         keep: int = 2,
+        obs=None,
+        metrics_every: int = 0,
+        metrics_path: str | None = None,
     ):
         if quantum_chunks < 1:
             raise ValueError("quantum_chunks must be >= 1")
@@ -106,6 +119,44 @@ class Scheduler:
         self.jobs: dict[str, Job] = {}
         self._thread: threading.Thread | None = None
         self._stop = threading.Event()
+        # idle handshake for shutdown(wait=True): the loop notifies after
+        # any step that may have drained the last work, so shutdown blocks
+        # on a condition instead of polling time.sleep(0.01)
+        self._idle_cond = threading.Condition()
+        # -- telemetry (repro.obs) --------------------------------------------
+        from repro.obs import MetricsRegistry, NULL
+
+        self._obs = obs
+        self._timeline = obs.timeline if obs is not None else NULL
+        self.metrics_every = metrics_every
+        self.metrics_path = metrics_path
+        m = obs.metrics if obs is not None else MetricsRegistry()
+        self._registry = m
+        self._m_queue_depth = m.gauge(
+            "serve_queue_depth", "jobs submitted but not yet staged")
+        self._m_buckets_live = m.gauge(
+            "serve_buckets_live", "sealed buckets in the round-robin")
+        self._m_wakeup = m.histogram(
+            "serve_wakeup_latency_seconds",
+            "submit-to-intake latency (idle-loop responsiveness)")
+        self._m_time_in_queue = m.histogram(
+            "serve_time_in_queue_seconds",
+            "submit-to-seal latency (pack window + loop occupancy)")
+        self._m_quantum = m.histogram(
+            "serve_quantum_seconds", "wall time per scheduler quantum")
+        self._m_quanta = m.counter(
+            "serve_quanta_total", "quanta executed")
+        self._m_idle_wakeups = m.counter(
+            "serve_idle_wakeups_total",
+            "loop wakeups that found no work to advance")
+        self._m_occupancy = m.gauge(
+            "serve_bucket_occupancy", "live jobs packed per bucket",
+            labels=("bucket",))
+        self._m_packed_per_compile = m.gauge(
+            "serve_jobs_packed_per_compile",
+            "jobs amortized per mega-step compile")
+        self._m_job_sweeps = m.gauge(
+            "serve_job_sweeps", "per-tenant sweeps completed", labels=("job",))
 
     # -- client API --------------------------------------------------------------
     def submit(
@@ -120,8 +171,12 @@ class Scheduler:
         if job_id in self.jobs:
             raise ValueError(f"duplicate job id {job_id!r}")
         job = Job(job_id, spec, on_update=on_update)
+        job.submitted_at = time.monotonic()
         self.jobs[job_id] = job
         self.queue.put(job)
+        self._m_queue_depth.set(len(self.queue))
+        self._timeline.flow_start("job:" + job_id, job_id, track="intake",
+                                  seed=job.seed)
         return job
 
     def result(self, job: Job | str, timeout: float | None = None) -> JobResult:
@@ -133,11 +188,18 @@ class Scheduler:
     # -- intake / packing --------------------------------------------------------
     def _intake(self) -> None:
         now = time.monotonic()
-        for job in self.queue.drain():
+        drained = self.queue.drain()
+        if drained:
+            self._m_queue_depth.set(len(self.queue))
+        for job in drained:
+            if job.submitted_at is not None:
+                self._m_wakeup.observe(now - job.submitted_at)
             try:
                 check_servable(job.spec)
             except ValueError as err:
                 job._fail(err)
+                self._timeline.flow_end("job:" + job.id, job.id,
+                                        track="intake", state="failed")
                 continue
             digest, _ = shape_signature(job.spec)
             staged = self._staged.get(digest)
@@ -174,6 +236,10 @@ class Scheduler:
                 observables=template.system.observables(
                     system, template.observables
                 ),
+                # packed engines share the scheduler's telemetry bundle, so
+                # engine spans (compile, chunk, device_wait) land on the
+                # same trace as the quantum lanes
+                obs=self._obs,
             )
             self._engines[key] = engine
         return engine
@@ -190,6 +256,16 @@ class Scheduler:
             manager=self._bucket_manager(name),
         )
         bucket.write_manifest()
+        now = time.monotonic()
+        lane = f"bucket:{digest[:8]}"
+        self._m_occupancy.labels(name).set(len(staged.jobs))
+        for job in staged.jobs:
+            if job.submitted_at is not None:
+                self._m_time_in_queue.observe(now - job.submitted_at)
+            self._timeline.flow_step("job:" + job.id, job.id, track=lane,
+                                     bucket=name)
+        self._timeline.instant("seal", cat="serve", track=lane,
+                               bucket=name, jobs=len(staged.jobs))
         return bucket
 
     # -- the host loop -----------------------------------------------------------
@@ -198,18 +274,36 @@ class Scheduler:
         bucket advanced."""
         self._intake()
         self._seal(force=self.pack_window <= 0)
+        self._m_buckets_live.set(len(self._buckets))
         if not self._buckets:
             return False
         bucket = self._buckets.popleft()
         for job in bucket.live_jobs():
             job.state = JobState.RUNNING
         self.quantum_log.append(bucket.digest)
+        lane = f"bucket:{bucket.digest[:8]}"
+        t0 = time.perf_counter()
         finished = bucket.run_quantum(self.quantum_chunks)
+        dt = time.perf_counter() - t0
+        self._m_quantum.observe(dt)
+        self._m_quanta.inc()
+        self._timeline.complete(
+            "quantum", t0, dt, cat="serve", track=lane,
+            args={"jobs": len(bucket.jobs), "finished": finished},
+        )
         n = self._quanta_run.get(id(bucket), 0) + 1
         self._quanta_run[id(bucket)] = n
+        for job in bucket.jobs:
+            if job.last_update is not None:
+                self._m_job_sweeps.labels(job.id).set(
+                    job.last_update.sweeps_done
+                )
         if finished:
             self._quanta_run.pop(id(bucket), None)
             bucket.checkpoint()  # final state: restart delivers instantly
+            for job in bucket.jobs:
+                self._timeline.flow_end("job:" + job.id, job.id, track=lane,
+                                        state=job.state.value)
         else:
             if self.checkpoint_every_quanta and (
                 n % self.checkpoint_every_quanta == 0
@@ -218,6 +312,15 @@ class Scheduler:
             for job in bucket.live_jobs():
                 job.state = JobState.PREEMPTED
             self._buckets.append(bucket)
+        n_compiles = sum(e.n_compiles for e in self._engines.values())
+        if n_compiles:
+            self._m_packed_per_compile.set(len(self.jobs) / n_compiles)
+        if (
+            self.metrics_every
+            and self.metrics_path
+            and len(self.quantum_log) % self.metrics_every == 0
+        ):
+            self.write_metrics(self.metrics_path)
         return True
 
     def idle(self) -> bool:
@@ -241,9 +344,16 @@ class Scheduler:
 
         def loop():
             while not self._stop.is_set():
-                if not self.step() and self.idle():
-                    # nothing live: sleep until a submission (or stop poke)
-                    self.queue.wait(timeout=0.05)
+                advanced = self.step()
+                if not advanced and self.idle():
+                    # possibly the last work just drained: let a blocked
+                    # shutdown(wait=True) re-check before we sleep
+                    with self._idle_cond:
+                        self._idle_cond.notify_all()
+                    self._m_idle_wakeups.inc()
+                    # nothing live: block until a submission or a stop poke
+                    # (both notify the queue condition — no sleep polling)
+                    self.queue.wait(timeout=1.0)
 
         self._thread = threading.Thread(
             target=loop, name="repro-serve", daemon=True
@@ -251,17 +361,40 @@ class Scheduler:
         self._thread.start()
 
     def shutdown(self, wait: bool = True) -> None:
-        """Stop the host loop.  With ``wait``, drain all live work first."""
+        """Stop the host loop.  With ``wait``, drain all live work first.
+
+        The drain blocks on the loop's idle notification (condition
+        variable), not a sleep poll; the timeout is only a safety net
+        against a notify landing between our predicate check and the wait.
+        """
         if self._thread is None:
             return
         if wait:
-            while not self.idle():
-                time.sleep(0.01)
+            with self._idle_cond:
+                while not self.idle():
+                    self._idle_cond.wait(timeout=0.5)
         self._stop.set()
+        self.queue.poke()  # wake the loop out of its queue wait promptly
         self._thread.join()
         self._thread = None
 
     # -- introspection -----------------------------------------------------------
+    def metrics(self) -> dict:
+        """Snapshot of the service metrics registry (`repro.obs.metrics`).
+
+        Always live — queue depth, quantum latency histograms, bucket
+        occupancy, jobs-packed-per-compile, per-tenant sweep progress —
+        whether or not an `Observability` bundle was attached.  Render with
+        `repro.obs.to_prometheus` / `to_json`.
+        """
+        return self._registry.snapshot()
+
+    def write_metrics(self, path: str) -> str:
+        """Write the Prometheus text exposition to ``path`` (atomic)."""
+        from repro.obs import write_prometheus
+
+        return write_prometheus(self._registry, path)
+
     def stats(self) -> dict:
         """Service counters (the serve benchmark's instrumentation source)."""
         return {

@@ -1,0 +1,145 @@
+"""Session callback-pipeline output contracts (`repro.api.session`).
+
+`ProgressCallback` and `TraceWriterCallback` predate the telemetry layer
+and are the human-facing half of observability: progress lines a user
+tails, trace chunks a user post-processes.  Pinned here:
+
+* **progress lines** — phase banners, rate-limited per-chunk sweep lines
+  (``every`` honoured, final chunk always printed), retune lines with the
+  rounded ladder — all on the injected stream, nothing on stdout;
+* **trace streaming** — one ``trace_<phase>_<chunk>.npz`` per chunk whose
+  arrays concatenate to exactly the monolithic ``RunResult.trace``, and the
+  ``consumes_trace`` flag keeps the engine from buffering a duplicate;
+* **early stop** — `EarlyStopCallback` truncates the schedule and marks the
+  result, and downstream callbacks still see the partial phase.
+"""
+import io
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    AdaptSpec,
+    EarlyStopCallback,
+    EngineSpec,
+    LadderSpec,
+    PhaseSpec,
+    ProgressCallback,
+    RunSpec,
+    ScheduleSpec,
+    Session,
+    SystemSpec,
+    TraceWriterCallback,
+)
+
+
+def _spec(record_trace=False, adapt=None, phases=None):
+    return RunSpec(
+        system=SystemSpec("ising", {"length": 4}),
+        ladder=LadderSpec(kind="geometric", n_replicas=4, t_min=1.5, t_max=3.5),
+        engine=EngineSpec(swap_interval=2, chunk_intervals=2,
+                          record_trace=record_trace),
+        schedule=ScheduleSpec(phases=tuple(
+            phases or (PhaseSpec("burn", 8), PhaseSpec("measure", 8)),
+        )),
+        observables=("mag",),
+        adapt=adapt,
+        seed=0,
+    )
+
+
+# ---------- ProgressCallback ----------------------------------------------------
+
+
+def test_progress_lines_phase_banner_and_chunks():
+    out = io.StringIO()
+    Session(_spec(), callbacks=[ProgressCallback(stream=out)]).run()
+    lines = out.getvalue().splitlines()
+    # each 8-sweep phase runs 2 chunks of 2 intervals (4 sweeps each)
+    assert lines == [
+        "[burn] 8 sweeps",
+        "[burn] sweep 4/8",
+        "[burn] sweep 8/8",
+        "[measure] 8 sweeps",
+        "[measure] sweep 4/8",
+        "[measure] sweep 8/8",
+    ]
+
+
+def test_progress_every_rate_limits_but_final_chunk_prints():
+    out = io.StringIO()
+    spec = _spec(phases=(PhaseSpec("burn", 24),))  # 6 chunks
+    Session(spec, callbacks=[ProgressCallback(every=4, stream=out)]).run()
+    sweep_lines = [l for l in out.getvalue().splitlines() if "sweep " in l]
+    # chunk 4 (every=4) and chunk 6 (the final chunk, always printed)
+    assert sweep_lines == ["[burn] sweep 16/24", "[burn] sweep 24/24"]
+
+
+def test_progress_adapt_line_shows_retuned_ladder():
+    out = io.StringIO()
+    spec = _spec(
+        adapt=AdaptSpec(mode="acceptance", min_attempts_per_pair=1),
+        phases=(PhaseSpec("burn", 32, adapt=True),),
+    )
+    Session(spec, callbacks=[ProgressCallback(stream=out)]).run()
+    retunes = [l for l in out.getvalue().splitlines() if "retune" in l]
+    assert retunes, "adaptive phase produced no retune lines"
+    assert retunes[0].startswith("[burn] ladder retune #1: T = [")
+
+
+def test_progress_defaults_to_stderr(capsys):
+    Session(_spec(), callbacks=[ProgressCallback()]).run()
+    captured = capsys.readouterr()
+    assert "[burn] 8 sweeps" in captured.err
+    assert captured.out == ""
+
+
+# ---------- TraceWriterCallback -------------------------------------------------
+
+
+def test_trace_writer_streams_chunks_that_reassemble(tmp_path):
+    # reference: the monolithic trace from a run without the writer
+    ref = Session(_spec(record_trace=True)).run()
+
+    d = str(tmp_path / "chunks")
+    cb = TraceWriterCallback(d)
+    res = Session(_spec(record_trace=True), callbacks=[cb]).run()
+    # consumes_trace: the engine must NOT also buffer the full trace
+    assert res.final.trace is None
+
+    files = sorted(os.listdir(d))
+    assert files == [
+        "trace_burn_000001.npz", "trace_burn_000002.npz",
+        "trace_measure_000001.npz", "trace_measure_000002.npz",
+    ]
+    for phase in ("burn", "measure"):
+        chunks = [
+            np.load(os.path.join(d, f))
+            for f in files if f.startswith(f"trace_{phase}_")
+        ]
+        ref_trace = ref.phases[phase].trace
+        for key in ref_trace:
+            streamed = np.concatenate([c[key] for c in chunks], axis=0)
+            np.testing.assert_array_equal(streamed, ref_trace[key], err_msg=key)
+
+
+def test_trace_writer_without_record_trace_writes_nothing(tmp_path):
+    d = str(tmp_path / "chunks")
+    Session(_spec(record_trace=False), callbacks=[TraceWriterCallback(d)]).run()
+    assert os.listdir(d) == []
+
+
+# ---------- EarlyStopCallback ---------------------------------------------------
+
+
+def test_early_stop_truncates_schedule():
+    stop_after = 4
+
+    res = Session(
+        _spec(),
+        callbacks=[EarlyStopCallback(lambda info: info.sweeps_done >= stop_after)],
+    ).run()
+    assert res.stopped_early
+    assert list(res.phases) == ["burn"]
+    assert res.phases["burn"].n_sweeps == stop_after
