@@ -42,6 +42,12 @@ EXACT = {
     # obs: instrumentation is structural — the host loop emits a fixed span
     # count per chunk, and attaching telemetry must never force a recompile
     "timeline_events_per_chunk", "n_compiles_obs_off", "n_compiles_obs_on",
+    # resilience: fault plans are seeded and retries deterministic, so the
+    # recovery machinery's counts — and the bit-equal verdict itself — are
+    # structural facts; only a recovery's wall-clock is advisory
+    "faults_injected", "retries_to_success", "quarantined_buckets",
+    "quarantined_jobs", "jobs_failed_typed", "checkpoint_fallback_depth",
+    "bit_equal", "degraded_kernels",
 }
 MODEL = {
     "hbm_bytes_per_cell_sweep", "traffic_reduction_x", "vmem_bytes",

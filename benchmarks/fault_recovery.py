@@ -1,0 +1,199 @@
+"""Fault-recovery benchmark: injected failures vs supervised recovery.
+
+The resilience claim (DESIGN.md §Resilience): under injected faults the
+serve scheduler either recovers every job **bit-equal** to its fault-free
+run or quarantines the bucket with a typed failure — and the recovery
+machinery's behaviour is deterministic, so its counts gate EXACT while only
+the wall-clock of a recovery rides along as advisory.  Three scenarios:
+
+* ``fault_recovery`` — transient chunk-launch faults plus a torn checkpoint
+  write; the supervisor retries, restores from the last intact generation
+  and finishes bit-equal.  ``retries_to_success``, ``faults_injected``,
+  ``quarantined_buckets`` (0) and ``bit_equal`` (1) are EXACT;
+  ``recovery_latency_s`` (wall from first failure to final bit-equal
+  results) is advisory.
+* ``fault_quarantine`` — a persistent fault exhausts ``max_attempts``; the
+  bucket quarantines, every tenant fails typed, a ``quarantine.json``
+  manifest lands.  ``quarantined_buckets``/``quarantined_jobs``/
+  ``jobs_failed_typed`` are EXACT.
+* ``fault_degrade`` — a fused-kernel compile failure degrades the engine to
+  the per-sweep path, still bit-equal to a never-fused run.
+  ``degraded_kernels`` and ``bit_equal`` are EXACT.
+
+Rows land in ``BENCH_faults.json``; CI's chaos-smoke job re-runs this at
+the same size and gates on the committed baseline.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, write_bench_json
+from repro.api.spec import (
+    EngineSpec,
+    LadderSpec,
+    PhaseSpec,
+    RunSpec,
+    ScheduleSpec,
+    SystemSpec,
+)
+from repro.resilience import Fault, FaultPlan
+from repro.serve import JobFailedError, JobState, Scheduler
+
+GROUP = "faults"
+
+
+def make_spec(seed: int, length: int, r: int, sweeps: int) -> RunSpec:
+    half = max(2, sweeps // 2 // 2 * 2)
+    return RunSpec(
+        system=SystemSpec("ising", {"length": length}),
+        ladder=LadderSpec(kind="geometric", n_replicas=r, t_min=1.5, t_max=3.5),
+        engine=EngineSpec(swap_interval=2, chunk_intervals=2),
+        schedule=ScheduleSpec(phases=(
+            PhaseSpec("burn", half),
+            PhaseSpec("measure", half, reset_stats=True),
+        )),
+        observables=("absmag",),
+        seed=seed,
+    )
+
+
+def run_serve(specs, faults=None, ckdir=None, **kw):
+    kw.setdefault("retry_backoff_s", 0.001)
+    sched = Scheduler(checkpoint_dir=ckdir, checkpoint_every_quanta=1,
+                     faults=faults, **kw)
+    handles = [sched.submit(s, job_id=f"j{i}") for i, s in enumerate(specs)]
+    sched.run_until_idle()
+    return sched, handles
+
+
+def bit_equal(a, b) -> bool:
+    if not np.array_equal(np.asarray(a.final_energy),
+                          np.asarray(b.final_energy)):
+        return False
+    for pname, summary in b.phases.items():
+        got = a.phases.get(pname, {})
+        for k, v in summary.items():
+            if not np.array_equal(np.asarray(got.get(k)), np.asarray(v)):
+                return False
+    return True
+
+
+def scenario_recovery(specs, reference):
+    plan = FaultPlan([
+        Fault("engine.chunk.launch", at=(1, 5)),
+        Fault("checkpoint.write.torn", at=(0,)),
+    ])
+    with tempfile.TemporaryDirectory() as ckdir:
+        t0 = time.perf_counter()
+        sched, handles = run_serve(specs, faults=plan, ckdir=ckdir)
+        wall = time.perf_counter() - t0
+    totals = sched.stats()["resilience"]
+    equal = all(
+        bit_equal(h.result(timeout=0), reference[h.id]) for h in handles
+    )
+    emit(
+        "fault_recovery", wall,
+        f"faults={plan.fired()};retries={totals['retries']}"
+        f";recovery_s={totals['recovery_seconds']:.3f};bit_equal={equal}",
+        group=GROUP,
+        metrics={
+            "n_jobs": len(handles),
+            "faults_injected": plan.fired(),
+            "retries_to_success": totals["retries"],
+            "quarantined_buckets": totals["quarantined_buckets"],
+            "checkpoint_fallback_depth": totals["fallback_depth"],
+            "bit_equal": float(equal),
+            "recovery_latency_s": totals["recovery_seconds"],
+        },
+    )
+
+
+def scenario_quarantine(specs):
+    plan = FaultPlan([Fault("engine.chunk.launch", at=tuple(range(64)))])
+    with tempfile.TemporaryDirectory() as ckdir:
+        t0 = time.perf_counter()
+        sched, handles = run_serve(specs, faults=plan, ckdir=ckdir,
+                                   max_attempts=2)
+        wall = time.perf_counter() - t0
+    totals = sched.stats()["resilience"]
+    typed = 0
+    for h in handles:
+        try:
+            h.result(timeout=0)
+        except JobFailedError:
+            typed += 1
+    emit(
+        "fault_quarantine", wall,
+        f"faults={plan.fired()};quarantined={totals['quarantined_buckets']}"
+        f";jobs_failed={typed}",
+        group=GROUP,
+        metrics={
+            "n_jobs": len(handles),
+            "quarantined_buckets": totals["quarantined_buckets"],
+            "quarantined_jobs": totals["quarantined_jobs"],
+            "jobs_failed_typed": float(typed),
+        },
+    )
+
+
+def scenario_degrade(spec, reference):
+    import dataclasses
+
+    fused = dataclasses.replace(
+        spec, system=SystemSpec("ising", dict(spec.system.params,
+                                              use_fused=True)),
+    )
+    plan = FaultPlan([Fault("engine.compile", at=(0,))])
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        t0 = time.perf_counter()
+        sched, handles = run_serve([fused], faults=plan)
+        wall = time.perf_counter() - t0
+    degraded = sum(
+        1 for e in sched._engines.values() if getattr(e, "_degraded", False)
+    )
+    equal = bit_equal(handles[0].result(timeout=0), reference)
+    emit(
+        "fault_degrade", wall,
+        f"degraded={degraded};bit_equal={equal}",
+        group=GROUP,
+        metrics={
+            "degraded_kernels": float(degraded),
+            "bit_equal": float(equal),
+        },
+    )
+
+
+def run(n_jobs: int = 3, length: int = 4, r: int = 4, sweeps: int = 8,
+        out_dir=None):
+    specs = [make_spec(seed, length, r, sweeps) for seed in range(n_jobs)]
+    _, clean = run_serve(specs)
+    reference = {h.id: h.result(timeout=0) for h in clean}
+
+    scenario_recovery(specs, reference)
+    scenario_quarantine(specs)
+    scenario_degrade(specs[0], reference["j0"])
+
+    path = write_bench_json(GROUP, out_dir)
+    print(f"# wrote {path}", flush=True)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--jobs", type=int, default=3)
+    ap.add_argument("--length", type=int, default=4)
+    ap.add_argument("--replicas", type=int, default=4)
+    ap.add_argument("--sweeps", type=int, default=8)
+    ap.add_argument("--out-dir", default=None,
+                    help="where BENCH_faults.json lands (default: $BENCH_OUT_DIR or .)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(n_jobs=args.jobs, length=args.length, r=args.replicas,
+        sweeps=args.sweeps, out_dir=args.out_dir)

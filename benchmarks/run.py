@@ -18,6 +18,9 @@
   obs           obs_overhead.py     telemetry overhead: obs-on vs obs-off
                                     wall ratio (<5% contract) + per-chunk
                                     timeline event count
+  faults        fault_recovery.py   injected-fault recovery/quarantine/
+                                    degradation (deterministic counts EXACT,
+                                    recovery wall-clock advisory)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only fig7,...]
 """
@@ -32,9 +35,10 @@ def main() -> None:
     ap.add_argument("--only", default="", help="comma-separated subset")
     args = ap.parse_args()
 
-    from benchmarks import convergence, obs_overhead, ptlm_bench
-    from benchmarks import roofline_report, serve_load, shard_scaling
-    from benchmarks import speedup, swap_overhead, systems_bench, tile_sweep
+    from benchmarks import convergence, fault_recovery, obs_overhead
+    from benchmarks import ptlm_bench, roofline_report, serve_load
+    from benchmarks import shard_scaling, speedup, swap_overhead
+    from benchmarks import systems_bench, tile_sweep
 
     suites = {
         "fig3": convergence.run,
@@ -47,6 +51,7 @@ def main() -> None:
         "shard": shard_scaling.run,
         "serve": serve_load.run,
         "obs": obs_overhead.run,
+        "faults": fault_recovery.run,
     }
     only = [s for s in args.only.split(",") if s]
     print("name,us_per_call,derived")

@@ -76,7 +76,9 @@ def _cmd_run(args) -> int:
             jax_profile_dir=args.jax_profile,
         )
         callbacks.append(obs_cb)
-    session = Session(spec, callbacks=callbacks)
+    session = Session(
+        spec, callbacks=callbacks, strict_kernels=args.strict_kernels
+    )
     result = session.run()
     path = result.write_manifest(os.path.join(out, "manifest.json"))
     if obs_cb is not None:
@@ -211,6 +213,9 @@ def _cmd_serve(args) -> int:
         obs=obs,
         metrics_every=args.metrics_every,
         metrics_path=metrics_path if args.metrics_every else None,
+        max_attempts=args.max_attempts,
+        watchdog_s=args.watchdog_s,
+        queue_depth=args.queue_depth,
     )
     handles = []
     for path in args.specs:
@@ -309,6 +314,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--jax-profile", default=None, metavar="DIR",
                    help="wrap one compiled chunk in jax.profiler and write "
                         "the device profile under DIR")
+    p.add_argument("--strict-kernels", action="store_true",
+                   help="fail loudly if a fused/Pallas mega-step compile "
+                        "errors instead of degrading to the per-sweep path")
     p.add_argument("--quiet", action="store_true")
     p.set_defaults(fn=_cmd_run)
 
@@ -360,6 +368,15 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--timeline", default=None, metavar="OUT.trace.json",
                    help="record a Perfetto trace of the scheduler (quantum "
                         "lanes, job flows, engine spans)")
+    p.add_argument("--max-attempts", type=int, default=3,
+                   help="supervised retries per quantum before the bucket "
+                        "is quarantined (DESIGN.md §Resilience)")
+    p.add_argument("--watchdog-s", type=float, default=0.0,
+                   help="wall-clock budget per quantum/compile; 0 disables "
+                        "the watchdog threads")
+    p.add_argument("--queue-depth", type=int, default=0,
+                   help="bound the intake queue (QueueFull backpressure); "
+                        "0 = unbounded")
     p.add_argument("--quiet", action="store_true")
     p.set_defaults(fn=_cmd_serve)
 

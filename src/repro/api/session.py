@@ -365,6 +365,7 @@ class Session:
         self,
         spec: RunSpec,
         callbacks: Sequence[Callback] = (),
+        strict_kernels: bool = False,
     ):
         self.spec = spec
         self.callbacks = list(callbacks)
@@ -381,6 +382,9 @@ class Session:
             # Engine.adapt is toggled per phase; constructing with it also
             # validates it against the engine config (track_stats etc.).
             adapt=self._adapt,
+            # a failed fused/Pallas compile normally degrades to the
+            # per-sweep path with a warning; --strict-kernels makes it fatal
+            strict_kernels=strict_kernels,
         )
         self.state: EngineState | None = None
         self.current_phase: PhaseSpec | None = None
@@ -405,6 +409,7 @@ class Session:
         cls,
         directory: str,
         callbacks: Sequence[Callback] = (),
+        strict_kernels: bool = False,
     ) -> "Session":
         """Rebuild a Session from ``(spec.json, newest checkpoint)`` alone.
 
@@ -421,7 +426,7 @@ class Session:
         if data is None:
             raise FileNotFoundError(f"no spec.json in {directory!r}")
         spec = RunSpec.from_json(data)
-        session = cls(spec, callbacks=callbacks)
+        session = cls(spec, callbacks=callbacks, strict_kernels=strict_kernels)
         out = session.engine.restore(manager)
         if out is None:
             raise FileNotFoundError(f"no restorable checkpoint in {directory!r}")

@@ -6,8 +6,15 @@ Layout:  <dir>/step_<N>/arrays.npz + meta.json   (+ .tmp staging dirs)
 
 * **atomic**: written to `step_N.tmp/` then `os.replace`d — a crash mid-save
   never corrupts the latest checkpoint;
+* **integrity**: every staged file's sha256 + byte count lands in the step's
+  ``meta.json`` (``integrity``), verified on restore — a flipped byte or a
+  torn write that still got renamed raises the typed `CheckpointCorrupt`
+  instead of unflattening garbage;
 * **fault tolerant restore**: `restore_latest` walks checkpoints newest-first
-  and falls back past unreadable/incomplete ones;
+  and falls back past unreadable/incomplete ones (the generations skipped are
+  reported in ``last_restore_fallback``); retention GC counts only *readable*
+  steps toward ``keep``, so a zero-byte or half-written newest step can never
+  push the last intact generation out of retention;
 * **async**: `save(..., blocking=False)` hands the (host-synced) arrays to a
   writer thread so the train loop overlaps I/O with compute — the next save
   joins the previous writer first (bounded queue of 1);
@@ -30,6 +37,7 @@ a resumed engine run continues the *same* random streams mid-run.
 """
 from __future__ import annotations
 
+import hashlib
 import itertools
 import json
 import os
@@ -40,6 +48,10 @@ from typing import Any
 
 import jax
 import numpy as np
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A step's bytes do not match its recorded integrity digest."""
 
 # In-process serialization of the final tmp -> step_N swap, per directory.
 # Two managers pointed at the same directory stage into *unique* tmp dirs,
@@ -97,12 +109,19 @@ def _unflatten(tree_like, arrays: dict[str, np.ndarray]):
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3, process_index: int = 0):
+    def __init__(self, directory: str, keep: int = 3, process_index: int = 0,
+                 faults=None):
         self.dir = directory
         self.keep = keep
         self.proc = process_index
         os.makedirs(directory, exist_ok=True)
         self._writer: threading.Thread | None = None
+        # fault-injection handle (repro.resilience.FaultPlan) — None in
+        # production; every site below is a single `is None` test when off
+        self._faults = faults
+        # generations skipped by the newest-first walk of the last
+        # `restore_latest` call (0 = the newest step was intact)
+        self.last_restore_fallback = 0
 
     # -- paths ---------------------------------------------------------------
     def _step_dir(self, step: int) -> str:
@@ -122,7 +141,7 @@ class CheckpointManager:
         """
         return CheckpointManager(
             os.path.join(self.dir, name), keep=self.keep,
-            process_index=self.proc,
+            process_index=self.proc, faults=self._faults,
         )
 
     def steps(self) -> list[int]:
@@ -134,6 +153,69 @@ class CheckpointManager:
                 except ValueError:
                     pass
         return sorted(out)
+
+    # -- integrity ---------------------------------------------------------------
+    def _arrays_name(self) -> str:
+        return f"arrays_p{self.proc}.npz"
+
+    @staticmethod
+    def _sha256(path: str) -> str:
+        h = hashlib.sha256()
+        with open(path, "rb") as f:
+            for block in iter(lambda: f.read(1 << 20), b""):
+                h.update(block)
+        return h.hexdigest()
+
+    def step_readable(self, step: int) -> bool:
+        """Cheap readability check: the meta parses and every file recorded
+        in its ``integrity`` manifest exists with the recorded byte count
+        (pre-digest steps: the arrays file merely exists and is non-empty).
+        Full digests are verified on `restore`, not here — this runs inside
+        retention GC on every save."""
+        d = self._step_dir(step)
+        try:
+            with open(os.path.join(d, "meta.json")) as f:
+                meta = json.load(f)
+        except (OSError, ValueError):
+            return False
+        integrity = meta.get("integrity")
+        if integrity is None:
+            try:
+                return os.path.getsize(
+                    os.path.join(d, self._arrays_name())) > 0
+            except OSError:
+                return False
+        for fname, rec in integrity.items():
+            try:
+                if os.path.getsize(os.path.join(d, fname)) != rec["bytes"]:
+                    return False
+            except (OSError, KeyError, TypeError):
+                return False
+        return True
+
+    def readable_steps(self) -> list[int]:
+        """`steps()` filtered to the ones that pass `step_readable`."""
+        return [s for s in self.steps() if self.step_readable(s)]
+
+    def _verify(self, step: int) -> None:
+        """Full content-digest check; raises `CheckpointCorrupt`."""
+        d = self._step_dir(step)
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        for fname, rec in meta.get("integrity", {}).items():
+            path = os.path.join(d, fname)
+            size = os.path.getsize(path)
+            if size != rec["bytes"]:
+                raise CheckpointCorrupt(
+                    f"{path}: {size} bytes on disk, manifest says "
+                    f"{rec['bytes']} (torn write)"
+                )
+            digest = self._sha256(path)
+            if digest != rec["sha256"]:
+                raise CheckpointCorrupt(
+                    f"{path}: content digest {digest[:12]}… != manifest "
+                    f"{rec['sha256'][:12]}… (corrupt bytes)"
+                )
 
     # -- run description --------------------------------------------------------
     def save_spec(self, spec: Any):
@@ -172,9 +254,40 @@ class CheckpointManager:
         def write():
             tmp = self._staging_dir(step)
             os.makedirs(tmp, exist_ok=True)
-            np.savez(os.path.join(tmp, f"arrays_p{self.proc}.npz"), **arrays)
+            arrays_name = self._arrays_name()
+            arrays_path = os.path.join(tmp, arrays_name)
+            np.savez(arrays_path, **arrays)
+            # content digest of the staged bytes BEFORE any injected
+            # corruption below — that is the point: a torn/flipped file no
+            # longer matches its manifest, so restore detects it
+            meta["integrity"] = {
+                arrays_name: {
+                    "sha256": self._sha256(arrays_path),
+                    "bytes": os.path.getsize(arrays_path),
+                }
+            }
+            if self._faults is not None:
+                if self._faults.check("checkpoint.write.torn") is not None:
+                    size = os.path.getsize(arrays_path)
+                    with open(arrays_path, "r+b") as f:
+                        f.truncate(size // 2)
+                if self._faults.check("checkpoint.write.corrupt") is not None:
+                    size = os.path.getsize(arrays_path)
+                    with open(arrays_path, "r+b") as f:
+                        f.seek(size // 2)
+                        byte = f.read(1)
+                        f.seek(size // 2)
+                        f.write(bytes([byte[0] ^ 0xFF]))
             with open(os.path.join(tmp, "meta.json"), "w") as f:
                 json.dump(meta, f)
+            if self._faults is not None and self._faults.check(
+                "checkpoint.write.crash_before_rename"
+            ) is not None:
+                from repro.resilience.faults import InjectedCrash
+
+                raise InjectedCrash(
+                    f"killed before renaming {tmp} (staging dir left behind)"
+                )
             final = self._step_dir(step)
             # the write-then-rename swap: staged files are complete before
             # the step dir ever exists, and the swap itself (plus retention
@@ -185,6 +298,14 @@ class CheckpointManager:
                     shutil.rmtree(final)
                 os.replace(tmp, final)
                 self._gc()
+            if self._faults is not None and self._faults.check(
+                "checkpoint.write.crash_after_rename"
+            ) is not None:
+                from repro.resilience.faults import InjectedCrash
+
+                raise InjectedCrash(
+                    f"killed after renaming {final} (step dir is whole)"
+                )
 
         if blocking:
             write()
@@ -198,13 +319,29 @@ class CheckpointManager:
             self._writer = None
 
     def _gc(self):
+        if not self.keep:
+            return
         steps = self.steps()
-        for s in steps[: -self.keep] if self.keep else []:
-            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+        # retention counts READABLE generations only: a zero-byte or
+        # half-written step dir from a killed process must never push the
+        # last intact generation out of the keep window.  Unreadable dirs
+        # older than the protected set are garbage and are pruned with the
+        # rest (with no readable step at all, fall back to raw numbering so
+        # the directory still cannot grow without bound).
+        readable = [s for s in steps if self.step_readable(s)]
+        protect = set(readable[-self.keep:] if readable else steps[-self.keep:])
+        for s in steps:
+            if s not in protect:
+                shutil.rmtree(self._step_dir(s), ignore_errors=True)
 
     # -- restore -----------------------------------------------------------------
-    def restore(self, step: int, tree_like: Any):
+    def restore(self, step: int, tree_like: Any, verify: bool = True):
         d = self._step_dir(step)
+        if verify:
+            # digest check before touching the arrays: a flipped byte in a
+            # compressed member can otherwise unflatten into silently wrong
+            # state instead of an exception
+            self._verify(step)
         with np.load(os.path.join(d, f"arrays_p{self.proc}.npz")) as z:
             arrays = {k: z[k] for k in z.files}
         with open(os.path.join(d, "meta.json")) as f:
@@ -212,14 +349,24 @@ class CheckpointManager:
         return _unflatten(tree_like, arrays), meta
 
     def restore_latest(self, tree_like: Any):
-        """Newest-first restore with corruption fallback (fault tolerance)."""
+        """Newest-first restore with corruption fallback (fault tolerance).
+
+        Torn/truncated/corrupt generations are skipped (their count lands
+        in ``last_restore_fallback`` — the recovery-depth telemetry); with
+        no restorable step but recorded failures, raises so the caller
+        never silently restarts from scratch on a wholly corrupt directory.
+        """
         self.wait()
         errors = []
+        self.last_restore_fallback = 0
         for step in reversed(self.steps()):
             try:
-                return self.restore(step, tree_like)
+                out = self.restore(step, tree_like)
+                self.last_restore_fallback = len(errors)
+                return out
             except Exception as e:  # corrupted/incomplete -> try older
                 errors.append((step, repr(e)))
+        self.last_restore_fallback = len(errors)
         if errors:
             raise RuntimeError(f"no restorable checkpoint; tried {errors}")
         return None

@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable, Mapping, Sequence
 
 import jax
@@ -705,7 +706,7 @@ class _EngineObs:
         "obs", "timeline", "compiles", "compile_seconds", "chunks", "sweeps",
         "chunk_seconds", "device_seconds", "host_seconds", "sweeps_per_sec",
         "swap_acc", "flow_up", "adapt_rounds", "checkpoints", "hbm_bytes",
-        "_last_counters",
+        "degraded_kernel", "_last_counters",
     )
 
     def __init__(self, obs, system, config):
@@ -735,6 +736,9 @@ class _EngineObs:
             "engine_adapt_rounds_total", "ladder retunes performed")
         self.checkpoints = m.counter(
             "engine_checkpoints_total", "engine-loop checkpoint saves")
+        self.degraded_kernel = m.counter(
+            "pt_degraded_kernel",
+            "fused/Pallas compile failures degraded to the per-sweep path")
         # live per-rung diagnostics from the O(R) pooled counters the adapt
         # feedback already reads — label children resolved once, not per chunk
         acc = m.gauge("pt_swap_acceptance",
@@ -823,6 +827,9 @@ class Engine:
         observables: Mapping[str, Callable] | None = None,
         adapt: AdaptConfig | None = None,
         obs=None,
+        faults=None,
+        strict_kernels: bool = False,
+        on_degrade: Callable[[], Any] | None = None,
     ):
         if adapt is not None and not config.track_stats:
             raise ValueError(
@@ -871,6 +878,16 @@ class Engine:
         self._eobs: _EngineObs | None = None
         if obs is not None:
             self.obs = obs
+        # fault-injection handle (repro.resilience.FaultPlan) — same
+        # zero-cost-off contract as obs: None in production, one `is None`
+        # test per host-loop site, never traced into the mega-step
+        self._faults = faults
+        # kernel degradation policy: a failed fused/Pallas compile falls
+        # back to the per-sweep path unless strict_kernels demands the
+        # compile error propagate (repro run --strict-kernels)
+        self.strict_kernels = strict_kernels
+        self._on_degrade = on_degrade
+        self._degraded = False
 
     @property
     def obs(self):
@@ -1086,10 +1103,19 @@ class Engine:
                 lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=getattr(x, "sharding", None)), tree
             )
             donate = (0, 1) if self.config.donate else ()
+            # mega construction stays OUTSIDE the try: unsupported-spec
+            # errors (e.g. the fused-round preconditions in _round_interval)
+            # are configuration mistakes and must stay loud, never silently
+            # degraded
             jitted = jax.jit(self._make_mega(chunk_len, state), donate_argnums=donate)
-            exe = jitted.lower(
-                sds(state.pt), sds(state.stats), sds(state.betas)
-            ).compile()
+            try:
+                if self._faults is not None:
+                    self._faults.fire("engine.compile")
+                exe = jitted.lower(
+                    sds(state.pt), sds(state.stats), sds(state.betas)
+                ).compile()
+            except Exception as err:
+                return self._degrade(err, state, chunk_len)
             self._executables[chunk_len] = exe
             self.n_compiles += 1
             if eo is not None:
@@ -1103,6 +1129,45 @@ class Engine:
                           "n_chains": self.config.n_chains},
                 )
         return exe
+
+    def _degrade(self, err: Exception, state: EngineState, chunk_len: int):
+        """Graceful kernel degradation: recompile on the per-sweep path.
+
+        A fused-round / interval-fused / Pallas compile failure (a backend
+        without Mosaic support, a VMEM overflow at an untested shape, an
+        injected ``engine.compile`` fault) falls back to the plain per-sweep
+        XLA path — statistically identical results (the fused counter-PRNG
+        stream was never bit-equal to per-sweep anyway; the degraded run IS
+        bit-equal to a never-fused run of the same spec).  ``strict_kernels``
+        turns the fallback into a loud error; systems with no kernel flags
+        set have nothing to fall back to, so their compile errors always
+        propagate (the serve Supervisor treats those as transient).
+        """
+        flags = [
+            f for f in ("use_fused_round", "use_fused", "use_pallas",
+                        "pack_bits")
+            if getattr(self.system, f, False)
+        ]
+        if self.strict_kernels or not flags or self._degraded:
+            raise err
+        self._degraded = True
+        warnings.warn(
+            f"mega-step compile failed with {', '.join(flags)} enabled "
+            f"({err!r}); degrading to the per-sweep path (statistically "
+            "identical, not bit-equal to the fused stream).  Pass "
+            "strict_kernels to make this fatal.",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+        self.system = dataclasses.replace(
+            self.system, **{f: False for f in flags}
+        )
+        self._executables.clear()
+        if self._eobs is not None:
+            self._eobs.degraded_kernel.inc()
+        if self._on_degrade is not None:
+            self._on_degrade()
+        return self._compiled(state, chunk_len)
 
     # -- the host loop ---------------------------------------------------------
     def run(
@@ -1180,6 +1245,11 @@ class Engine:
         eo = self._eobs
         while done < n_intervals:
             this = min(self.config.chunk_intervals, n_intervals - done)
+            if self._faults is not None:
+                f = self._faults.check("engine.chunk.stall")
+                if f is not None:
+                    time.sleep(f.duration)
+                self._faults.fire("engine.chunk.launch")
             if eo is not None:
                 # instrumented launch: same executable, plus wall/device
                 # timing and the one-shot jax.profiler window if armed.  The
@@ -1200,6 +1270,23 @@ class Engine:
                     state.pt, state.stats, state.betas
                 )
             state = EngineState(pt=pt_st, stats=stats, betas=state.betas)
+            if self._faults is not None:
+                f = self._faults.check("engine.energy.nonfinite")
+                if f is not None:
+                    # a failing device lane: poison one chain's energies on
+                    # host (chains are independent — NaN never crosses the
+                    # ensemble axis, so only the owning tenant is affected)
+                    e = np.asarray(state.pt.energy).copy()
+                    if e.ndim == 2:
+                        e[f.chain % e.shape[0]] = np.nan
+                    else:
+                        e[:] = np.nan
+                    state = self.place(dataclasses.replace(
+                        state,
+                        pt=dataclasses.replace(
+                            state.pt, energy=jnp.asarray(e, state.pt.energy.dtype)
+                        ),
+                    ))
             done += this
             chunk_idx += 1
             if eo is not None:

@@ -1,0 +1,59 @@
+"""Fault injection, supervised recovery, and graceful degradation.
+
+Three pieces (DESIGN.md §Resilience):
+
+* `repro.resilience.faults` — the deterministic fault-injection harness: a
+  seeded `FaultPlan` arming named sites threaded through the engine host
+  loop, the checkpoint writer, and the serve scheduler.  Disarmed
+  (``faults=None``, the production default) every site is a single
+  ``is None`` test — the same zero-cost-off structural contract the obs
+  layer pins, including byte-identical mega-step jaxprs.
+* `repro.resilience.supervisor` — `Supervisor`: typed retry with
+  exponential backoff + deterministic jitter, wall-clock watchdogs on
+  compile and quantum steps, bit-equal bucket recovery from the last
+  intact checkpoint, and max-attempts quarantine with a failure manifest.
+* graceful degradation lives at its call sites: fused/Pallas compile
+  failures fall back to the per-sweep path (`repro.engine.driver`, off
+  with ``strict_kernels``), corrupt checkpoint generations fall back to
+  the newest intact one (`repro.checkpoint.manager`, content digests in
+  the step manifest), and the serve intake queue rejects past a bounded
+  depth (`repro.serve.job.QueueFull`).
+
+The global invariant, CI-gated by the chaos suite
+(``tests/test_resilience.py``): under any injected fault schedule, every
+job either completes **bit-equal** to its fault-free run or fails cleanly
+with a **typed** error — and on-disk checkpoints stay loadable throughout.
+"""
+from repro.resilience.faults import (
+    RECOVERABLE_SITES,
+    SITES,
+    Fault,
+    FaultError,
+    FaultPlan,
+    InjectedCrash,
+    InjectedFault,
+)
+from repro.resilience.supervisor import (
+    BucketQuarantined,
+    CompileTimeout,
+    QuantumOutcome,
+    RetryPolicy,
+    Supervisor,
+    WatchdogTimeout,
+)
+
+__all__ = [
+    "BucketQuarantined",
+    "CompileTimeout",
+    "Fault",
+    "FaultError",
+    "FaultPlan",
+    "InjectedCrash",
+    "InjectedFault",
+    "QuantumOutcome",
+    "RECOVERABLE_SITES",
+    "RetryPolicy",
+    "SITES",
+    "Supervisor",
+    "WatchdogTimeout",
+]

@@ -27,6 +27,7 @@ its spec alone — packing changes throughput, never results.
 
 CLI front door: ``python -m repro serve --spec spec.json --jobs 8``.
 """
+from repro.resilience.supervisor import BucketQuarantined
 from repro.serve.bucket import PackedRun, check_servable, shape_signature
 from repro.serve.job import (
     Job,
@@ -35,10 +36,13 @@ from repro.serve.job import (
     JobResult,
     JobState,
     JobUpdate,
+    QueueFull,
+    SchedulerStopped,
 )
 from repro.serve.scheduler import Scheduler
 
 __all__ = [
+    "BucketQuarantined",
     "Job",
     "JobFailedError",
     "JobQueue",
@@ -46,7 +50,9 @@ __all__ = [
     "JobState",
     "JobUpdate",
     "PackedRun",
+    "QueueFull",
     "Scheduler",
+    "SchedulerStopped",
     "check_servable",
     "shape_signature",
 ]

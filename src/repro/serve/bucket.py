@@ -94,7 +94,7 @@ class PackedRun:
     """
 
     def __init__(self, digest: str, template, jobs: Sequence[Job],
-                 engine, manager=None):
+                 engine, manager=None, faults=None, name: str | None = None):
         if not jobs:
             raise ValueError("a bucket needs at least one job")
         self.digest = digest
@@ -102,6 +102,17 @@ class PackedRun:
         self.jobs = list(jobs)
         self.engine = engine
         self.manager = manager  # per-bucket CheckpointManager (or None)
+        # fault-injection handle (repro.resilience.FaultPlan; None = off)
+        self.faults = faults
+        # stable identity across recovery generations (the Supervisor's
+        # retry bookkeeping and the quarantine manifest key on this)
+        self.name = name if name is not None else digest
+        # set by Supervisor watchdog expiry: the host loop observes this at
+        # the next chunk boundary and stops without notifying any tenant
+        self._abandoned = False
+        # restore_latest fallback depth of the generation this bucket was
+        # recovered/restored from (recovery telemetry)
+        self.restore_fallback_depth = 0
         self.temps = template.ladder.build()
         self._slices: list[tuple[int, int]] = []
         off = 0
@@ -163,19 +174,26 @@ class PackedRun:
 
     @classmethod
     def restore(cls, digest: str, template, jobs: Sequence[Job],
-                engine, manager) -> "PackedRun":
+                engine, manager, faults=None,
+                name: str | None = None) -> "PackedRun":
         """Rebuild a bucket from its checkpoint directory.
 
-        Restores the newest packed `EngineState` (bit-equal resume — PR 3's
-        checkpoint contract) and relocates the schedule cursor from the
-        state's own sweep counter.  With no restorable step the bucket simply
-        starts fresh on its next quantum.
+        Restores the newest *intact* packed `EngineState` (bit-equal resume
+        — PR 3's checkpoint contract; corrupt generations are skipped by
+        `CheckpointManager.restore_latest` and their count recorded in
+        ``restore_fallback_depth``) and relocates the schedule cursor from
+        the state's own sweep counter.  With no restorable step the bucket
+        simply starts fresh on its next quantum.
         """
-        run = cls(digest, template, jobs, engine, manager=manager)
+        run = cls(digest, template, jobs, engine, manager=manager,
+                  faults=faults, name=name)
         out = engine.restore(manager)
         if out is not None:
             state, meta = out
             run.state = state
+            run.restore_fallback_depth = getattr(
+                manager, "last_restore_fallback", 0
+            )
             if "temps" in meta:
                 # authoritative f64 ladder (f32 betas aren't exactly invertible)
                 engine._temps = np.asarray(meta["temps"], np.float64)
@@ -184,6 +202,75 @@ class PackedRun:
                 # schedule already complete at checkpoint time: deliver now
                 run._finalize()
         return run
+
+    # -- supervised recovery ----------------------------------------------------
+    def abandon(self) -> None:
+        """Cooperative cancellation (Supervisor watchdog expiry): the host
+        loop stops at the next chunk boundary, silently — no tenant update,
+        stream callback, or result is delivered by an abandoned attempt."""
+        self._abandoned = True
+
+    def ensure_compiled(self) -> None:
+        """Warm exactly the executable the next quantum would compile first
+        (so a Supervisor compile-watchdog can budget it separately).  The
+        chunk length is derived the same way `Engine.run` derives it — a
+        different length would compile an executable the run never uses and
+        break the one-compile-per-shape contract."""
+        if self.finished:
+            return
+        if self.state is None:
+            self.init()
+        phase, _, end = self._locate(self.sweeps_done)
+        spi = self.engine.config.spec.sweeps_per_interval
+        n_intervals = (end - self.sweeps_done) // spi
+        this = min(self.engine.config.chunk_intervals, n_intervals)
+        if this > 0:
+            self.engine._compiled(self.state, this)
+
+    def recover(self) -> "PackedRun":
+        """A fresh generation of this bucket, replayed from the last intact
+        checkpoint (or from scratch with no manager / no intact step).
+
+        Bit-equality: preemption and chunk boundaries are invisible to the
+        PRNG stream, so the replayed trajectory is identical to the
+        fault-free one; summaries of phases that *ended* at or before the
+        restore point were computed from the same (uncorrupted) trajectory
+        pre-fault and are carried over, so the recovered bucket's final
+        `JobResult`s carry every phase — bit-equal to a never-faulted run.
+        """
+        fresh: "PackedRun"
+        try:
+            fresh = PackedRun.restore(
+                self.digest, self.template, self.jobs, self.engine,
+                self.manager, faults=self.faults, name=self.name,
+            ) if self.manager is not None else PackedRun(
+                self.digest, self.template, self.jobs, self.engine,
+                manager=self.manager, faults=self.faults, name=self.name,
+            )
+        except Exception:
+            # a wholly corrupt checkpoint dir: last resort is a clean replay
+            # from sweep 0 (still bit-equal — the stream is deterministic)
+            fresh = PackedRun(
+                self.digest, self.template, self.jobs, self.engine,
+                manager=self.manager, faults=self.faults, name=self.name,
+            )
+            fresh.restore_fallback_depth = len(
+                self.manager.steps()) if self.manager is not None else 0
+        fresh._failed = set(self._failed)
+        for jid, phases in self._phase_summaries.items():
+            for pname, summary in phases.items():
+                if self._phase_end(pname) <= fresh.sweeps_done:
+                    fresh._phase_summaries.setdefault(jid, {})[pname] = summary
+        return fresh
+
+    def _phase_end(self, name: str) -> int:
+        start = 0
+        for phase in self.template.schedule.phases:
+            end = start + phase.n_sweeps
+            if phase.name == name:
+                return end
+            start = end
+        raise ValueError(f"unknown phase {name!r}")
 
     def checkpoint(self) -> None:
         if self.manager is None or self.state is None:
@@ -224,11 +311,16 @@ class PackedRun:
         spent = [0]
 
         def hook(info):
+            if self._abandoned:
+                # watchdog expiry: stop at this chunk boundary with no
+                # tenant-visible side effects — the recovered generation
+                # replays these sweeps bit-equal
+                return True
             self._stream(info)
             spent[0] += 1
             return spent[0] >= max_chunks
 
-        while self.sweeps_done < self.total_sweeps:
+        while not self._abandoned and self.sweeps_done < self.total_sweeps:
             phase, start, end = self._locate(self.sweeps_done)
             self._current_phase = phase
             if phase.reset_stats and self.sweeps_done == start:
@@ -245,11 +337,13 @@ class PackedRun:
                 keep_trace=False,
             )
             self.sweeps_done += result.n_sweeps
-            if self.sweeps_done == end:
+            if self.sweeps_done == end and not self._abandoned:
                 self._record_phase(phase)
             if spent[0] >= max_chunks and self.sweeps_done < self.total_sweeps:
                 break
         self._current_phase = None
+        if self._abandoned:
+            return False
         if self.sweeps_done >= self.total_sweeps and not self.finished:
             self._finalize()
         return self.finished
@@ -294,6 +388,10 @@ class PackedRun:
             if job.id in self._failed:
                 continue
             try:
+                if self.faults is not None:
+                    # models a tenant callback raising (the failure is
+                    # isolated to that job, like any callback exception)
+                    self.faults.fire("serve.callback")
                 e = self._job_energy(energy, rung, i)
                 if not np.all(np.isfinite(e)):
                     raise FloatingPointError(

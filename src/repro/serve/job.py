@@ -37,6 +37,8 @@ __all__ = [
     "JobUpdate",
     "JobResult",
     "JobFailedError",
+    "QueueFull",
+    "SchedulerStopped",
     "Job",
     "JobQueue",
 ]
@@ -52,6 +54,17 @@ class JobState(enum.Enum):
 
 class JobFailedError(RuntimeError):
     """Raised by `Job.result` when the job ended FAILED."""
+
+
+class SchedulerStopped(RuntimeError):
+    """The scheduler shut down before this PENDING job was ever sealed into
+    a bucket — `Scheduler.shutdown` drains such jobs into FAILED with this
+    error instead of leaving their `Job.result` callers blocked forever."""
+
+
+class QueueFull(RuntimeError):
+    """`Scheduler.submit` backpressure: the intake queue is at its bounded
+    depth (``queue_depth``) and the caller asked not to block."""
 
 
 @dataclasses.dataclass
@@ -187,14 +200,37 @@ class Job:
 
 
 class JobQueue:
-    """Thread-safe FIFO intake between `submit()` callers and the host loop."""
+    """Thread-safe FIFO intake between `submit()` callers and the host loop.
 
-    def __init__(self):
+    ``maxsize`` bounds the depth (0 = unbounded): at capacity, `put` either
+    raises `QueueFull` immediately or — with ``block=True`` — waits for the
+    host loop to drain space, raising `QueueFull` only on timeout.  The
+    bound is backpressure against a producer outrunning the service, not a
+    fairness mechanism (buckets already round-robin).
+    """
+
+    def __init__(self, maxsize: int = 0):
+        self.maxsize = maxsize
         self._items: deque[Job] = deque()
         self._cond = threading.Condition()
 
-    def put(self, job: Job) -> None:
+    def put(self, job: Job, block: bool = False,
+            timeout: float | None = None) -> None:
         with self._cond:
+            if self.maxsize:
+                if not block and len(self._items) >= self.maxsize:
+                    raise QueueFull(
+                        f"intake queue at bounded depth {self.maxsize}"
+                    )
+                if block:
+                    ok = self._cond.wait_for(
+                        lambda: len(self._items) < self.maxsize, timeout
+                    )
+                    if not ok:
+                        raise QueueFull(
+                            f"intake queue still at depth {self.maxsize} "
+                            f"after {timeout}s"
+                        )
             self._items.append(job)
             self._cond.notify_all()
 
@@ -208,6 +244,8 @@ class JobQueue:
         with self._cond:
             items = list(self._items)
             self._items.clear()
+            # free capacity: wake any producer blocked in put(block=True)
+            self._cond.notify_all()
         return items
 
     def peek(self) -> list[Job]:

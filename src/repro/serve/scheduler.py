@@ -22,6 +22,17 @@ Preemption rides the PR 3 checkpoint machinery: each bucket owns a
 ``serve.json`` composition manifest plus ordinary engine step dirs, and
 `Scheduler.from_checkpoint` rebuilds every unfinished bucket bit-equal after
 a process restart.
+
+Every quantum runs under a `repro.resilience.Supervisor` (DESIGN.md
+§Resilience): a transient failure — a launch raise, a torn checkpoint, a
+compile error, a watchdog-caught stall — recovers the bucket from its last
+intact checkpoint and retries with backoff; ``max_attempts`` consecutive
+failures quarantine the bucket (its jobs FAIL with `BucketQuarantined`, a
+``quarantine.json`` manifest lands next to its checkpoints) while every
+other bucket keeps serving.  ``queue_depth`` bounds the intake queue
+(`QueueFull` backpressure) and `shutdown` drains still-PENDING jobs into
+FAILED with `SchedulerStopped` instead of leaving `Job.result` callers
+blocked forever.
 """
 from __future__ import annotations
 
@@ -31,19 +42,28 @@ import json
 import os
 import threading
 import time
+import warnings
 from collections import deque
 from typing import Any, Callable
 
 from repro.api.spec import RunSpec
 from repro.checkpoint.manager import CheckpointManager
 from repro.engine import Engine
+from repro.resilience import RetryPolicy, Supervisor
 from repro.serve.bucket import (
     MANIFEST_NAME,
     PackedRun,
     check_servable,
     shape_signature,
 )
-from repro.serve.job import Job, JobQueue, JobResult, JobState, JobUpdate
+from repro.serve.job import (
+    Job,
+    JobQueue,
+    JobResult,
+    JobState,
+    JobUpdate,
+    SchedulerStopped,
+)
 
 __all__ = ["Scheduler"]
 
@@ -81,6 +101,18 @@ class Scheduler:
       metrics_every: write the Prometheus exposition every N quanta (0 = on
         demand only) to ``metrics_path``.
       metrics_path: destination for the periodic exposition.
+      max_attempts: supervised retry budget per quantum — a bucket failing
+        this many consecutive attempts is quarantined (``repro serve
+        --max-attempts``).
+      retry_backoff_s: base of the exponential retry backoff.
+      watchdog_s: wall-clock budget per quantum and per first compile (0 =
+        no watchdog threads; ``repro serve --watchdog-s``).
+      queue_depth: bound on the intake queue (0 = unbounded; ``repro serve
+        --queue-depth``) — at capacity `submit` raises `QueueFull` (or
+        blocks, with ``submit(..., block=True)``).
+      faults: an optional `repro.resilience.FaultPlan` threaded through
+        every engine, checkpoint manager and bucket this scheduler builds
+        (chaos testing; None in production — zero-cost-off).
 
     Use either synchronously (``submit(...)`` then ``run_until_idle()``) or
     as a service (``start()`` spawns the host loop thread; ``submit`` is
@@ -97,17 +129,32 @@ class Scheduler:
         obs=None,
         metrics_every: int = 0,
         metrics_path: str | None = None,
+        max_attempts: int = 3,
+        retry_backoff_s: float = 0.05,
+        watchdog_s: float = 0.0,
+        queue_depth: int = 0,
+        faults=None,
     ):
         if quantum_chunks < 1:
             raise ValueError("quantum_chunks must be >= 1")
-        self.queue = JobQueue()
+        self.queue = JobQueue(maxsize=queue_depth)
         self.quantum_chunks = quantum_chunks
         self.pack_window = pack_window
         self.checkpoint_every_quanta = checkpoint_every_quanta
         self.keep = keep
+        self._faults = faults
+        self._supervisor = Supervisor(
+            policy=RetryPolicy(
+                max_attempts=max_attempts, base_delay_s=retry_backoff_s
+            ),
+            watchdog_s=watchdog_s,
+            compile_watchdog_s=watchdog_s,
+        )
         self._root = None
         if checkpoint_dir is not None:
-            self._root = CheckpointManager(str(checkpoint_dir), keep=keep)
+            self._root = CheckpointManager(
+                str(checkpoint_dir), keep=keep, faults=faults
+            )
         self._staged: dict[str, _Staged] = {}
         self._buckets: deque[PackedRun] = deque()
         # (signature, packed width) -> Engine: the compile-amortization cache
@@ -157,6 +204,19 @@ class Scheduler:
             "jobs amortized per mega-step compile")
         self._m_job_sweeps = m.gauge(
             "serve_job_sweeps", "per-tenant sweeps completed", labels=("job",))
+        # -- resilience counters (DESIGN.md §Resilience) ------------------------
+        self._m_faults = m.counter(
+            "pt_fault_injected", "injected faults fired, by site",
+            labels=("site",))
+        self._m_retries = m.counter(
+            "pt_retries", "supervised quantum retries (bucket recoveries)")
+        self._m_quarantined = m.counter(
+            "pt_quarantined", "buckets quarantined after exhausting retries")
+        self._m_degraded = m.counter(
+            "pt_degraded_kernel",
+            "fused/Pallas compile failures degraded to the per-sweep path")
+        if faults is not None and faults.on_fire is None:
+            faults.on_fire = lambda f: self._m_faults.labels(f.site).inc()
 
     # -- client API --------------------------------------------------------------
     def submit(
@@ -164,16 +224,25 @@ class Scheduler:
         spec: RunSpec,
         on_update: Callable[[Job, JobUpdate], Any] | None = None,
         job_id: str | None = None,
+        block: bool = False,
+        timeout: float | None = None,
     ) -> Job:
-        """Enqueue one tenant run; returns immediately with its handle."""
+        """Enqueue one tenant run; returns immediately with its handle.
+
+        With a bounded ``queue_depth``, a full queue raises `QueueFull` —
+        or, with ``block=True``, waits up to ``timeout`` seconds for the
+        host loop to drain space.  A rejected submission registers nothing.
+        """
         if job_id is None:
             job_id = f"job-{next(self._job_seq):04d}"
         if job_id in self.jobs:
             raise ValueError(f"duplicate job id {job_id!r}")
         job = Job(job_id, spec, on_update=on_update)
         job.submitted_at = time.monotonic()
+        # enqueue BEFORE registering: a QueueFull rejection must leave no
+        # half-registered handle behind
+        self.queue.put(job, block=block, timeout=timeout)
         self.jobs[job_id] = job
-        self.queue.put(job)
         self._m_queue_depth.set(len(self.queue))
         self._timeline.flow_start("job:" + job_id, job_id, track="intake",
                                   seed=job.seed)
@@ -240,6 +309,13 @@ class Scheduler:
                 # engine spans (compile, chunk, device_wait) land on the
                 # same trace as the quantum lanes
                 obs=self._obs,
+                faults=self._faults,
+                # obs-on engines count degradations themselves (into the
+                # same registry); the hook covers the obs-off path only —
+                # both would double-count
+                on_degrade=(
+                    self._m_degraded.inc if self._obs is None else None
+                ),
             )
             self._engines[key] = engine
         return engine
@@ -254,6 +330,7 @@ class Scheduler:
         bucket = PackedRun(
             digest, staged.template, staged.jobs, engine,
             manager=self._bucket_manager(name),
+            faults=self._faults, name=name,
         )
         bucket.write_manifest()
         now = time.monotonic()
@@ -267,6 +344,20 @@ class Scheduler:
         self._timeline.instant("seal", cat="serve", track=lane,
                                bucket=name, jobs=len(staged.jobs))
         return bucket
+
+    def _checkpoint_bucket(self, bucket) -> None:
+        """Best-effort bucket checkpoint: a failed save (e.g. an injected
+        crash at a write seam) is non-fatal — the state is still live in
+        memory, the on-disk generations stay intact (atomic rename), and
+        the next cadence simply retries."""
+        try:
+            bucket.checkpoint()
+        except Exception as err:
+            warnings.warn(
+                f"checkpoint save for bucket {bucket.name} failed "
+                f"({err!r}); continuing from the in-memory state",
+                RuntimeWarning,
+            )
 
     # -- the host loop -----------------------------------------------------------
     def step(self) -> bool:
@@ -283,14 +374,32 @@ class Scheduler:
         self.quantum_log.append(bucket.digest)
         lane = f"bucket:{bucket.digest[:8]}"
         t0 = time.perf_counter()
-        finished = bucket.run_quantum(self.quantum_chunks)
+        out = self._supervisor.run(bucket, self.quantum_chunks)
+        if out.bucket is not bucket:
+            # a recovered generation replaced the instance we passed in —
+            # move the quantum bookkeeping over with it
+            self._quanta_run[id(out.bucket)] = self._quanta_run.pop(
+                id(bucket), 0
+            )
+            bucket = out.bucket
+        finished = out.finished
         dt = time.perf_counter() - t0
         self._m_quantum.observe(dt)
         self._m_quanta.inc()
         self._timeline.complete(
             "quantum", t0, dt, cat="serve", track=lane,
-            args={"jobs": len(bucket.jobs), "finished": finished},
+            args={"jobs": len(bucket.jobs), "finished": finished,
+                  "retries": out.retries, "quarantined": out.quarantined},
         )
+        if out.retries:
+            self._m_retries.inc(out.retries)
+        for rec in out.recoveries:
+            self._timeline.complete(
+                "recovery", rec["t0"], rec["seconds"], cat="serve",
+                track=lane,
+                args={"error": rec["error"], "sweep": rec["sweep"],
+                      "fallback_depth": rec["fallback_depth"]},
+            )
         n = self._quanta_run.get(id(bucket), 0) + 1
         self._quanta_run[id(bucket)] = n
         for job in bucket.jobs:
@@ -298,9 +407,18 @@ class Scheduler:
                 self._m_job_sweeps.labels(job.id).set(
                     job.last_update.sweeps_done
                 )
-        if finished:
+        if out.quarantined:
+            self._m_quarantined.inc()
             self._quanta_run.pop(id(bucket), None)
-            bucket.checkpoint()  # final state: restart delivers instantly
+            # no final checkpoint: the on-disk generations stay the last
+            # *intact* pre-fault states (quarantine.json records the rest)
+            for job in bucket.jobs:
+                self._timeline.flow_end("job:" + job.id, job.id, track=lane,
+                                        state=job.state.value)
+        elif finished:
+            self._quanta_run.pop(id(bucket), None)
+            # final state: restart delivers instantly
+            self._checkpoint_bucket(bucket)
             for job in bucket.jobs:
                 self._timeline.flow_end("job:" + job.id, job.id, track=lane,
                                         state=job.state.value)
@@ -308,7 +426,7 @@ class Scheduler:
             if self.checkpoint_every_quanta and (
                 n % self.checkpoint_every_quanta == 0
             ):
-                bucket.checkpoint()
+                self._checkpoint_bucket(bucket)
             for job in bucket.live_jobs():
                 job.state = JobState.PREEMPTED
             self._buckets.append(bucket)
@@ -366,17 +484,38 @@ class Scheduler:
         The drain blocks on the loop's idle notification (condition
         variable), not a sleep poll; the timeout is only a safety net
         against a notify landing between our predicate check and the wait.
+
+        With ``wait=False`` (or work submitted after the drain), jobs still
+        PENDING — queued or staged but never sealed — FAIL with a typed
+        `SchedulerStopped` instead of leaving their `Job.result` callers
+        blocked forever.
         """
-        if self._thread is None:
-            return
-        if wait:
-            with self._idle_cond:
-                while not self.idle():
-                    self._idle_cond.wait(timeout=0.5)
-        self._stop.set()
-        self.queue.poke()  # wake the loop out of its queue wait promptly
-        self._thread.join()
-        self._thread = None
+        if self._thread is not None:
+            if wait:
+                with self._idle_cond:
+                    while not self.idle():
+                        self._idle_cond.wait(timeout=0.5)
+            self._stop.set()
+            self.queue.poke()  # wake the loop out of its queue wait promptly
+            self._thread.join()
+            self._thread = None
+        self._drain_pending()
+
+    def _drain_pending(self) -> None:
+        """FAIL every never-sealed PENDING job (queued or staged)."""
+        stopped = [job for job in self.queue.drain()]
+        for staged in self._staged.values():
+            stopped.extend(staged.jobs)
+        self._staged.clear()
+        self._m_queue_depth.set(0)
+        for job in stopped:
+            if job.done():
+                continue
+            job._fail(SchedulerStopped(
+                f"scheduler shut down before job {job.id} was scheduled"
+            ))
+            self._timeline.flow_end("job:" + job.id, job.id, track="intake",
+                                    state="failed")
 
     # -- introspection -----------------------------------------------------------
     def metrics(self) -> dict:
@@ -407,6 +546,10 @@ class Scheduler:
                 s.value: sum(1 for j in self.jobs.values() if j.state is s)
                 for s in JobState
             },
+            "resilience": dict(self._supervisor.totals),
+            "faults_fired": (
+                0 if self._faults is None else self._faults.fired()
+            ),
         }
 
     # -- restart -----------------------------------------------------------------
@@ -430,12 +573,23 @@ class Scheduler:
             manifest_path = os.path.join(root, name, MANIFEST_NAME)
             if not os.path.isfile(manifest_path):
                 continue
-            with open(manifest_path) as f:
-                manifest = json.load(f)
-            digest = manifest["signature"]
-            template = RunSpec.from_dict(manifest["template"])
+            try:
+                with open(manifest_path) as f:
+                    manifest = json.load(f)
+                digest = manifest["signature"]
+                template = RunSpec.from_dict(manifest["template"])
+                entries = manifest["jobs"]
+            except Exception as err:
+                # one poisoned bucket dir must not take down the whole
+                # restart — every other bucket still resumes bit-equal
+                warnings.warn(
+                    f"skipping unreadable bucket manifest {manifest_path}: "
+                    f"{err!r}",
+                    RuntimeWarning,
+                )
+                continue
             jobs = []
-            for entry in manifest["jobs"]:
+            for entry in entries:
                 job = Job(entry["id"], RunSpec.from_dict(entry["spec"]))
                 job.state = JobState.PREEMPTED
                 sched.jobs[job.id] = job
@@ -445,6 +599,7 @@ class Scheduler:
                 digest, template, jobs,
                 sched._engine_for(digest, template, width),
                 sched._root.child(name),
+                faults=sched._faults, name=name,
             )
             # keep the bucket-name sequence ahead of restored dirs
             try:

@@ -105,3 +105,104 @@ def test_save_spec_concurrent_writers_leave_valid_json(tmp_path):
         t.join()
     loaded = mgr.load_spec()  # atomic replace: always one whole payload
     assert loaded["writer"] in (0, 1) and len(loaded["pad"]) == 4096
+
+
+# -- integrity + fault injection (§Resilience) ---------------------------------
+
+
+def test_torn_write_detected_and_fallback_one_generation(tmp_path):
+    from repro.resilience import Fault, FaultPlan
+
+    # keep=0 disables GC so the torn generation stays on disk and the
+    # fallback has to happen at restore time
+    plan = FaultPlan([Fault("checkpoint.write.torn", at=(2,))])
+    mgr = CheckpointManager(str(tmp_path), keep=0, faults=plan)
+    for s in (1, 2, 3):
+        mgr.save(s, tree(float(s)))
+    assert plan.fired() == 1
+    assert mgr.steps() == [1, 2, 3]
+    assert mgr.readable_steps() == [1, 2]
+    restored, _ = mgr.restore_latest(tree(0.0))
+    assert np.all(restored["x"] == 2.0)
+    assert mgr.last_restore_fallback == 1
+
+
+def test_corrupt_write_fails_sha256_and_falls_back(tmp_path):
+    from repro.checkpoint.manager import CheckpointCorrupt
+    from repro.resilience import Fault, FaultPlan
+
+    plan = FaultPlan([Fault("checkpoint.write.corrupt", at=(1,))])
+    mgr = CheckpointManager(str(tmp_path), keep=5, faults=plan)
+    mgr.save(1, tree(1.0))
+    mgr.save(2, tree(2.0))
+    # size matches, so only the digest catches the flipped byte
+    assert mgr.step_readable(2)
+    with pytest.raises(CheckpointCorrupt):
+        mgr.restore(2, tree(0.0))
+    restored, _ = mgr.restore_latest(tree(0.0))
+    assert np.all(restored["x"] == 1.0)
+    assert mgr.last_restore_fallback == 1
+
+
+def test_kill_during_write_both_sides_of_rename(tmp_path):
+    from repro.resilience import Fault, FaultPlan, InjectedCrash
+
+    # occurrence counters advance only when a site is reached: the save
+    # killed *before* its rename never reaches the after-rename site, so
+    # both faults arm at their own site's occurrence 1.
+    plan = FaultPlan([
+        Fault("checkpoint.write.crash_before_rename", at=(1,)),
+        Fault("checkpoint.write.crash_after_rename", at=(1,)),
+    ])
+    mgr = CheckpointManager(str(tmp_path), keep=5, faults=plan)
+    mgr.save(1, tree(1.0))
+    with pytest.raises(InjectedCrash, match="before renaming"):
+        mgr.save(2, tree(2.0))
+    # the step dir never appeared; only its staging leftover did
+    assert mgr.steps() == [1]
+    assert [n for n in os.listdir(mgr.dir) if n.endswith(".tmp")]
+    with pytest.raises(InjectedCrash, match="after renaming"):
+        mgr.save(3, tree(3.0))
+    # crashed after the swap: the generation landed whole and restorable
+    assert mgr.steps() == [1, 3]
+    restored, _ = mgr.restore_latest(tree(0.0))
+    assert np.all(restored["x"] == 3.0)
+    assert mgr.last_restore_fallback == 0
+
+
+def test_gc_never_prunes_last_intact_generation(tmp_path):
+    from repro.resilience import Fault, FaultPlan
+
+    # every save after the first is torn; keep=2 must still protect the
+    # intact generation instead of counting the readable-in-name-only ones
+    plan = FaultPlan([Fault("checkpoint.write.torn", at=tuple(range(1, 16)))])
+    mgr = CheckpointManager(str(tmp_path), keep=2, faults=plan)
+    for s in range(1, 7):
+        mgr.save(s, tree(float(s)))
+    # GC pruned every torn generation as garbage but kept the intact one,
+    # even though five raw step numbers landed after it
+    assert mgr.steps() == [1]
+    restored, _ = mgr.restore_latest(tree(0.0))
+    assert np.all(restored["x"] == 1.0)
+    assert mgr.last_restore_fallback == 0
+
+
+def test_all_generations_corrupt_raises_instead_of_garbage(tmp_path):
+    from repro.resilience import Fault, FaultPlan
+
+    plan = FaultPlan([Fault("checkpoint.write.torn", at=(0, 1))])
+    mgr = CheckpointManager(str(tmp_path), keep=5, faults=plan)
+    mgr.save(1, tree(1.0))
+    mgr.save(2, tree(2.0))
+    with pytest.raises(RuntimeError, match="no restorable checkpoint"):
+        mgr.restore_latest(tree(0.0))
+
+
+def test_integrity_meta_written_and_honest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(4, tree(4.0), meta={"writer": 9})
+    _, meta = mgr.restore(4, tree(0.0))
+    integ = meta["integrity"][mgr._arrays_name()]
+    assert integ["sha256"] and integ["bytes"] > 0
+    assert meta["writer"] == 9
+    mgr._verify(4)  # digest recomputed from disk matches
